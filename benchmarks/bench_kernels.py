@@ -1,0 +1,80 @@
+"""Kernel microbenchmarks.
+
+Wall time on CPU measures the *reference* jnp path (Pallas interpret mode is
+a Python interpreter, not a performance surface); the kernel-relevant
+derived metrics are structural: fraction of row-blocks skipped by the
+spatio-temporal spike-count skip at realistic spikerates (paper Fig. 2:
+2-18%), and the CBWS lane-balance the grid inherits."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cbws
+from repro.core.balance import measure_balance
+from repro.kernels import ref
+from repro.kernels.spiking_conv import row_block_counts
+
+
+def _time(f, *args, n=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(**_):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    # spiking conv at paper-like sizes and spikerates
+    for rate in (0.02, 0.08, 0.18):
+        B, H, W, Cin, Cout, R = 8, 80, 160, 16, 32, 3
+        spikes = (jax.random.uniform(key, (B, H, W, Cin)) < rate
+                  ).astype(jnp.float32)
+        w = jax.random.normal(key, (R, R, Cin, Cout)) * 0.1
+        b = jnp.zeros((Cout,))
+        conv = jax.jit(lambda s, w, b: ref.spiking_conv_ref(s, w, b, aprc=True))
+        us = _time(conv, spikes, w, b)
+        # skip fraction with block_rows=8 after full padding
+        x = jnp.pad(spikes, ((0, 0), (R - 1 + 6, R - 1), (R - 1, R - 1), (0, 0)))
+        nb = x.shape[1] // 8
+        counts = np.asarray(row_block_counts(x, R, 8, nb))
+        skip = float((counts == 0).mean())
+        rows.append({
+            "name": f"kernels/spiking_conv/rate{rate}",
+            "us_per_call": us,
+            "derived": f"block_skip_frac={skip:.3f}",
+        })
+
+    # LIF fused: bytes saved vs unfused (3 round trips -> 1)
+    v = jax.random.normal(key, (4096, 512))
+    z = jax.random.normal(jax.random.PRNGKey(1), (4096, 512))
+    lif = jax.jit(lambda v, z: ref.lif_fused_ref(v, z, 1.0))
+    us = _time(lambda v, z: lif(v, z)[0], v, z)
+    rows.append({
+        "name": "kernels/lif_fused",
+        "us_per_call": us,
+        "derived": "hbm_roundtrips=1_vs_3_unfused",
+    })
+
+    # CBWS grid balance at kernel granularity
+    rng = np.random.default_rng(0)
+    loads = rng.lognormal(0, 1.5, 32)
+    naive = measure_balance(cbws.naive_partition(32, 4), loads)
+    bal = measure_balance(cbws.cbws_partition_equal(loads, 4), loads)
+    rows.append({
+        "name": "kernels/cbws_grid_balance",
+        "us_per_call": 0.0,
+        "derived": f"naive={naive:.3f};cbws={bal:.3f}",
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure (+ kernel micro
+benches and the dry-run roofline summary).  Prints ``name,us_per_call,
+derived`` CSV as required."""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def _roofline_rows():
+    path = "results/dryrun.jsonl"
+    if not os.path.exists(path):
+        return [{"name": "roofline/missing", "us_per_call": 0.0,
+                 "derived": "run launch/dryrun.py --all first"}]
+    from repro.launch.roofline import load_rows
+    rows = []
+    for r in load_rows(path):
+        rows.append({
+            "name": f"roofline/{r.arch}/{r.shape}/{r.chips}/{r.profile}",
+            "us_per_call": r.step_s * 1e6,
+            "derived": f"bound={r.bound};frac={r.roofline_fraction:.2f};"
+                       f"compute_s={r.compute_s:.3e};collective_s={r.collective_s:.3e}",
+        })
+    return rows
+
+
+def main() -> None:
+    quick = "--full" not in sys.argv
+    from benchmarks import (bench_kernels, fig6_aprc, fig7_balance,
+                            table1_throughput, table2_resources)
+    sections = [
+        ("fig6", lambda: fig6_aprc.run()),
+        ("fig7", lambda: fig7_balance.run(quick=quick)),
+        ("table1", lambda: table1_throughput.run(quick=quick)),
+        ("table2", lambda: table2_resources.run()),
+        ("kernels", lambda: bench_kernels.run()),
+        ("roofline", _roofline_rows),
+    ]
+    print("name,us_per_call,derived")
+    for tag, fn in sections:
+        try:
+            for r in fn():
+                print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}",
+                      flush=True)
+        except Exception as e:  # noqa: BLE001 — report, keep harness alive
+            print(f"{tag}/ERROR,0.0,{type(e).__name__}:{e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Batched serving: prefill a batch of prompts, then decode new tokens with
+the production cache machinery (ring buffers for sliding layers, absorbed
+MLA, SSM states).
+
+    PYTHONPATH=src python examples/serve_batched.py --arch gemma3-4b --new 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import get_arch, reduced
+from repro.models import transformer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = reduced(get_arch(args.arch))
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_params(key, cfg)
+    max_len = args.prompt_len + args.new
+
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    t0 = time.time()
+    logits, caches = transformer.prefill(params, cfg, tokens=prompts,
+                                         remat=False, max_len=max_len)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill*1e3:.0f}ms")
+
+    decode = jax.jit(lambda p, c, t, pos: transformer.decode_step(
+        p, c, cfg, token=t, pos=pos))
+    token = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    generated = [token]
+    t0 = time.time()
+    for i in range(args.new - 1):
+        logits, caches = decode(params, caches, token,
+                                jnp.asarray(args.prompt_len + i))
+        token = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)[:, :, 0] \
+            if logits.ndim == 4 else jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        generated.append(token)
+    jax.block_until_ready(token)
+    dt = time.time() - t0
+    toks = args.batch * (args.new - 1)
+    print(f"decode: {toks} tokens in {dt*1e3:.0f}ms "
+          f"({toks/dt:.1f} tok/s on CPU, reduced config)")
+    out = jnp.concatenate(generated, axis=1)
+    print("sample generation (token ids):", out[0, :16].tolist())
+    assert bool(jnp.isfinite(logits).all())
+
+
+if __name__ == "__main__":
+    main()

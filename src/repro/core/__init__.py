@@ -1,0 +1,31 @@
+"""Skydiver core: the paper's contribution as composable JAX modules.
+
+  neuron      LIF dynamics (Eq. 1-3)
+  surrogate   surrogate-gradient spike function
+  encoding    spike encoders
+  snn_layers  spiking conv/dense with the APRC structural option
+  snn_model   the paper's classification & segmentation networks
+  aprc        filter-magnitude workload prediction (+ Fig. 6 measurement)
+  cbws        Algorithm 1 balanced partitioner
+  balance     Spartus balance-ratio metric (Fig. 7)
+  scheduler   channel→lane assignment for kernels and mesh shards
+"""
+from repro.core.aprc import filter_magnitudes, layer_magnitudes, proportionality
+from repro.core.balance import balance_ratio, measure_balance, throughput_gain
+from repro.core.cbws import (Partition, cbws_partition, greedy_lpt_partition,
+                             naive_partition, partition_sums)
+from repro.core.encoding import direct_encode, poisson_encode
+from repro.core.neuron import LIFState, lif_init, lif_over_time, lif_step
+from repro.core.scheduler import LayerSchedule, build_schedule, permute_conv_params
+from repro.core.snn_model import SNNOutputs, init_snn, layer_shapes, snn_apply
+from repro.core.surrogate import spike_fn
+
+__all__ = [
+    "filter_magnitudes", "layer_magnitudes", "proportionality",
+    "balance_ratio", "measure_balance", "throughput_gain",
+    "Partition", "cbws_partition", "greedy_lpt_partition", "naive_partition",
+    "partition_sums", "direct_encode", "poisson_encode",
+    "LIFState", "lif_init", "lif_over_time", "lif_step",
+    "LayerSchedule", "build_schedule", "permute_conv_params",
+    "SNNOutputs", "init_snn", "layer_shapes", "snn_apply", "spike_fn",
+]

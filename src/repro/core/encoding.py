@@ -1,0 +1,24 @@
+"""Spike encoders: images -> spike trains over T timesteps.
+
+``poisson``  — rate coding: spike[t] ~ Bernoulli(pixel)   (classic SNN input)
+``direct``   — the analog frame is injected as constant input current each
+               timestep (first spiking layer does the conversion). This is the
+               common modern choice and is what we use for training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["poisson_encode", "direct_encode"]
+
+
+def poisson_encode(key: jax.Array, x: jax.Array, timesteps: int) -> jax.Array:
+    """x in [0,1], shape (...,) -> spikes (T, ...) in {0,1}."""
+    u = jax.random.uniform(key, (timesteps,) + x.shape, dtype=x.dtype)
+    return (u < x).astype(x.dtype)
+
+
+def direct_encode(x: jax.Array, timesteps: int) -> jax.Array:
+    """Repeat the frame as input current at every timestep: (T, ...)."""
+    return jnp.broadcast_to(x[None], (timesteps,) + x.shape)

@@ -1,0 +1,67 @@
+"""Spiking layers (conv / dense) with the APRC structural option.
+
+APRC (paper §III-B): pad ``R-1`` zeros on every side of every channel and use
+stride 1 ("full" convolution).  Then Eq. (5) holds exactly:
+
+    sum_xy dV_n[t] = (sum w_n) * (sum_in in[t])
+
+so per-output-channel workload is proportional to the filter magnitude.
+Without APRC we use SAME padding (the conventional structure) — the
+baseline whose spike/magnitude relation is irregular (paper Fig. 6a).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.neuron import LIFState, lif_init, lif_step
+
+__all__ = ["conv2d", "init_conv", "init_dense", "spiking_conv_step",
+           "spiking_dense_step", "conv_out_hw"]
+
+
+def conv2d(x: jax.Array, w: jax.Array, *, aprc: bool) -> jax.Array:
+    """NHWC x RRIO convolution; APRC = full padding + stride 1."""
+    r = w.shape[0]
+    pad = (r - 1, r - 1) if aprc else ((r - 1) // 2, r - 1 - (r - 1) // 2)
+    return jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(1, 1),
+        padding=(pad, pad),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def conv_out_hw(h: int, w: int, r: int, aprc: bool) -> Tuple[int, int]:
+    return (h + r - 1, w + r - 1) if aprc else (h, w)
+
+
+def init_conv(key, r: int, cin: int, cout: int, dtype=jnp.float32) -> Dict:
+    wkey, _ = jax.random.split(key)
+    fan_in = r * r * cin
+    w = jax.random.normal(wkey, (r, r, cin, cout), dtype) * jnp.sqrt(2.0 / fan_in)
+    return {"w": w, "b": jnp.zeros((cout,), dtype)}
+
+
+def init_dense(key, din: int, dout: int, dtype=jnp.float32) -> Dict:
+    w = jax.random.normal(key, (din, dout), dtype) * jnp.sqrt(2.0 / din)
+    return {"w": w, "b": jnp.zeros((dout,), dtype)}
+
+
+def spiking_conv_step(
+    params: Dict, state: LIFState, spikes_in: jax.Array,
+    *, aprc: bool, v_th: float, surrogate_alpha: float = 10.0,
+) -> Tuple[LIFState, jax.Array]:
+    """One timestep: synaptic current (Eq. 2) then LIF update (Eq. 1+3)."""
+    z = conv2d(spikes_in, params["w"], aprc=aprc) + params["b"]
+    return lif_step(state, z, v_th=v_th, surrogate_alpha=surrogate_alpha)
+
+
+def spiking_dense_step(
+    params: Dict, state: LIFState, spikes_in: jax.Array,
+    *, v_th: float, surrogate_alpha: float = 10.0,
+) -> Tuple[LIFState, jax.Array]:
+    z = spikes_in @ params["w"] + params["b"]
+    return lif_step(state, z, v_th=v_th, surrogate_alpha=surrogate_alpha)

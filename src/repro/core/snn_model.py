@@ -1,0 +1,155 @@
+"""The paper's two spiking networks, built from ``SNNConfig``.
+
+  classification : 28x28-16c-32c-8c-10   (MNIST, §IV)
+  segmentation   : 160x80x3-8C3-16C3-32C3-32C3-16C3-1C3-160x80x1 (MLND-Capstone)
+
+Execution: ``lax.scan`` over ``T`` timesteps; every conv layer is a spiking
+LIF layer; the head (dense classifier / final conv mask) accumulates membrane
+potential without firing — standard readout.  The scan carry additionally
+accumulates per-layer per-output-channel **spike counts**, which is the
+actual-workload signal consumed by CBWS/balance evaluation (paper Fig. 2/7).
+
+With APRC on, spatial dims grow by ``R-1`` per conv layer ("full" conv); the
+segmentation head center-crops back to the label resolution, which leaves the
+workload factorization of Eq. (5) untouched.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SNNConfig
+from repro.core import snn_layers as L
+from repro.core.neuron import LIFState, lif_init
+
+__all__ = ["init_snn", "snn_apply", "SNNOutputs", "layer_shapes"]
+
+
+class SNNOutputs(NamedTuple):
+    logits: jax.Array            # (B, classes) or (B, H, W, 1) mask logits
+    spike_counts: Tuple[jax.Array, ...]   # per conv layer: (Cout,) summed over B,T,HW
+    spike_totals: Tuple[jax.Array, ...]   # per conv layer: scalar total spikes
+    timestep_counts: Tuple[jax.Array, ...]  # per conv layer: (T, Cout) — temporal profile
+
+
+def layer_shapes(cfg: SNNConfig) -> List[Tuple[int, int, int]]:
+    """(H, W, C) after every conv layer (APRC growth accounted)."""
+    h, w = cfg.input_hw
+    shapes = []
+    for cout in cfg.conv_channels:
+        h, w = L.conv_out_hw(h, w, cfg.kernel_size, cfg.aprc)
+        shapes.append((h, w, cout))
+    return shapes
+
+
+def init_snn(key: jax.Array, cfg: SNNConfig) -> Dict:
+    params: Dict = {"conv": [], "dense": []}
+    cin = cfg.input_channels
+    keys = jax.random.split(key, len(cfg.conv_channels) + len(cfg.dense_units))
+    ki = 0
+    for cout in cfg.conv_channels:
+        params["conv"].append(L.init_conv(keys[ki], cfg.kernel_size, cin, cout))
+        cin, ki = cout, ki + 1
+    if cfg.dense_units:
+        h, w, c = layer_shapes(cfg)[-1]
+        din = h * w * c
+        for dout in cfg.dense_units:
+            params["dense"].append(L.init_dense(keys[ki], din, dout))
+            din, ki = dout, ki + 1
+    return params
+
+
+def snn_apply(params: Dict, frames: jax.Array, cfg: SNNConfig,
+              *, surrogate_alpha: float = 10.0) -> SNNOutputs:
+    """frames: (B, H, W, Cin) analog input in [0,1] (direct coding) or a
+    pre-encoded spike train (T, B, H, W, Cin)."""
+    if frames.ndim == 4:
+        z_in = jnp.broadcast_to(frames[None], (cfg.timesteps,) + frames.shape)
+    else:
+        z_in = frames
+    B = z_in.shape[1]
+    n_conv = len(cfg.conv_channels)
+    shapes = layer_shapes(cfg)
+
+    conv_states = [lif_init((B,) + s, z_in.dtype) for s in shapes]
+    # hidden dense layers spike; the last dense layer is a non-firing readout
+    dense_states = [lif_init((B, d), z_in.dtype) for d in cfg.dense_units[:-1]]
+    head_dim = cfg.dense_units[-1] if cfg.dense_units else None
+    v_readout = (jnp.zeros((B, head_dim), z_in.dtype) if head_dim
+                 else jnp.zeros((B,) + shapes[-1], z_in.dtype))
+    counts = [jnp.zeros((c,), jnp.float32) for (_, _, c) in shapes]
+
+    def body(carry, z_t):
+        conv_s, dense_s, v_out, cnts = carry
+        x = z_t
+        new_conv_s, new_cnts, spikes_t = [], [], []
+        for i in range(n_conv):
+            if i == n_conv - 1 and head_dim is None:
+                # segmentation: last conv is the non-firing readout
+                z = L.conv2d(x, params["conv"][i]["w"], aprc=cfg.aprc) \
+                    + params["conv"][i]["b"]
+                v = conv_s[i].v + z
+                new_conv_s.append(LIFState(v=v))
+                s = (v >= cfg.v_threshold).astype(v.dtype)  # mask spikes (metric only)
+                new_cnts.append(cnts[i] + s.sum(axis=(0, 1, 2)))
+                spikes_t.append(s.sum(axis=(0, 1, 2)))
+                x = v
+            else:
+                st, s = L.spiking_conv_step(
+                    params["conv"][i], conv_s[i], x, aprc=cfg.aprc,
+                    v_th=cfg.v_threshold, surrogate_alpha=surrogate_alpha)
+                new_conv_s.append(st)
+                new_cnts.append(cnts[i] + s.sum(axis=(0, 1, 2)))
+                spikes_t.append(s.sum(axis=(0, 1, 2)))
+                x = s
+        if head_dim is not None:
+            x = x.reshape(B, -1)
+            new_dense_s = []
+            for j, dp in enumerate(params["dense"][:-1]):
+                st, x = L.spiking_dense_step(dp, dense_s[j], x,
+                                             v_th=cfg.v_threshold,
+                                             surrogate_alpha=surrogate_alpha)
+                new_dense_s.append(st)
+            z = x @ params["dense"][-1]["w"] + params["dense"][-1]["b"]
+            v_out = v_out + z
+            dense_s = new_dense_s
+        else:
+            v_out = x  # running readout membrane (already accumulated)
+        return (new_conv_s, dense_s, v_out, new_cnts), tuple(spikes_t)
+
+    (conv_states, dense_states, v_out, counts), t_counts = jax.lax.scan(
+        body, (conv_states, dense_states, v_readout, counts), z_in)
+
+    if head_dim is None and cfg.aprc:
+        # center-crop the grown mask back to input resolution
+        h0, w0 = cfg.input_hw
+        H, W = v_out.shape[1], v_out.shape[2]
+        dh, dw = (H - h0) // 2, (W - w0) // 2
+        v_out = v_out[:, dh:dh + h0, dw:dw + w0, :]
+
+    return SNNOutputs(
+        logits=v_out / cfg.timesteps,
+        spike_counts=tuple(counts),
+        spike_totals=tuple(c.sum() for c in counts),
+        timestep_counts=tuple(t_counts),
+    )
+
+
+def skew_channels(params: Dict, sigma: float = 1.0, seed: int = 0) -> Dict:
+    """Emulate a trained net's channel skew (paper Fig. 2b: per-channel spike
+    counts spread over orders of magnitude).  Random-initialized filters have
+    near-uniform magnitudes, so scheduler studies would see no imbalance to
+    fix; scaling each output channel by a lognormal factor reproduces the
+    operating regime the paper measures (EXPERIMENTS §Repro notes this)."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    new_conv = []
+    for p in params["conv"]:
+        cout = p["w"].shape[-1]
+        f = jnp.asarray(rng.lognormal(0.0, sigma, cout), p["w"].dtype)
+        new_conv.append({"w": p["w"] * f, "b": p["b"] * f})
+    out = dict(params)
+    out["conv"] = new_conv
+    return out

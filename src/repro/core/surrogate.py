@@ -1,0 +1,48 @@
+"""Surrogate gradients for the non-differentiable spike function.
+
+Forward: Heaviside step  U(v - v_th)  (paper Eq. 3).
+Backward: fast-sigmoid (SuperSpike) or triangle surrogate, selectable.
+
+The paper trains its networks offline and deploys on the FPGA; here the
+JAX-native route is direct surrogate-gradient training (BPTT through
+``lax.scan`` over timesteps), which reaches the same MNIST accuracy band.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["spike_fn", "heaviside"]
+
+
+def heaviside(v: jax.Array) -> jax.Array:
+    """Straight Heaviside — used at pure-inference time."""
+    return (v >= 0.0).astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def spike_fn(v: jax.Array, alpha: float = 10.0, kind: str = "fast_sigmoid") -> jax.Array:
+    """Spike = U(v);  d(spike)/dv given by the chosen surrogate."""
+    return heaviside(v)
+
+
+def _spike_fwd(v, alpha, kind):
+    return heaviside(v), v
+
+
+def _spike_bwd(alpha, kind, v, g):
+    if kind == "fast_sigmoid":
+        # SuperSpike: 1 / (1 + alpha*|v|)^2
+        surr = 1.0 / (1.0 + alpha * jnp.abs(v)) ** 2
+    elif kind == "triangle":
+        surr = jnp.maximum(0.0, 1.0 - alpha * jnp.abs(v))
+    elif kind == "arctan":
+        surr = 1.0 / (1.0 + (alpha * v) ** 2)
+    else:  # pragma: no cover
+        raise ValueError(f"unknown surrogate {kind!r}")
+    return (g * surr.astype(g.dtype),)
+
+
+spike_fn.defvjp(_spike_fwd, _spike_bwd)

@@ -1,0 +1,67 @@
+"""Host-side data pipeline: background prefetch + device placement.
+
+On a real multi-host TPU fleet each process feeds its local shard via
+``jax.make_array_from_process_local_data``; in this single-process container
+the same code path degenerates to a sharded ``jax.device_put``.  Double
+buffering overlaps host batch synthesis with device compute (the DMA
+overlap of the paper's host/accelerator split, DESIGN §2).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class Prefetcher:
+    """Wrap a host iterator; keeps ``depth`` device-ready batches ahead."""
+
+    def __init__(self, it: Iterator[Dict[str, np.ndarray]],
+                 shardings: Optional[Dict[str, Any]] = None, depth: int = 2):
+        self._it = it
+        self._shardings = shardings
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._err: Optional[BaseException] = None
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _place(self, batch):
+        if self._shardings is None:
+            return batch
+        return {k: jax.device_put(v, self._shardings[k]) if k in self._shardings
+                else v for k, v in batch.items()}
+
+    def _worker(self):
+        try:
+            for batch in self._it:
+                if self._stop.is_set():
+                    return
+                self._q.put(self._place(batch))
+            self._q.put(None)          # normal exhaustion sentinel
+        except BaseException as e:  # surfaced on next __next__
+            self._err = e
+            self._q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is None:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop.set()
+
+
+def global_batch_iterator(make_host_iter: Callable[[int], Iterator],
+                          shardings=None, depth: int = 2,
+                          seed: int = 0) -> Prefetcher:
+    return Prefetcher(make_host_iter(seed), shardings=shardings, depth=depth)

@@ -1,0 +1,65 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to auto: Pallas interpret mode on CPU (this
+container), compiled Mosaic on real TPU.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.lif import lif_fused_pallas
+from repro.kernels.spiking_conv import spiking_conv_pallas
+
+__all__ = ["spiking_conv", "lif_fused", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def spiking_conv(
+    spikes: jax.Array, w: jax.Array, bias: jax.Array,
+    *, aprc: bool = True, block_rows: int = 8, num_groups: int = 4,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Spike-driven conv (see kernels.spiking_conv).  Output matches
+    ``ref.spiking_conv_ref`` exactly up to float accumulation order."""
+    if interpret is None:
+        interpret = default_interpret()
+    return spiking_conv_pallas(
+        spikes, w, bias, aprc=aprc, block_rows=block_rows,
+        num_groups=num_groups, interpret=interpret)
+
+
+def lif_fused(
+    v: jax.Array, z: jax.Array, v_th: float | jax.Array,
+    *, block_rows: int = 8, block_cols: int = 128,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused membrane update + fire + reset over (N, C) tensors.
+
+    Shapes not divisible by the block are handled by padding here (the
+    kernel itself requires divisibility)."""
+    if interpret is None:
+        interpret = default_interpret()
+    n, c = v.shape
+    pn = -(-n // block_rows) * block_rows
+    pc = -(-c // block_cols) * block_cols
+    vth_arr = jnp.asarray(v_th, jnp.float32)
+    if (pn, pc) != (n, c):
+        vp = jnp.zeros((pn, pc), v.dtype).at[:n, :c].set(v)
+        zp = jnp.zeros((pn, pc), z.dtype).at[:n, :c].set(z)
+        v2, s2 = lif_fused_pallas(vp, zp, vth_arr, block_rows=block_rows,
+                                  block_cols=block_cols, interpret=interpret)
+        return v2[:n, :c], s2[:n, :c]
+    return lif_fused_pallas(v, z, vth_arr, block_rows=block_rows,
+                            block_cols=block_cols, interpret=interpret)
+
+
+# re-export oracles for test convenience
+spiking_conv_ref = ref.spiking_conv_ref
+lif_fused_ref = ref.lif_fused_ref

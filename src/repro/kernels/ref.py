@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["spiking_conv_ref", "lif_fused_ref"]
+
+
+def spiking_conv_ref(spikes: jax.Array, w: jax.Array, b: jax.Array,
+                     *, aprc: bool = True) -> jax.Array:
+    """Reference for the spike-driven conv: plain lax conv (full or same pad).
+
+    spikes: (B, H, W, Cin) in {0,1};  w: (R, R, Cin, Cout);  b: (Cout,)
+    returns dV: (B, E, E', Cout) with E = H+R-1 in APRC mode.
+    """
+    r = w.shape[0]
+    pad = (r - 1, r - 1) if aprc else ((r - 1) // 2, r - 1 - (r - 1) // 2)
+    out = jax.lax.conv_general_dilated(
+        spikes.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(1, 1), padding=(pad, pad),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return (out + b.astype(jnp.float32)).astype(spikes.dtype)
+
+
+def lif_fused_ref(v: jax.Array, z: jax.Array, v_th: float
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Reference fused LIF step: integrate, fire, reset-by-subtraction."""
+    vf = v.astype(jnp.float32) + z.astype(jnp.float32)
+    s = (vf >= v_th).astype(v.dtype)
+    v_new = (vf - v_th * s.astype(jnp.float32)).astype(v.dtype)
+    return v_new, s

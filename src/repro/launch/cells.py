@@ -1,0 +1,183 @@
+"""The (arch x shape) dry-run cell matrix + per-cell step builders.
+
+Shared by launch/dryrun.py (lower+compile) and launch/roofline.py (analysis).
+Skip policy (DESIGN §4):
+  * encoder-only archs (hubert) have no decode step -> decode cells skipped;
+  * ``long_500k`` runs only for sub-quadratic archs (ssm/hybrid/sliding-
+    window gemma3); pure full-attention archs skip it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (LM_SHAPES, SHAPES_BY_NAME, ArchConfig, ShapeConfig,
+                          get_arch, list_archs)
+from repro.models import lm, transformer
+from repro.sharding import partitioning
+from repro.sharding.context import ShardingCtx
+
+SUBQUADRATIC = {"rwkv6-7b", "jamba-v0.1-52b", "gemma3-4b", "gemma3-27b"}
+
+
+def cell_skip_reason(cfg: ArchConfig, shape: ShapeConfig) -> Optional[str]:
+    if cfg.is_encoder_only and shape.kind == "decode":
+        return "encoder-only arch has no decode step"
+    if shape.name == "long_500k" and cfg.name not in SUBQUADRATIC:
+        return "pure full-attention arch; 500k decode requires sub-quadratic mechanism"
+    return None
+
+
+def all_cells() -> List[Tuple[str, str]]:
+    return [(a, s.name) for a in list_archs() for s in LM_SHAPES]
+
+
+def runnable_cells() -> List[Tuple[str, str]]:
+    out = []
+    for a, s in all_cells():
+        if cell_skip_reason(get_arch(a), SHAPES_BY_NAME[s]) is None:
+            out.append((a, s))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# batch specs (ShapeDtypeStruct stand-ins; never allocated)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStructs for every model input of this cell's step."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "decode":
+        return {"token": jax.ShapeDtypeStruct((B, 1), i32),
+                "pos": jax.ShapeDtypeStruct((), i32)}
+    batch: Dict[str, Any] = {}
+    if cfg.frontend == "frames":
+        batch["frames"] = jax.ShapeDtypeStruct((B, S, cfg.frontend_dim), jnp.bfloat16)
+    elif cfg.frontend == "patches+tokens":
+        P = cfg.num_patches
+        batch["patches"] = jax.ShapeDtypeStruct((B, P, cfg.frontend_dim), jnp.bfloat16)
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S - P), i32)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    return batch
+
+
+@dataclasses.dataclass
+class CellProgram:
+    """Everything needed to lower one cell: fn + abstract args + shardings."""
+    kind: str
+    fn: Any
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+    profile: str = "tp_fsdp"
+
+    def lower(self):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate_argnums)
+        return jitted.lower(*self.args)
+
+
+def default_profile(cfg: ArchConfig, shape: ShapeConfig) -> str:
+    """Parallelism profile per cell (EXPERIMENTS §Perf records the deltas)."""
+    if shape.kind == "train":
+        return "tp_fsdp"
+    return "serve_ep2d" if cfg.name == "deepseek-v3-671b" else "serve"
+
+
+def tune_cache_rules(ctx: ShardingCtx, cfg: ArchConfig,
+                     shape: ShapeConfig) -> None:
+    """Pick the decode-cache seq sharding (flash-decode) per cell:
+    * kv_heads divide the model axis -> shard heads, seq unsharded
+      (long-context additionally shards seq over data);
+    * kv_heads don't divide -> shard seq over model (distributed softmax);
+      long-context extends it over (data, model)."""
+    if shape.kind != "decode":
+        return
+    long_ctx = shape.seq_len >= 1 << 19
+    n_model = ctx.mesh.shape.get("model", 1)
+    kv_divisible = (cfg.attn is not None
+                    and cfg.attn.num_kv_heads % n_model == 0)
+    if cfg.attn is None:
+        ctx.rules["cache_seq"] = ()
+    elif kv_divisible:
+        ctx.rules["cache_seq"] = ("data",) if long_ctx else ()
+    else:
+        ctx.rules["cache_seq"] = (("data", "model") if long_ctx
+                                  else ("model",))
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, ctx: ShardingCtx,
+               *, param_dtype=jnp.bfloat16, opt_dtype=jnp.float32,
+               remat: bool = True) -> CellProgram:
+    """Construct the step program for one (arch x shape) cell."""
+    batch_specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        state_shapes = jax.eval_shape(
+            lambda: lm.init_train_state(jax.random.PRNGKey(0), cfg,
+                                        param_dtype, opt_dtype))
+        state_sh = partitioning.train_state_shardings(
+            ctx, cfg, param_dtype, opt_dtype)
+        batch_sh = partitioning.batch_shardings(ctx, batch_specs)
+        step = lm.make_train_step(cfg, remat=remat)
+        metrics_sh = partitioning.replicated(ctx)
+        return CellProgram(
+            kind="train_step", fn=step,
+            args=(state_shapes, batch_specs),
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,))
+
+    params_shapes = partitioning.param_shapes(cfg, param_dtype)
+    params_sh = partitioning.param_shardings(ctx, cfg, param_dtype)
+
+    if shape.kind == "prefill":
+        batch_sh = partitioning.batch_shardings(ctx, batch_specs)
+        if cfg.is_encoder_only:
+            step = lm.make_encode_step(cfg)
+            return CellProgram(
+                kind="encode_step", fn=step,
+                args=(params_shapes, batch_specs),
+                in_shardings=(params_sh, batch_sh),
+                out_shardings=None)
+        step = lm.make_prefill_step(cfg)
+        cache_sh = partitioning.cache_shardings(
+            ctx, cfg,
+            jax.eval_shape(lambda: transformer.init_caches(
+                cfg, shape.global_batch, shape.seq_len)),
+            long_context=False)
+        return CellProgram(
+            kind="prefill_step", fn=step,
+            args=(params_shapes, batch_specs),
+            in_shardings=(params_sh, batch_sh),
+            out_shardings=(None, cache_sh))
+
+    # decode
+    long_context = shape.seq_len >= 1 << 19
+    cache_shapes = jax.eval_shape(lambda: transformer.init_caches(
+        cfg, shape.global_batch, shape.seq_len))
+    cache_sh = partitioning.cache_shardings(ctx, cfg, cache_shapes,
+                                            long_context=long_context)
+    tok_sh = partitioning.batch_shardings(
+        ctx, {"token": batch_specs["token"]})["token"]
+    pos_sh = partitioning.replicated(ctx)
+    step = lm.make_decode_step(cfg)
+
+    def decode_fn(params, caches, token, pos):
+        return step(params, caches, token, pos)
+
+    return CellProgram(
+        kind="serve_step", fn=decode_fn,
+        args=(params_shapes, cache_shapes,
+              batch_specs["token"], batch_specs["pos"]),
+        in_shardings=(params_sh, cache_sh, tok_sh, pos_sh),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(1,))

@@ -1,0 +1,145 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input-shape) cell, lower + compile the step on the
+production mesh — (data=16, model=16) single pod and (pod=2, data=16,
+model=16) multi-pod — and record memory_analysis / cost_analysis /
+collective-traffic for EXPERIMENTS.md §Dry-run and §Roofline.
+
+The XLA_FLAGS line above MUST run before any jax import (device count locks
+on first backend init); that is why this module sets it at line 1-2.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] \
+      --out results/dryrun.jsonl
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+
+from repro.config import SHAPES_BY_NAME, get_arch
+from repro.launch import cells as cells_mod
+from repro.launch.hlo_analysis import analyze_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.sharding.context import ShardingCtx, use_sharding
+
+
+def _cost_dict(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and k in
+            ("flops", "bytes accessed", "bytes accessed output",
+             "optimal_seconds", "utilization operand")}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             keep_hlo: bool = False, profile: str = "") -> Dict[str, Any]:
+    from repro.sharding.context import make_rules
+
+    cfg = get_arch(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    prof = profile or cells_mod.default_profile(cfg, shape)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "pod=2,data=16,model=16" if multi_pod else "data=16,model=16",
+        "devices": 512 if multi_pod else 256,
+        "profile": prof,
+    }
+    skip = cells_mod.cell_skip_reason(cfg, shape)
+    if skip:
+        rec["status"] = "skipped"
+        rec["reason"] = skip
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = ShardingCtx(mesh, make_rules(prof))
+    cells_mod.tune_cache_rules(ctx, cfg, shape)
+    try:
+        with use_sharding(ctx), mesh:
+            prog = cells_mod.build_cell(cfg, shape, ctx)
+            lowered = prog.lower()
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            rec.update({
+                "status": "ok",
+                "step_kind": prog.kind,
+                "lower_s": round(t_lower, 1),
+                "compile_s": round(t_compile, 1),
+                "cost": _cost_dict(compiled),
+                "memory": {
+                    "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                    "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                    "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                    "peak_bytes": (getattr(mem, "temp_size_in_bytes", 0) or 0)
+                    + (getattr(mem, "argument_size_in_bytes", 0) or 0),
+                },
+            })
+            hlo = compiled.as_text()
+            st = analyze_collectives(hlo)
+            rec["collectives"] = {
+                "payload_bytes": dict(st.payload_bytes),
+                "wire_bytes": dict(st.wire_bytes),
+                "counts": dict(st.count),
+                "total_wire_bytes": st.total_wire(),
+            }
+            if keep_hlo:
+                rec["hlo_path"] = f"/tmp/hlo_{arch}_{shape_name}_{rec['devices']}.txt"
+                with open(rec["hlo_path"], "w") as f:
+                    f.write(hlo)
+    except Exception as e:  # noqa: BLE001 — a failed cell is a bug to record
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--profile", default="",
+                    help="parallelism profile override (see sharding.context.RULE_PROFILES)")
+    args = ap.parse_args()
+
+    if args.all:
+        todo = cells_mod.all_cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    out_f = open(args.out, "a") if args.out else None
+    for arch, shape in todo:
+        for mp in meshes:
+            rec = run_cell(arch, shape, multi_pod=mp, keep_hlo=args.keep_hlo,
+                           profile=args.profile)
+            line = json.dumps(rec)
+            print(json.dumps({k: v for k, v in rec.items()
+                              if k not in ("traceback",)}), flush=True)
+            if out_f:
+                out_f.write(line + "\n")
+                out_f.flush()
+    if out_f:
+        out_f.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+"""Parse compiled HLO text for collective traffic (the roofline's third term).
+
+``cost_analysis`` has no collective-bytes metric and counts ``while`` bodies
+once, so this walks the HLO computation graph:
+
+  * for every all-reduce / all-gather / reduce-scatter / all-to-all /
+    collective-permute, the *operand payload bytes* are recovered via a
+    per-computation symbol table (operands are referenced by name in HLO
+    text), plus the participating group size from ``replica_groups``;
+  * ``while`` ops multiply their body's contribution by the trip count —
+    taken from ``backend_config={"known_trip_count":{"n":...}}`` (scans) or,
+    failing that, the largest integer constant in the loop condition;
+  * nesting composes multiplicatively.
+
+Per-device wire bytes on a ring/bidirectional-ICI algorithm:
+  all-reduce        2 * payload * (n-1)/n
+  all-gather        payload * (n-1)        (operand = local shard)
+  reduce-scatter    payload * (n-1)/n      (operand = full tensor)
+  all-to-all        payload * (n-1)/n
+  collective-permute payload
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_WIRE_FACTOR = {
+    "all-reduce": lambda n: 2.0 * (n - 1) / n,
+    "all-gather": lambda n: float(n - 1),
+    "reduce-scatter": lambda n: (n - 1) / n,
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+
+
+def _shape_bytes_in(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    payload_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    wire_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    count: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+
+    def add(self, kind: str, payload: float, n: int, mult: float = 1.0):
+        self.payload_bytes[kind] += mult * payload
+        self.wire_bytes[kind] += mult * payload * _WIRE_FACTOR[kind](max(2, n))
+        self.count[kind] += mult
+
+    def merge_scaled(self, other: "CollectiveStats", mult: float):
+        for k, v in other.payload_bytes.items():
+            self.payload_bytes[k] += mult * v
+        for k, v in other.wire_bytes.items():
+            self.wire_bytes[k] += mult * v
+        for k, v in other.count.items():
+            self.count[k] += mult * v
+
+    def total_payload(self) -> float:
+        return sum(self.payload_bytes.values())
+
+    def total_wire(self) -> float:
+        return sum(self.wire_bytes.values())
+
+
+def split_computations(hlo: str) -> Tuple[Dict[str, List[str]], Optional[str]]:
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    current = None
+    for line in hlo.splitlines():
+        if current is None:
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                current = m.group(2)
+                comps[current] = []
+                if m.group(1):
+                    entry = current
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        comps[current].append(line)
+    return comps, entry
+
+
+def _group_size(line: str) -> int:
+    # iota form: replica_groups=[G,N]<=[...]  -> groups of size N
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", line)
+    if m:
+        return int(m.group(2))
+    # explicit form: replica_groups={{0,1,2,3},{...}}
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def _trip_count(line: str, comps: Dict[str, List[str]]) -> float:
+    m = re.search(r'known_trip_count.{0,10}?"n"\s*:\s*"?(\d+)', line)
+    if m:
+        return float(m.group(1))
+    m = re.search(r"condition=%?([\w.\-]+)", line)
+    if m and m.group(1) in comps:
+        consts = [int(c) for c in re.findall(
+            r"constant\((\d+)\)", "\n".join(comps[m.group(1)]))]
+        if consts:
+            return float(max(consts))
+    return 1.0
+
+
+def analyze_collectives(hlo: str) -> CollectiveStats:
+    comps, entry = split_computations(hlo)
+    memo: Dict[str, CollectiveStats] = {}
+
+    def stats_for(name: str, stack=()) -> CollectiveStats:
+        if name in memo:
+            return memo[name]
+        st = CollectiveStats()
+        if name in stack or name not in comps:
+            return st
+        symbols: Dict[str, int] = {}
+        lines = comps[name]
+        for line in lines:
+            d = _DEF_RE.match(line)
+            if d:
+                rhs = d.group(2)
+                # result type = text before the op name's '('
+                head = rhs.split("(", 1)[0]
+                symbols[d.group(1)] = _shape_bytes_in(head)
+        for line in lines:
+            stripped = line.strip()
+            matched_kind = None
+            for kind in COLLECTIVE_KINDS:
+                if re.search(rf"\b{kind}(?:-start|-done)?\(", stripped):
+                    matched_kind = kind
+                    break
+            if matched_kind and f"{matched_kind}-done(" not in stripped:
+                inside = stripped.split("(", 1)[1]
+                ops = re.findall(r"%([\w.\-]+)", inside.split("),", 1)[0])
+                payload = sum(symbols.get(o, 0) for o in ops)
+                if payload == 0:
+                    d = _DEF_RE.match(line)
+                    if d:
+                        payload = symbols.get(d.group(1), 0)
+                        if matched_kind == "all-gather":
+                            payload /= max(1, _group_size(stripped))
+                st.add(matched_kind, payload, _group_size(stripped))
+                continue
+            if "while(" in stripped:
+                m = re.search(r"body=%?([\w.\-]+)", stripped)
+                if m:
+                    trips = _trip_count(stripped, comps)
+                    st.merge_scaled(stats_for(m.group(1), stack + (name,)), trips)
+                continue
+            for attr in ("calls", "to_apply", "condition", "branch_computations"):
+                for callee in re.findall(rf"{attr}=\{{?%?([\w.\-]+)", stripped):
+                    st.merge_scaled(stats_for(callee, stack + (name,)), 1.0)
+        memo[name] = st
+        return st
+
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    return stats_for(entry) if entry else CollectiveStats()

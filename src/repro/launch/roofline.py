@@ -1,0 +1,189 @@
+"""Three-term roofline per (arch x shape x mesh) — EXPERIMENTS §Roofline.
+
+    compute term    = FLOPs / (chips * 197 TF bf16)
+    memory term     = HBM bytes / (chips * 819 GB/s)
+    collective term = per-chip wire bytes / 50 GB/s per link
+
+Sources (methodology, see EXPERIMENTS.md):
+  * FLOPs: analytic closed form (models/counting.py) — XLA cost_analysis
+    counts scan bodies once (verified), so it cannot be used directly for
+    scanned models; the closed form is cross-checked against cost_analysis
+    on unrolled reduced configs in tests.
+  * HBM bytes: analytic — weight passes + optimizer traffic + layer-boundary
+    activations (+ KV-cache reads for decode).
+  * collective bytes: parsed from the compiled per-device SPMD program with
+    while-trip-count correction (launch/hlo_analysis.py), recorded by the
+    dry-run in results/dryrun.jsonl.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.config import SHAPES_BY_NAME, ArchConfig, ShapeConfig, get_arch
+from repro.models.counting import count_params, step_flops
+
+PEAK_FLOPS = 197e12          # bf16 per chip (v5e)
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    step_kind: str
+    profile: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bound: str
+    model_flops: float           # 6*N_active*D
+    total_flops: float           # analytic incl. attention + remat
+    useful_ratio: float          # model_flops / total_flops
+    hbm_bytes_per_chip: float
+    wire_bytes_per_chip: float
+    note: str = ""
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute term / critical term — 1.0 means compute-bound at peak."""
+        return self.compute_s / self.step_s if self.step_s else 0.0
+
+
+def _train_hbm_bytes(cfg: ArchConfig, shape: ShapeConfig, chips: int) -> float:
+    """Per-chip HBM traffic for one train step (dominant terms)."""
+    P = count_params(cfg)
+    bytes_params = 2.0 * P            # bf16
+    bytes_opt = 4.0 * P * 2           # m, v fp32
+    # weights: read fwd + remat + bwd (3x), grads written once (bf16),
+    # optimizer: read m,v + write m,v + write params
+    w_traffic = 3.0 * bytes_params + 2.0 * P + 2.0 * bytes_opt + bytes_params
+    # layer-boundary activations: saved + re-read (bf16)
+    n_tokens = shape.global_batch * shape.seq_len
+    act = 2.0 * cfg.num_layers * n_tokens * cfg.d_model * 2.0
+    return (w_traffic + act) / chips
+
+
+def _decode_hbm_bytes(cfg: ArchConfig, shape: ShapeConfig, chips: int) -> float:
+    P_active = count_params(cfg, active_only=True)
+    cache = _cache_bytes(cfg, shape)
+    return (2.0 * P_active + cache) / chips
+
+
+def _cache_bytes(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    B, S = shape.global_batch, shape.seq_len
+    total = 0.0
+    for mk, fk in cfg.pattern():
+        if mk == "attn_mla":
+            a = cfg.attn
+            total += B * S * (a.kv_lora_rank + a.qk_rope_dim) * 2
+        elif mk == "attn_full":
+            a = cfg.attn
+            total += B * S * a.num_kv_heads * a.head_dim * 2 * 2
+        elif mk == "attn_sliding":
+            a = cfg.attn
+            total += B * min(S, a.window) * a.num_kv_heads * a.head_dim * 2 * 2
+        elif mk == "mamba":
+            m = cfg.mamba
+            total += B * m.expand * cfg.d_model * (m.d_state * 4 + (m.d_conv - 1) * 2)
+        elif mk == "rwkv6":
+            hd = cfg.rwkv.head_dim
+            total += B * (cfg.d_model // hd) * hd * hd * 4
+    return total
+
+
+def _prefill_hbm_bytes(cfg: ArchConfig, shape: ShapeConfig, chips: int) -> float:
+    P_active = count_params(cfg, active_only=True)
+    n_tokens = shape.global_batch * shape.seq_len
+    act = 2.0 * cfg.num_layers * n_tokens * cfg.d_model * 2.0
+    return (2.0 * P_active + act + _cache_bytes(cfg, shape)) / chips
+
+
+def make_row(rec: Dict) -> Optional[RooflineRow]:
+    if rec.get("status") != "ok":
+        return None
+    cfg = get_arch(rec["arch"])
+    shape = SHAPES_BY_NAME[rec["shape"]]
+    chips = rec["devices"]
+    flops = step_flops(cfg, shape)
+
+    if shape.kind == "train":
+        total_flops = flops["train"]
+        hbm = _train_hbm_bytes(cfg, shape, chips)
+    elif shape.kind == "prefill":
+        total_flops = flops["fwd"]
+        hbm = _prefill_hbm_bytes(cfg, shape, chips)
+    else:
+        total_flops = flops["fwd"]
+        hbm = _decode_hbm_bytes(cfg, shape, chips)
+
+    wire = rec.get("collectives", {}).get("total_wire_bytes", 0.0)
+    compute_s = total_flops / (chips * PEAK_FLOPS)
+    memory_s = hbm / HBM_BW
+    collective_s = wire / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bound = max(terms, key=terms.get)
+    model_flops = flops["model_6nd"] * (3.0 if shape.kind == "train" else 1.0)
+    return RooflineRow(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"], chips=chips,
+        step_kind=rec.get("step_kind", shape.kind),
+        profile=rec.get("profile", "baseline"),
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bound=bound, model_flops=model_flops, total_flops=total_flops,
+        useful_ratio=model_flops / total_flops if total_flops else 0.0,
+        hbm_bytes_per_chip=hbm, wire_bytes_per_chip=wire)
+
+
+def load_rows(path: str = "results/dryrun.jsonl"):
+    # keep the LATEST record per (arch, shape, mesh, profile)
+    latest: Dict = {}
+    for line in open(path):
+        r = json.loads(line)
+        latest[(r.get("arch"), r.get("shape"), r.get("mesh"),
+                r.get("profile", "baseline"))] = r
+    rows = []
+    for r in latest.values():
+        row = make_row(r)
+        if row:
+            rows.append(row)
+    return sorted(rows, key=lambda r: (r.arch, r.shape, r.mesh))
+
+
+def format_table(rows, mesh_filter: Optional[str] = None) -> str:
+    out = ["| arch | shape | chips | profile | step | compute s | memory s | collect s | bound | roofline frac | 6ND/FLOPs |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if mesh_filter and mesh_filter not in r.mesh:
+            continue
+        out.append(
+            f"| {r.arch} | {r.shape} | {r.chips} | {r.profile} | {r.step_kind} "
+            f"| {r.compute_s:.3e} | {r.memory_s:.3e} | {r.collective_s:.3e} "
+            f"| **{r.bound}** | {r.roofline_fraction:.2f} | {r.useful_ratio:.2f} |")
+    return "\n".join(out)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun.jsonl")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    rows = load_rows(args.results)
+    print(format_table(rows, args.mesh))
+    print()
+    worst = sorted(rows, key=lambda r: r.roofline_fraction)[:5]
+    print("Worst roofline fractions (hillclimb candidates):")
+    for r in worst:
+        print(f"  {r.arch} x {r.shape} ({r.mesh}): frac={r.roofline_fraction:.2f} bound={r.bound}")
+
+
+if __name__ == "__main__":
+    main()

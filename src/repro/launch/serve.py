@@ -1,0 +1,56 @@
+"""Serving launcher: continuous batched decode against prefix caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
+        --batch 4 --prompt-len 64 --new 32
+
+Production path: the same prefill/decode step functions are lowered with the
+`serve`/`serve_ep2d` profiles on the pod mesh (see launch/cells.py); here
+they run reduced on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import get_arch, reduced
+from repro.models import transformer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new", type=int, default=32)
+    ap.add_argument("--full-config", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch) if args.full_config else reduced(get_arch(args.arch))
+    if cfg.is_encoder_only:
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode path")
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    max_len = args.prompt_len + args.new
+
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    logits, caches = transformer.prefill(params, cfg, tokens=prompts,
+                                         remat=False, max_len=max_len)
+    decode = jax.jit(lambda p, c, t, pos: transformer.decode_step(
+        p, c, cfg, token=t, pos=pos))
+    token = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    t0 = time.time()
+    for i in range(args.new - 1):
+        logits, caches = decode(params, caches, token,
+                                jnp.asarray(args.prompt_len + i))
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    jax.block_until_ready(token)
+    n = args.batch * (args.new - 1)
+    print(f"served {n} tokens in {time.time()-t0:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

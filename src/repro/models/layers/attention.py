@@ -1,0 +1,225 @@
+"""GQA attention: full/sliding-window, train/prefill (q-chunked) and
+single-token decode against a KV cache.
+
+Memory discipline: scores are never materialized (Sq x Skv) in full —
+queries are processed in chunks of ``Q_CHUNK`` via ``lax.map`` (an XLA while
+loop, keeping HLO size and the live working set bounded).  Sliding-window
+layers additionally slice K/V to a window-sized band per chunk, so their
+FLOPs are O(S * window), not O(S^2).
+
+Decode caches:
+  full layers     (B, S_max, n_kv, hd) k/v, written at ``pos``
+  sliding layers  ring buffer (B, window, n_kv, hd), slot = pos % window
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig, AttnConfig
+from repro.models.layers.rope import apply_rope
+from repro.sharding.context import shard_logical
+
+Q_CHUNK = 1024
+NEG_INF = -1e30
+
+
+def init(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    a = cfg.attn
+    d, nq, nkv, hd = cfg.d_model, a.num_q_heads, a.num_kv_heads, a.head_dim
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": jax.random.normal(ks[0], (d, nq, hd), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, nkv, hd), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, nkv, hd), dtype) * s,
+        "wo": jax.random.normal(ks[3], (nq, hd, d), dtype) * (nq * hd) ** -0.5,
+    }
+    if a.qkv_bias:
+        p["bq"] = jnp.zeros((nq, hd), dtype)
+        p["bk"] = jnp.zeros((nkv, hd), dtype)
+        p["bv"] = jnp.zeros((nkv, hd), dtype)
+    return p
+
+
+def specs(cfg: ArchConfig) -> Dict:
+    s = {
+        "wq": ("fsdp", "heads", None),
+        "wk": ("fsdp", "kv_heads", None),
+        "wv": ("fsdp", "kv_heads", None),
+        "wo": ("heads", None, "fsdp"),
+    }
+    if cfg.attn.qkv_bias:
+        s["bq"] = ("heads", None)
+        s["bk"] = ("kv_heads", None)
+        s["bv"] = ("kv_heads", None)
+    return s
+
+
+def _project_qkv(params, x, a: AttnConfig, positions):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"].astype(dt))
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = apply_rope(q, positions, a.rope_theta)
+    k = apply_rope(k, positions, a.rope_theta)
+    q = shard_logical(q, ("batch", None, "heads", None))
+    k = shard_logical(k, ("batch", None, "kv_heads", None))
+    v = shard_logical(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+def _sdpa(q, k, v, q_pos, k_pos, *, causal: bool, window: int, scale: float):
+    """q: (B, Lq, nkv, g, hd); k/v: (B, Lk, nkv, hd).  Softmax in f32."""
+    scores = jnp.einsum("bqngh,bknh->bngqk", q, k).astype(jnp.float32) * scale
+    mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bngqk,bknh->bqngh", probs, v)
+
+
+def attend(q, k, v, a: AttnConfig, *, causal: bool) -> jax.Array:
+    """Chunked attention. q/k/v: (B, S, n, hd) post-rope. Returns (B,S,nq,hd)."""
+    B, S, nq, hd = q.shape
+    nkv = k.shape[2]
+    g = nq // nkv
+    scale = hd ** -0.5
+    qg = q.reshape(B, S, nkv, g, hd)
+    window = a.window
+
+    if S <= Q_CHUNK:
+        pos = jnp.arange(S)
+        out = _sdpa(qg, k, v, pos, pos, causal=causal, window=window, scale=scale)
+        return out.reshape(B, S, nq, hd)
+
+    n_chunks = S // Q_CHUNK
+    assert S % Q_CHUNK == 0, (S, Q_CHUNK)
+    qc = qg.reshape(B, n_chunks, Q_CHUNK, nkv, g, hd)
+
+    if window and window + Q_CHUNK <= S:
+        # sliding: only a band of K/V is needed per chunk
+        band = Q_CHUNK + window
+
+        def chunk_fn(ci):
+            q_i = jax.lax.dynamic_index_in_dim(qc, ci, axis=1, keepdims=False)
+            start = jnp.clip(ci * Q_CHUNK - window, 0, S - band)
+            k_i = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            v_i = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            q_pos = ci * Q_CHUNK + jnp.arange(Q_CHUNK)
+            k_pos = start + jnp.arange(band)
+            return _sdpa(q_i, k_i, v_i, q_pos, k_pos,
+                         causal=causal, window=window, scale=scale)
+    else:
+        def chunk_fn(ci):
+            q_i = jax.lax.dynamic_index_in_dim(qc, ci, axis=1, keepdims=False)
+            q_pos = ci * Q_CHUNK + jnp.arange(Q_CHUNK)
+            k_pos = jnp.arange(S)
+            return _sdpa(q_i, k, v, q_pos, k_pos,
+                         causal=causal, window=window, scale=scale)
+
+    out = jax.lax.map(chunk_fn, jnp.arange(n_chunks))   # (n_chunks, B, Q, nkv, g, hd)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, nq, hd)
+    return out
+
+
+def apply_train(params, x: jax.Array, cfg: ArchConfig, *, sliding: bool) -> jax.Array:
+    """Full-sequence forward (training / encoding / prefill trunk)."""
+    import dataclasses
+    a = cfg.attn
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(params, x, a, positions)
+    a_local = dataclasses.replace(a, window=a.window if sliding else 0)
+    out = attend(q, k, v, a_local, causal=not cfg.is_encoder_only)
+    out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(x.dtype))
+    return shard_logical(out, ("batch", None, None))
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, *, sliding: bool,
+               dtype=jnp.bfloat16) -> Dict:
+    a = cfg.attn
+    size = min(a.window, max_len) if sliding else max_len
+    shape = (batch, size, a.num_kv_heads, a.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_specs(cfg: ArchConfig, *, sliding: bool, long_context: bool) -> Dict:
+    # the seq dim carries the "cache_seq" logical axis: the cell builder
+    # maps it to `model` (flash-decode) when kv_heads don't divide the model
+    # axis, to `data` (+model) for batch=1 long-context, and to () otherwise.
+    # Sliding ring buffers stay small -> only batch/heads sharded.
+    if sliding:
+        spec = ("batch", None, "kv_heads", None)
+    else:
+        spec = ("batch", "cache_seq", "kv_heads", None)
+    return {"k": spec, "v": spec}
+
+
+def apply_decode(params, x: jax.Array, cache: Dict, pos: jax.Array,
+                 cfg: ArchConfig, *, sliding: bool) -> Tuple[jax.Array, Dict]:
+    """x: (B, 1, d); pos: scalar int32 — position of this token. Returns
+    (out (B,1,d), updated cache)."""
+    a = cfg.attn
+    B = x.shape[0]
+    dt = x.dtype
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x, a, positions)
+
+    size = cache["k"].shape[1]
+    slot = pos % size if sliding else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+
+    nkv, hd, nq = a.num_kv_heads, a.head_dim, a.num_q_heads
+    g = nq // nkv
+    qg = q.reshape(B, 1, nkv, g, hd)
+    idx = jnp.arange(size)
+    # ring slots written so far are all within the window by construction;
+    # for full caches this is plain causal validity.
+    valid = idx <= pos
+    scores = jnp.einsum("bqngh,bknh->bngqk", qg, k.astype(dt)).astype(jnp.float32)
+    scores = scores * hd ** -0.5
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+    out = jnp.einsum("bngqk,bknh->bqngh", probs, v.astype(dt))
+    out = out.reshape(B, 1, nq, hd)
+    out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(dt))
+    return out, {"k": k, "v": v}
+
+
+def apply_prefill(params, x: jax.Array, cfg: ArchConfig, *, sliding: bool,
+                  cache_len: int, cache_dtype=jnp.bfloat16) -> Tuple[jax.Array, Dict]:
+    """Forward + build the decode cache (full k/v, or ring of the last
+    ``window`` tokens for sliding layers)."""
+    import dataclasses
+    a = cfg.attn
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(params, x, a, positions)
+    a_local = dataclasses.replace(a, window=a.window if sliding else 0)
+    out = attend(q, k, v, a_local, causal=not cfg.is_encoder_only)
+    out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(x.dtype))
+    out = shard_logical(out, ("batch", None, None))
+
+    cdt = cache_dtype
+    if sliding and a.window and S >= a.window:
+        w = a.window
+        k_ring = jnp.roll(k[:, S - w:], S % w, axis=1)
+        v_ring = jnp.roll(v[:, S - w:], S % w, axis=1)
+        cache = {"k": k_ring.astype(cdt), "v": v_ring.astype(cdt)}
+    else:
+        size = max(cache_len, S)
+        kc = jnp.zeros((B, size) + k.shape[2:], cdt)
+        cache = {"k": jax.lax.dynamic_update_slice_in_dim(kc, k.astype(cdt), 0, 1),
+                 "v": jax.lax.dynamic_update_slice_in_dim(kc, v.astype(cdt), 0, 1)}
+    return out, cache

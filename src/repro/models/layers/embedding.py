@@ -1,0 +1,66 @@
+"""Token embedding + logits head (+ stub modality frontends).
+
+Frontends (per instructions the modality encoders are stubs):
+  frames          hubert — precomputed conv-stem frame features (B, S, F)
+  patches+tokens  pixtral — precomputed ViT patch embeddings (B, P, F)
+                  prepended to text token embeddings; learned projector.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.sharding.context import shard_logical
+
+
+def init(key, cfg: ArchConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {}
+    scale = cfg.d_model ** -0.5
+    if cfg.frontend in ("tokens", "patches+tokens"):
+        p["tok"] = jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model), dtype) * scale
+    if cfg.frontend in ("frames", "patches+tokens"):
+        p["front_proj"] = jax.random.normal(
+            ks[1], (cfg.frontend_dim, cfg.d_model), dtype) * (cfg.frontend_dim ** -0.5)
+    if not cfg.tie_embeddings:
+        p["head"] = jax.random.normal(ks[2], (cfg.d_model, cfg.vocab_size), dtype) * scale
+    return p
+
+
+def specs(cfg: ArchConfig):
+    s = {}
+    if cfg.frontend in ("tokens", "patches+tokens"):
+        s["tok"] = ("vocab", "fsdp")
+    if cfg.frontend in ("frames", "patches+tokens"):
+        s["front_proj"] = (None, "fsdp")
+    if not cfg.tie_embeddings:
+        s["head"] = ("fsdp", "vocab")
+    return s
+
+
+def embed(params, cfg: ArchConfig, tokens=None, frames=None, patches=None):
+    """Returns (B, S_total, d_model) input activations."""
+    parts = []
+    if cfg.frontend == "frames":
+        x = frames.astype(params["front_proj"].dtype) @ params["front_proj"]
+        parts.append(x)
+    else:
+        if cfg.frontend == "patches+tokens" and patches is not None:
+            parts.append(patches.astype(params["front_proj"].dtype)
+                         @ params["front_proj"])
+        emb = jnp.take(params["tok"], tokens, axis=0)
+        if cfg.family == "dense" and cfg.tie_embeddings:
+            emb = emb * jnp.asarray(cfg.d_model ** 0.5, emb.dtype)  # gemma scaling
+        parts.append(emb)
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    return shard_logical(x, ("batch", "act_seq", None))
+
+
+def logits(params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = params["tok"].T
+    else:
+        w = params["head"]
+    out = x @ w.astype(x.dtype)
+    return shard_logical(out, ("batch", None, "vocab"))

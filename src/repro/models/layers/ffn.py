@@ -1,0 +1,57 @@
+"""Dense FFNs: SwiGLU (LLaMA/gemma/qwen/command-r/jamba) and the RWKV
+channel-mix (token-shift + squared ReLU) used when the mixer is RWKV6."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.context import shard_logical
+
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    s_in, s_out = d_model ** -0.5, d_ff ** -0.5
+    return {
+        "w_gate": jax.random.normal(ks[0], (d_model, d_ff), dtype) * s_in,
+        "w_up": jax.random.normal(ks[1], (d_model, d_ff), dtype) * s_in,
+        "w_down": jax.random.normal(ks[2], (d_ff, d_model), dtype) * s_out,
+    }
+
+
+def swiglu_specs():
+    return {"w_gate": ("fsdp", "ffn"), "w_up": ("fsdp", "ffn"),
+            "w_down": ("ffn", "fsdp")}
+
+
+def swiglu_apply(params, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    h = jax.nn.silu(x @ params["w_gate"].astype(dt)) * (x @ params["w_up"].astype(dt))
+    h = shard_logical(h, ("batch", None, "ffn"))
+    return h @ params["w_down"].astype(dt)
+
+
+def rwkv_cmix_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "mix_k": jnp.full((d_model,), 0.5, dtype),
+        "w_k": jax.random.normal(ks[0], (d_model, d_ff), dtype) * d_model ** -0.5,
+        "w_v": jax.random.normal(ks[1], (d_ff, d_model), dtype) * d_ff ** -0.5,
+    }
+
+
+def rwkv_cmix_specs():
+    return {"mix_k": (None,), "w_k": ("fsdp", "ffn"), "w_v": ("ffn", "fsdp")}
+
+
+def rwkv_cmix_apply(params, x: jax.Array, x_prev=None) -> jax.Array:
+    """x: (B, S, D); x_prev: (B, 1, D) last token of the previous segment
+    (zeros at sequence start / decode state)."""
+    dt = x.dtype
+    if x_prev is None:
+        x_prev = jnp.zeros_like(x[:, :1])
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    mix = params["mix_k"].astype(dt)
+    xk = x * mix + shifted * (1.0 - mix)
+    h = jnp.square(jax.nn.relu(xk @ params["w_k"].astype(dt)))
+    h = shard_logical(h, ("batch", None, "ffn"))
+    return h @ params["w_v"].astype(dt)

@@ -1,0 +1,209 @@
+"""Mamba-1 selective SSM block (Jamba's sequence mixer).
+
+TPU adaptation: the CUDA selective-scan kernel becomes a *chunked* scan —
+``lax.scan`` over chunks of ``chunk`` tokens carrying the SSM state, with a
+``lax.associative_scan`` (log-depth, VPU-friendly) inside each chunk.  This
+bounds the materialized (L, d_inner, d_state) working set to one chunk.
+
+Sharding: d_inner is the "ffn" logical axis (column-parallel in_proj,
+row-parallel out_proj — one all-reduce per block, Megatron-style); the
+depthwise conv and all per-channel SSM params shard with it.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.sharding.context import shard_logical
+
+
+def _dt_rank(cfg: ArchConfig) -> int:
+    return math.ceil(cfg.d_model / 16)
+
+
+def init(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    m = cfg.mamba
+    d = cfg.d_model
+    di = m.expand * d
+    n, dc, dtr = m.d_state, m.d_conv, _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    # S4D-real initialization for A
+    a_init = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (di, 1))
+    dt_bias = jnp.log(jnp.expm1(jnp.exp(
+        jax.random.uniform(ks[5], (di,), jnp.float32)
+        * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))))
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (dc, di), dtype) * dc ** -0.5,
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": jax.random.normal(ks[2], (di, dtr + 2 * n), dtype) * di ** -0.5,
+        "dt_proj": jax.random.normal(ks[3], (dtr, di), dtype) * dtr ** -0.5,
+        "dt_bias": dt_bias.astype(dtype),
+        "A_log": jnp.log(a_init).astype(jnp.float32),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[4], (di, d), dtype) * di ** -0.5,
+    }
+
+
+def specs(cfg: ArchConfig) -> Dict:
+    return {
+        "in_proj": ("fsdp", "ffn"),
+        "conv_w": (None, "ffn"),
+        "conv_b": ("ffn",),
+        "x_proj": ("ffn", None),
+        "dt_proj": (None, "ffn"),
+        "dt_bias": ("ffn",),
+        "A_log": ("ffn", None),
+        "D": ("ffn",),
+        "out_proj": ("ffn", "fsdp"),
+    }
+
+
+def _ssm_coeffs(params, u, cfg: ArchConfig):
+    """u: (B, L, di) post-conv.  Returns a, b, C with
+    a=(B,L,di,n) decay, b=(B,L,di,n) input, C=(B,L,n)."""
+    m = cfg.mamba
+    n = m.d_state
+    dtr = _dt_rank(cfg)
+    dt = u.dtype
+    xdb = u @ params["x_proj"].astype(dt)              # (B,L,dtr+2n)
+    delta = jax.nn.softplus(
+        (xdb[..., :dtr] @ params["dt_proj"].astype(dt)).astype(jnp.float32)
+        + params["dt_bias"])                           # (B,L,di) f32
+    Bc = xdb[..., dtr:dtr + n].astype(jnp.float32)     # (B,L,n)
+    Cc = xdb[..., dtr + n:].astype(jnp.float32)
+    A = -jnp.exp(params["A_log"])                      # (di,n)
+    a = jnp.exp(delta[..., None] * A)                  # (B,L,di,n)
+    b = (delta * u.astype(jnp.float32))[..., None] * Bc[..., None, :]
+    return a, b, Cc
+
+
+def _chunk_scan(a, b, h0):
+    """prefix recurrence h_t = a_t h_{t-1} + b_t within a chunk.
+    a,b: (B,L,di,n); h0: (B,di,n).  Returns (h_all (B,L,di,n), h_last)."""
+    def combine(x, y):
+        (a1, b1), (a2, b2) = x, y
+        return a1 * a2, a2 * b1 + b2
+    a_pref, b_pref = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h_all = a_pref * h0[:, None] + b_pref
+    return h_all, h_all[:, -1]
+
+
+def apply_train(params, x: jax.Array, cfg: ArchConfig, **_) -> jax.Array:
+    m = cfg.mamba
+    B, S, d = x.shape
+    di = m.expand * d
+    dc = m.d_conv
+    dt = x.dtype
+    uz = x @ params["in_proj"].astype(dt)
+    u, z = uz[..., :di], uz[..., di:]
+    u = shard_logical(u, ("batch", None, "ffn"))
+
+    # causal depthwise conv along S
+    u_pad = jnp.pad(u, ((0, 0), (dc - 1, 0), (0, 0)))
+    conv = sum(u_pad[:, i:i + S] * params["conv_w"][i].astype(dt)
+               for i in range(dc))
+    u = jax.nn.silu(conv + params["conv_b"].astype(dt))
+
+    a, b, Cc = _ssm_coeffs(params, u, cfg)
+    L = min(m.chunk, S)
+    assert S % L == 0, (S, L)
+    nch = S // L
+    a_c = a.reshape(B, nch, L, di, m.d_state).swapaxes(0, 1)
+    b_c = b.reshape(B, nch, L, di, m.d_state).swapaxes(0, 1)
+    C_c = Cc.reshape(B, nch, L, m.d_state).swapaxes(0, 1)
+
+    def body(h, abc):
+        ac, bc, cc = abc
+        h_all, h_last = _chunk_scan(ac, bc, h)
+        y = jnp.einsum("blin,bln->bli", h_all, cc)     # (B,L,di)
+        return h_last, y
+
+    h0 = jnp.zeros((B, di, m.d_state), jnp.float32)
+    _, y = jax.lax.scan(body, h0, (a_c, b_c, C_c))
+    y = y.swapaxes(0, 1).reshape(B, S, di)
+    y = (y + params["D"] * u.astype(jnp.float32)).astype(dt)
+    out = (y * jax.nn.silu(z)) @ params["out_proj"].astype(dt)
+    return shard_logical(out, ("batch", None, None))
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, *, dtype=jnp.bfloat16,
+               **_) -> Dict:
+    m = cfg.mamba
+    di = m.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, m.d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, m.d_state), jnp.float32),
+    }
+
+
+def cache_specs(cfg: ArchConfig, **_) -> Dict:
+    return {"conv": ("batch", None, "ffn"), "ssm": ("batch", "ffn", None)}
+
+
+def apply_decode(params, x: jax.Array, cache: Dict, pos: jax.Array,
+                 cfg: ArchConfig, **_) -> Tuple[jax.Array, Dict]:
+    """Single-token state update. x: (B, 1, d)."""
+    m = cfg.mamba
+    B, _, d = x.shape
+    di = m.expand * d
+    dc = m.d_conv
+    dt = x.dtype
+    uz = x[:, 0] @ params["in_proj"].astype(dt)        # (B, 2di)
+    u, z = uz[..., :di], uz[..., di:]
+
+    conv_in = jnp.concatenate([cache["conv"].astype(dt), u[:, None]], axis=1)
+    conv = jnp.einsum("bci,ci->bi", conv_in, params["conv_w"].astype(dt))
+    u = jax.nn.silu(conv + params["conv_b"].astype(dt))
+
+    a, b, Cc = _ssm_coeffs(params, u[:, None], cfg)    # L=1
+    h = a[:, 0] * cache["ssm"] + b[:, 0]
+    y = jnp.einsum("bin,bn->bi", h, Cc[:, 0])
+    y = (y + params["D"] * u.astype(jnp.float32)).astype(dt)
+    out = (y * jax.nn.silu(z)) @ params["out_proj"].astype(dt)
+    new_cache = {"conv": conv_in[:, 1:].astype(cache["conv"].dtype), "ssm": h}
+    return out[:, None], new_cache
+
+
+def apply_prefill(params, x: jax.Array, cfg: ArchConfig, *, cache_dtype=jnp.bfloat16, **_) -> Tuple[jax.Array, Dict]:
+    """Forward + final (conv tail, SSM state) as the decode cache."""
+    m = cfg.mamba
+    B, S, d = x.shape
+    di = m.expand * d
+    dc = m.d_conv
+    dt = x.dtype
+    uz = x @ params["in_proj"].astype(dt)
+    u_raw, z = uz[..., :di], uz[..., di:]
+    u_raw = shard_logical(u_raw, ("batch", None, "ffn"))
+
+    u_pad = jnp.pad(u_raw, ((0, 0), (dc - 1, 0), (0, 0)))
+    conv = sum(u_pad[:, i:i + S] * params["conv_w"][i].astype(dt)
+               for i in range(dc))
+    u = jax.nn.silu(conv + params["conv_b"].astype(dt))
+
+    a, b, Cc = _ssm_coeffs(params, u, cfg)
+    L = min(m.chunk, S)
+    nch = S // L
+    a_c = a.reshape(B, nch, L, di, m.d_state).swapaxes(0, 1)
+    b_c = b.reshape(B, nch, L, di, m.d_state).swapaxes(0, 1)
+    C_c = Cc.reshape(B, nch, L, m.d_state).swapaxes(0, 1)
+
+    def body(h, abc):
+        ac, bc, cc = abc
+        h_all, h_last = _chunk_scan(ac, bc, h)
+        return h_last, jnp.einsum("blin,bln->bli", h_all, cc)
+
+    h0 = jnp.zeros((B, di, m.d_state), jnp.float32)
+    h_last, y = jax.lax.scan(body, h0, (a_c, b_c, C_c))
+    y = y.swapaxes(0, 1).reshape(B, S, di)
+    y = (y + params["D"] * u.astype(jnp.float32)).astype(dt)
+    out = (y * jax.nn.silu(z)) @ params["out_proj"].astype(dt)
+    out = shard_logical(out, ("batch", None, None))
+    cache = {"conv": u_raw[:, S - (dc - 1):].astype(cache_dtype),
+             "ssm": h_last}
+    return out, cache

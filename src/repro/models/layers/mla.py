@@ -1,0 +1,173 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Train/prefill: materialize per-head k_nope/v from the compressed latent.
+Decode: *absorbed* form — cache only (c_kv, k_rope) = (512 + 64) per token;
+w_uk is absorbed into the query and w_uv into the output, so attention runs
+in the latent space.  This is the MLA inference trick that makes the KV cache
+~9x smaller than GQA at 128 heads.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models.layers import norms
+from repro.models.layers.rope import apply_rope
+from repro.sharding.context import shard_logical
+
+NEG_INF = -1e30
+Q_CHUNK = 1024
+
+
+def init(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    a = cfg.attn
+    d, nq = cfg.d_model, a.num_q_heads
+    qr, kvr = a.q_lora_rank, a.kv_lora_rank
+    dn, dr, dv = a.qk_nope_dim, a.qk_rope_dim, a.v_head_dim
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    return {
+        "w_dq": jax.random.normal(ks[0], (d, qr), dtype) * s,
+        "q_norm": norms.rms_init(qr, dtype),
+        "w_uq": jax.random.normal(ks[1], (qr, nq, dn + dr), dtype) * qr ** -0.5,
+        "w_dkv": jax.random.normal(ks[2], (d, kvr + dr), dtype) * s,
+        "kv_norm": norms.rms_init(kvr, dtype),
+        "w_uk": jax.random.normal(ks[3], (kvr, nq, dn), dtype) * kvr ** -0.5,
+        "w_uv": jax.random.normal(ks[4], (kvr, nq, dv), dtype) * kvr ** -0.5,
+        "wo": jax.random.normal(ks[5], (nq, dv, d), dtype) * (nq * dv) ** -0.5,
+    }
+
+
+def specs(cfg: ArchConfig) -> Dict:
+    return {
+        "w_dq": ("fsdp", None),
+        "q_norm": norms.rms_specs(),
+        "w_uq": ("fsdp", "heads", None),
+        "w_dkv": ("fsdp", None),
+        "kv_norm": norms.rms_specs(),
+        "w_uk": ("fsdp", "heads", None),
+        "w_uv": ("fsdp", "heads", None),
+        "wo": ("heads", None, "fsdp"),
+    }
+
+
+def _project_q(params, x, a, positions):
+    dt = x.dtype
+    cq = norms.rms_apply(params["q_norm"], x @ params["w_dq"].astype(dt))
+    q = jnp.einsum("bsr,rnh->bsnh", cq, params["w_uq"].astype(dt))
+    q_nope, q_rope = q[..., :a.qk_nope_dim], q[..., a.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions, a.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(params, x, a, positions):
+    dt = x.dtype
+    dkv = x @ params["w_dkv"].astype(dt)
+    ckv = norms.rms_apply(params["kv_norm"], dkv[..., :a.kv_lora_rank])
+    k_rope = dkv[..., None, a.kv_lora_rank:]           # (B,S,1,dr) shared head
+    k_rope = apply_rope(k_rope, positions, a.rope_theta)
+    return ckv, k_rope[..., 0, :]
+
+
+def apply_train(params, x: jax.Array, cfg: ArchConfig, **_) -> jax.Array:
+    a = cfg.attn
+    B, S, _ = x.shape
+    dt = x.dtype
+    positions = jnp.arange(S)[None, :]
+    q_nope, q_rope = _project_q(params, x, a, positions)
+    ckv, k_rope = _project_kv_latent(params, x, a, positions)
+    k_nope = jnp.einsum("bsr,rnh->bsnh", ckv, params["w_uk"].astype(dt))
+    v = jnp.einsum("bsr,rnh->bsnh", ckv, params["w_uv"].astype(dt))
+    q_nope = shard_logical(q_nope, ("batch", None, "heads", None))
+    k_nope = shard_logical(k_nope, ("batch", None, "heads", None))
+
+    scale = (a.qk_nope_dim + a.qk_rope_dim) ** -0.5
+    n_chunks = max(1, S // Q_CHUNK)
+    qc_n = q_nope.reshape(B, n_chunks, S // n_chunks, *q_nope.shape[2:])
+    qc_r = q_rope.reshape(B, n_chunks, S // n_chunks, *q_rope.shape[2:])
+    Lq = S // n_chunks
+
+    def chunk_fn(ci):
+        qn = jax.lax.dynamic_index_in_dim(qc_n, ci, 1, keepdims=False)
+        qr = jax.lax.dynamic_index_in_dim(qc_r, ci, 1, keepdims=False)
+        scores = (jnp.einsum("bqnh,bknh->bnqk", qn, k_nope)
+                  + jnp.einsum("bqnh,bkh->bnqk", qr, k_rope)
+                  ).astype(jnp.float32) * scale
+        q_pos = ci * Lq + jnp.arange(Lq)
+        mask = jnp.arange(S)[None, :] <= q_pos[:, None]
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+        return jnp.einsum("bnqk,bknh->bqnh", probs, v)
+
+    if n_chunks == 1:
+        out = chunk_fn(jnp.asarray(0))
+    else:
+        out = jax.lax.map(chunk_fn, jnp.arange(n_chunks))
+        out = jnp.moveaxis(out, 0, 1).reshape(B, S, a.num_q_heads, a.v_head_dim)
+    out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(dt))
+    return shard_logical(out, ("batch", None, None))
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, *, dtype=jnp.bfloat16,
+               **_) -> Dict:
+    a = cfg.attn
+    return {
+        "ckv": jnp.zeros((batch, max_len, a.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, a.qk_rope_dim), dtype),
+    }
+
+
+def cache_specs(cfg: ArchConfig, *, long_context: bool, **_) -> Dict:
+    return {"ckv": ("batch", "cache_seq", None),
+            "k_rope": ("batch", "cache_seq", None)}
+
+
+def apply_decode(params, x: jax.Array, cache: Dict, pos: jax.Array,
+                 cfg: ArchConfig, **_) -> Tuple[jax.Array, Dict]:
+    """Absorbed-MLA single-token decode."""
+    a = cfg.attn
+    B = x.shape[0]
+    dt = x.dtype
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope = _project_q(params, x, a, positions)       # (B,1,n,*)
+    ckv_new, k_rope_new = _project_kv_latent(params, x, a, positions)
+
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), pos, axis=1)
+
+    # absorb w_uk into q: q_lat (B,1,n,kv_rank)
+    q_lat = jnp.einsum("bqnh,rnh->bqnr", q_nope, params["w_uk"].astype(dt))
+    scale = (a.qk_nope_dim + a.qk_rope_dim) ** -0.5
+    scores = (jnp.einsum("bqnr,bkr->bnqk", q_lat, ckv.astype(dt))
+              + jnp.einsum("bqnh,bkh->bnqk", q_rope, k_rope.astype(dt))
+              ).astype(jnp.float32) * scale
+    valid = jnp.arange(ckv.shape[1]) <= pos
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+    o_lat = jnp.einsum("bnqk,bkr->bqnr", probs, ckv.astype(dt))
+    out = jnp.einsum("bqnr,rnh->bqnh", o_lat, params["w_uv"].astype(dt))
+    out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(dt))
+    return out, {"ckv": ckv, "k_rope": k_rope}
+
+
+def apply_prefill(params, x: jax.Array, cfg: ArchConfig, *, cache_len: int,
+                  cache_dtype=jnp.bfloat16, **_) -> Tuple[jax.Array, Dict]:
+    a = cfg.attn
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    ckv, k_rope = _project_kv_latent(params, x, a, positions)
+    out = apply_train(params, x, cfg)
+    cdt = cache_dtype
+    size = max(cache_len, S)
+    ckv_c = jnp.zeros((B, size, a.kv_lora_rank), cdt)
+    kr_c = jnp.zeros((B, size, a.qk_rope_dim), cdt)
+    cache = {
+        "ckv": jax.lax.dynamic_update_slice_in_dim(ckv_c, ckv.astype(cdt), 0, 1),
+        "k_rope": jax.lax.dynamic_update_slice_in_dim(kr_c, k_rope.astype(cdt), 0, 1),
+    }
+    return out, cache

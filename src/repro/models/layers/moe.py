@@ -1,0 +1,380 @@
+"""Routed Mixture-of-Experts with shared experts (DeepSeek-style).
+
+Dispatch is sort-free capacity-based scatter/gather (MegaBlocks-flavored,
+adapted to TPU/XLA):
+
+  router -> top-k -> position-in-expert (stable argsort rank) -> scatter
+  tokens into (E, C, d) -> batched expert GEMMs -> gather+combine.
+
+Distribution (DESIGN §5): experts live on the `model` mesh axis; tokens are
+sharded over `data`.  Because expert weights are replicated across `data`,
+dispatch never crosses data shards: each (data, model) device routes its
+local tokens to its local experts and a single psum over `model` combines
+expert outputs.  This is expressed with shard_map so the collective schedule
+is explicit (one all-reduce per MoE layer — same as Megatron TP).
+
+CBWS hook: ``expert_permutation`` from ``sharding.cbws_sharding`` permutes
+the expert axis so each model shard owns a load-balanced expert group
+(the paper's channel->SPE assignment applied to experts).
+
+The pure-local path (``apply_local``) is the oracle used by unit tests and
+single-device smoke runs; shard_map equivalence is tested on a fake mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ArchConfig, MoEConfig
+from repro.sharding.context import current_ctx, shard_logical
+
+__all__ = ["init", "specs", "apply"]
+
+
+def init(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    m = cfg.moe
+    d, de, E = cfg.d_model, m.d_expert, m.num_experts
+    ks = jax.random.split(key, 5)
+    s, se = d ** -0.5, de ** -0.5
+    p = {
+        "router": jax.random.normal(ks[0], (d, E), jnp.float32) * s,
+        "w_gate": jax.random.normal(ks[1], (E, d, de), dtype) * s,
+        "w_up": jax.random.normal(ks[2], (E, d, de), dtype) * s,
+        "w_down": jax.random.normal(ks[3], (E, de, d), dtype) * se,
+    }
+    if m.num_shared:
+        dsh = de * m.num_shared
+        k2 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": jax.random.normal(k2[0], (d, dsh), dtype) * s,
+            "w_up": jax.random.normal(k2[1], (d, dsh), dtype) * s,
+            "w_down": jax.random.normal(k2[2], (dsh, d), dtype) * dsh ** -0.5,
+        }
+    return p
+
+
+def specs(cfg: ArchConfig) -> Dict:
+    s = {
+        "router": (None, None),
+        "w_gate": ("experts", "fsdp", None),
+        "w_up": ("experts", "fsdp", None),
+        "w_down": ("experts", None, "fsdp"),
+    }
+    if cfg.moe.num_shared:
+        s["shared"] = {"w_gate": ("fsdp", "ffn"), "w_up": ("fsdp", "ffn"),
+                       "w_down": ("ffn", "fsdp")}
+    return s
+
+
+def _route(router_w, x2d, m: MoEConfig):
+    """returns (top_vals (T,k) f32 normalized, top_idx (T,k) i32, aux_loss)."""
+    logits = (x2d.astype(jnp.float32) @ router_w).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(gates, m.top_k)
+    top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+    # load-balancing aux loss (Switch): E * mean(frac_tokens * frac_prob)
+    E = gates.shape[-1]
+    me = gates.mean(axis=0)
+    one_hot_top1 = jax.nn.one_hot(top_idx[:, 0], E, dtype=jnp.float32)
+    ce = one_hot_top1.mean(axis=0)
+    aux = E * jnp.sum(me * ce)
+    return top_vals, top_idx, aux
+
+
+def _positions_in_expert(top_idx: jax.Array, E: int):
+    """Rank of each (token, choice) within its expert, computed by stable
+    argsort — O(Tk log Tk), no (T, k, E) one-hot."""
+    flat = top_idx.reshape(-1)                         # (T*k,)
+    order = jnp.argsort(flat, stable=True)
+    sorted_e = flat[order]
+    counts = jnp.bincount(flat, length=E)
+    seg_start = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                                 jnp.cumsum(counts)[:-1]])
+    rank_sorted = jnp.arange(flat.shape[0]) - seg_start[sorted_e]
+    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+    return rank.reshape(top_idx.shape)                 # (T, k)
+
+
+def _expert_ffn(w_gate, w_up, w_down, xe):
+    """xe: (E, C, d) -> (E, C, d); batched SwiGLU over experts."""
+    dt = xe.dtype
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w_gate.astype(dt))) \
+        * jnp.einsum("ecd,edf->ecf", xe, w_up.astype(dt))
+    return jnp.einsum("ecf,efd->ecd", h, w_down.astype(dt))
+
+
+def _dispatch_compute_combine(params, x2d, m: MoEConfig, capacity: int):
+    """The local (per-shard) MoE computation. x2d: (T, d)."""
+    T, d = x2d.shape
+    E, k = m.num_experts, m.top_k
+    top_vals, top_idx, aux = _route(params["router"], x2d, m)
+    pos = _positions_in_expert(top_idx, E)             # (T, k)
+    keep = pos < capacity
+    safe_pos = jnp.where(keep, pos, capacity)          # dropped -> pad slot
+
+    # scatter tokens into (E, C+1, d)
+    xe = jnp.zeros((E, capacity + 1, d), x2d.dtype)
+    tok_idx = jnp.broadcast_to(jnp.arange(T)[:, None], (T, k)).reshape(-1)
+    xe = xe.at[top_idx.reshape(-1), safe_pos.reshape(-1)].set(x2d[tok_idx])
+    xe = xe[:, :capacity]
+
+    ye = _expert_ffn(params["w_gate"], params["w_up"], params["w_down"], xe)
+
+    # gather back + weighted combine
+    ye_pad = jnp.concatenate([ye, jnp.zeros((E, 1, d), ye.dtype)], axis=1)
+    picked = ye_pad[top_idx.reshape(-1), safe_pos.reshape(-1)].reshape(T, k, d)
+    w = (top_vals * keep.astype(jnp.float32)).astype(x2d.dtype)
+    out = jnp.einsum("tkd,tk->td", picked, w)
+    return out, aux
+
+
+def _shared_ffn(params, x):
+    dt = x.dtype
+    sh = params["shared"]
+    h = jax.nn.silu(x @ sh["w_gate"].astype(dt)) * (x @ sh["w_up"].astype(dt))
+    h = shard_logical(h, ("batch", None, "ffn"))
+    return h @ sh["w_down"].astype(dt)
+
+
+def capacity_for(m: MoEConfig, tokens_per_shard: int) -> int:
+    c = int(tokens_per_shard * m.top_k / m.num_experts * m.capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU-friendly shapes
+
+
+def apply_local(params, x: jax.Array, cfg: ArchConfig):
+    """Single-shard oracle. x: (B, S, d) -> (out, aux_loss)."""
+    B, S, d = x.shape
+    x2d = x.reshape(-1, d)
+    cap = capacity_for(cfg.moe, x2d.shape[0])
+    out, aux = _dispatch_compute_combine(params, x2d, cfg.moe, cap)
+    out = out.reshape(B, S, d)
+    if cfg.moe.num_shared:
+        out = out + _shared_ffn(params, x)
+    return out, aux
+
+
+def apply(params, x: jax.Array, cfg: ArchConfig):
+    """Sharded when a mesh context is active, local otherwise."""
+    ctx = current_ctx()
+    if ctx is None or "model" not in ctx.mesh.axis_names:
+        return apply_local(params, x, cfg)
+    exp_axes = ctx.axes_for("experts")
+    n_batch_shards = 1
+    for a in ("pod", "data"):
+        if a in ctx.mesh.axis_names:
+            n_batch_shards *= ctx.mesh.shape[a]
+    if ("data" in exp_axes and "model" in exp_axes
+            and cfg.moe.num_experts % (ctx.mesh.shape["model"]
+                                       * ctx.mesh.shape["data"]) == 0
+            and x.shape[0] % n_batch_shards == 0):
+        return _apply_ep2d(params, x, cfg, ctx)
+    return _apply_sharded(params, x, cfg, ctx)
+
+
+def _apply_sharded(params, x, cfg: ArchConfig, ctx):
+    """shard_map over (data(+pod), model): tokens stay on their data shard,
+    experts are model-sharded; one psum('model') combines expert outputs."""
+    m = cfg.moe
+    mesh = ctx.mesh
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_model = mesh.shape["model"]
+    assert m.num_experts % n_model == 0, (m.num_experts, n_model)
+
+    B, S, d = x.shape
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh.shape[a]
+    if B % n_data != 0:
+        # decode-scale batches (e.g. batch=1 long-context): tokens are tiny —
+        # replicate them across the data axes; experts stay model-sharded.
+        data_axes = ()
+        n_data = 1
+    tokens_per_shard = (B * S) // n_data
+    cap = capacity_for(m, tokens_per_shard)
+
+    routed = dict(router=params["router"], w_gate=params["w_gate"],
+                  w_up=params["w_up"], w_down=params["w_down"])
+    routed_specs = dict(router=P(), w_gate=P("model",), w_up=P("model",),
+                        w_down=P("model",))
+
+    def local_fn(rp, xl):
+        Bl, Sl, dl = xl.shape
+        x2d = xl.reshape(-1, dl)
+        E_local = m.num_experts // n_model
+        # local router: full logits, but only this shard's experts win slots
+        logits = (x2d.astype(jnp.float32) @ rp["router"]).astype(jnp.float32)
+        gates = jax.nn.softmax(logits, axis=-1)
+        top_vals, top_idx = jax.lax.top_k(gates, m.top_k)
+        top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+        E = gates.shape[-1]
+        me = gates.mean(axis=0)
+        ce = jax.nn.one_hot(top_idx[:, 0], E, dtype=jnp.float32).mean(axis=0)
+        aux = E * jnp.sum(me * ce)
+
+        shard = jax.lax.axis_index("model")
+        local_lo = shard * E_local
+        pos = _positions_in_expert(top_idx, E)
+        keep = (pos < cap) & (top_idx >= local_lo) & (top_idx < local_lo + E_local)
+        local_e = jnp.clip(top_idx - local_lo, 0, E_local - 1)
+        safe_pos = jnp.where(keep, pos, cap)
+
+        T = x2d.shape[0]
+        xe = jnp.zeros((E_local, cap + 1, dl), x2d.dtype)
+        tok_idx = jnp.broadcast_to(jnp.arange(T)[:, None], (T, m.top_k)).reshape(-1)
+        xe = xe.at[local_e.reshape(-1), safe_pos.reshape(-1)].set(x2d[tok_idx])
+        ye = _expert_ffn(rp["w_gate"], rp["w_up"], rp["w_down"], xe[:, :cap])
+        ye_pad = jnp.concatenate([ye, jnp.zeros((E_local, 1, dl), ye.dtype)], 1)
+        picked = ye_pad[local_e.reshape(-1), safe_pos.reshape(-1)].reshape(T, m.top_k, dl)
+        w = (top_vals * keep.astype(jnp.float32)).astype(x2d.dtype)
+        out = jnp.einsum("tkd,tk->td", picked, w)
+        out = jax.lax.psum(out, "model")
+        aux = jax.lax.pmean(aux, ("model",) + data_axes)
+        return out.reshape(Bl, Sl, dl), aux
+
+    x_spec = P(data_axes if data_axes else None)
+    out, aux = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(routed_specs, x_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(routed, x)
+    if cfg.moe.num_shared:
+        out = out + _shared_ffn(params, x)
+    return out, aux
+
+
+def _apply_ep2d(params, x, cfg: ArchConfig, ctx,
+                dispatch_dtype=jnp.float8_e4m3fn):
+    """2D expert parallelism (EXPERIMENTS §Perf, deepseek-v3 hillclimb).
+
+    Experts are *fully* sharded over (model x data) — each chip permanently
+    owns E/(Nm*Nd) experts, so there are no per-layer expert-weight gathers
+    (the FSDP all-gather that dominated the baseline's collective term).
+
+    Perf-iteration history (§Perf):
+      v1: tokens replicated across `model`, a2a over `data`, psum combine —
+          a2a carried 16x redundant routing and the combine psum'd a full
+          (tokens, d) activation per layer.
+      v2 (this): each chip routes only its model-row SLICE of the tokens
+          (sequence-split dispatch), one fused all-to-all over the flattened
+          (model, data) grid in FP8 (DeepSeek-V3's own dispatch precision),
+          outputs combine LOCALLY on the token owner (no psum), and a single
+          bf16 all-gather over `model` restores the replicated layout.
+
+    Expert->chip flattening is model-major: chip (model=m, data=d) owns
+    experts [(m*Nd + d)*eb, +eb).  The CBWS expert-placement permutation
+    (sharding/cbws_sharding.py) is applied offline to the expert axis so
+    each chip's group carries balanced predicted load — Skydiver's
+    channel->SPE assignment at pod scale.
+    """
+    m = cfg.moe
+    mesh = ctx.mesh
+    Nm, Nd = mesh.shape["model"], mesh.shape["data"]
+    E = m.num_experts
+    eb = E // (Nm * Nd)                      # experts per chip
+
+    B, S, d = x.shape
+    data_axes_all = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_data_all = 1
+    for a in data_axes_all:
+        n_data_all *= mesh.shape[a]
+    # batch-over-model (ep2d_zero: ZeRO-DP, no TP): x arrives with the batch
+    # dim sharded over every axis — each chip routes its own disjoint tokens,
+    # nothing is replicated, the output stays batch-sharded.
+    batch_model = "model" in ctx.axes_for("batch") \
+        and B % (n_data_all * Nm) == 0
+    T_l = (B // n_data_all) * S if B % n_data_all == 0 else B * S
+    # under sequence parallelism (act_seq -> model) x arrives seq-sharded:
+    # the shard_map consumes the slice directly and returns it seq-sharded.
+    sp_mode = (not batch_model) and \
+        ctx.axes_for("act_seq") == ("model",) and S % Nm == 0
+    # sequence-split: each model-row chip routes T_l/Nm tokens
+    seq_split = (not sp_mode) and (not batch_model) and T_l % Nm == 0 \
+        and (T_l // Nm) * m.top_k >= Nm * Nd
+    T_sp = T_l // Nm if (seq_split or sp_mode or batch_model) else T_l
+    cap = capacity_for(m, T_sp)
+    # fp8 only pays off when the payload is big; keep bf16 for tiny decodes
+    use_f8 = dispatch_dtype is not None and T_sp >= 1024
+
+    routed = dict(router=params["router"], w_gate=params["w_gate"],
+                  w_up=params["w_up"], w_down=params["w_down"])
+    routed_specs = dict(router=P(), w_gate=P(("model", "data")),
+                        w_up=P(("model", "data")), w_down=P(("model", "data")))
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def local_fn(rp, xl):
+        Bl, Sl, dl = xl.shape
+        x2d = xl.reshape(-1, dl)
+        mj = jax.lax.axis_index("model")
+        if seq_split:
+            x_my = jax.lax.dynamic_slice_in_dim(x2d, mj * T_sp, T_sp, axis=0)
+        else:
+            x_my = x2d
+        T = x_my.shape[0]
+
+        logits = (x_my.astype(jnp.float32) @ rp["router"]).astype(jnp.float32)
+        gates = jax.nn.softmax(logits, axis=-1)
+        top_vals, top_idx = jax.lax.top_k(gates, m.top_k)
+        top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+        me = gates.mean(axis=0)
+        ce = jax.nn.one_hot(top_idx[:, 0], E, dtype=jnp.float32).mean(axis=0)
+        aux = E * jnp.sum(me * ce)
+
+        pos = _positions_in_expert(top_idx, E)       # per-expert slot rank
+        keep = pos < cap
+        owner = top_idx // eb                        # flat chip id (model-major)
+        sub = top_idx % eb
+        safe_pos = jnp.where(keep, pos, cap)
+
+        send_dt = dispatch_dtype if use_f8 else x2d.dtype
+        send = jnp.zeros((Nm * Nd, eb, cap + 1, dl), send_dt)
+        tok_idx = jnp.broadcast_to(jnp.arange(T)[:, None],
+                                   (T, m.top_k)).reshape(-1)
+        send = send.at[owner.reshape(-1), sub.reshape(-1),
+                       safe_pos.reshape(-1)].set(
+            x_my[tok_idx].astype(send_dt))
+        send = send[:, :, :cap]
+
+        # fused dispatch over the whole (model, data) grid
+        recv = jax.lax.all_to_all(send, ("model", "data"), split_axis=0,
+                                  concat_axis=0, tiled=True)
+        xe = recv.transpose(1, 0, 2, 3).reshape(eb, Nm * Nd * cap, dl)
+        ye = _expert_ffn(rp["w_gate"], rp["w_up"], rp["w_down"],
+                         xe.astype(x2d.dtype))
+        back = ye.astype(send_dt).reshape(eb, Nm * Nd, cap, dl
+                                          ).transpose(1, 0, 2, 3)
+        ret = jax.lax.all_to_all(back, ("model", "data"), split_axis=0,
+                                 concat_axis=0, tiled=True)
+
+        # combine locally — every expert's return lands on the token owner
+        ret_pad = jnp.concatenate(
+            [ret, jnp.zeros((Nm * Nd, eb, 1, dl), ret.dtype)], axis=2)
+        picked = ret_pad[owner.reshape(-1), sub.reshape(-1),
+                         safe_pos.reshape(-1)].reshape(T, m.top_k, dl)
+        w = (top_vals * keep.astype(jnp.float32)).astype(x2d.dtype)
+        out_my = jnp.einsum("tkd,tk->td", picked.astype(x2d.dtype), w)
+
+        if seq_split:   # restore the replicated-over-model token layout
+            out = jax.lax.all_gather(out_my, "model", axis=0, tiled=True)
+        else:
+            # sp_mode / batch_model: stays sharded (no combine collective)
+            out = out_my
+        aux = jax.lax.pmean(aux, ("model",) + data_axes)
+        return out.reshape(Bl, -1, dl), aux
+
+    x_spec = P((data_axes + ("model",)) if batch_model
+               else (data_axes if data_axes else None),
+               "model" if sp_mode else None)
+    out, aux = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(routed_specs, x_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(routed, x)
+    if cfg.moe.num_shared:
+        out = out + _shared_ffn(params, x)
+    return out, aux

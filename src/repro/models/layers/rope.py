@@ -1,0 +1,24 @@
+"""Rotary position embeddings (half-rotation convention, LLaMA-style)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim//2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S). Rotates pairs
+    (x[..., :D/2], x[..., D/2:]) — the convention is self-consistent between
+    q and k, which is all attention needs."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                             # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv   # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                       # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,209 @@
+"""RWKV-6 ("Finch") time-mix: linear attention with data-dependent
+per-channel decay, as chunked matmuls (GLA-style) for the MXU.
+
+State per head: S in R^{hd x hd};  per token t (head-local):
+    y_t = r_t (S_{t-1} + (u ⊙ k_t) v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+with w_t = exp(-exp(w0 + lora(x_t))) in (0,1), data-dependent.
+
+Chunking (length L): inter-chunk contribution is a matmul against the
+carried state with r scaled by the inclusive-exclusive decay prefix
+(exp(elw) <= 1, numerically safe); intra-chunk pairs use the per-pair
+log-domain tensor D[t,s,d] = exp(elw_t - lw_s) <= 1 for s < t, so no
+exploding 1/decay factors ever appear (DESIGN §6).  Token-shift mixing is
+the static-lerp simplification of RWKV6's ddlerp (noted in DESIGN §8).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models.layers import norms
+from repro.sharding.context import shard_logical
+
+_LORA_RANK = 64
+
+
+def init(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    hd = cfg.rwkv.head_dim
+    H = d // hd
+    ks = jax.random.split(key, 10)
+    s = d ** -0.5
+    return {
+        "mix": jnp.full((5, d), 0.5, dtype),           # r,k,v,w,g token-shift mixes
+        "w0": jnp.full((d,), -0.6931, jnp.float32),    # decay bias: w ~ exp(-exp(w0))
+        "w_lora_a": jax.random.normal(ks[0], (d, _LORA_RANK), dtype) * s,
+        "w_lora_b": jax.random.normal(ks[1], (_LORA_RANK, d), dtype) * _LORA_RANK ** -0.5 * 0.1,
+        "wr": jax.random.normal(ks[2], (d, H, hd), dtype) * s,
+        "wk": jax.random.normal(ks[3], (d, H, hd), dtype) * s,
+        "wv": jax.random.normal(ks[4], (d, H, hd), dtype) * s,
+        "wg": jax.random.normal(ks[5], (d, d), dtype) * s,
+        "u": jax.random.normal(ks[6], (H, hd), jnp.float32) * 0.1,  # bonus
+        "out_norm": norms.rms_init(d, dtype),
+        "wo": jax.random.normal(ks[7], (H, hd, d), dtype) * s,
+    }
+
+
+def specs(cfg: ArchConfig) -> Dict:
+    return {
+        "mix": (None, None), "w0": (None,),
+        "w_lora_a": ("fsdp", None), "w_lora_b": (None, "fsdp"),
+        "wr": ("fsdp", "heads", None), "wk": ("fsdp", "heads", None),
+        "wv": ("fsdp", "heads", None), "wg": ("fsdp", "ffn"),
+        "u": ("heads", None),
+        "out_norm": norms.rms_specs(),
+        "wo": ("heads", None, "fsdp"),
+    }
+
+
+def _mix_projections(params, x, x_prev, cfg: ArchConfig):
+    """Token-shift lerp + projections. x: (B,S,d); x_prev: (B,1,d)."""
+    d = cfg.d_model
+    hd = cfg.rwkv.head_dim
+    H = d // hd
+    dt = x.dtype
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    mix = params["mix"].astype(dt)                     # (5, d)
+    xm = x[None] * mix[:, None, None] + shifted[None] * (1 - mix[:, None, None])
+    xr, xk, xv, xw, xg = xm[0], xm[1], xm[2], xm[3], xm[4]
+    r = jnp.einsum("bsd,dnh->bsnh", xr, params["wr"].astype(dt))
+    k = jnp.einsum("bsd,dnh->bsnh", xk, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dnh->bsnh", xv, params["wv"].astype(dt))
+    g = jax.nn.silu(xg @ params["wg"].astype(dt))
+    # data-dependent decay (f32 for the exp tower)
+    w_raw = params["w0"] + (jnp.tanh(xw @ params["w_lora_a"].astype(dt))
+                            @ params["w_lora_b"].astype(dt)).astype(jnp.float32)
+    log_w = -jnp.exp(w_raw)                            # log w_t  (<0)
+    log_w = log_w.reshape(*log_w.shape[:-1], H, hd)
+    return r, k, v, g, log_w
+
+
+def _chunk_wkv(r, k, v, log_w, u, S0):
+    """One chunk, batched over (B, H).
+    r,k,v: (B,L,H,hd); log_w: (B,L,H,hd) f32; u: (H,hd); S0: (B,H,hd,hd) f32.
+    Returns y (B,L,H,hd), S1."""
+    B, L, H, hd = r.shape
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    lw = jnp.cumsum(log_w, axis=1)                     # inclusive prefix
+    elw = lw - log_w                                   # exclusive prefix
+
+    # inter-chunk: y_inter[t] = (r_t ⊙ exp(elw_t)) @ S0
+    r_s = rf * jnp.exp(elw)
+    y_inter = jnp.einsum("blnh,bnhe->blne", r_s, S0)
+
+    # intra-chunk: scores[t,s] = sum_d r_t k_s exp(elw_t - lw_s), s < t
+    D = jnp.exp(jnp.clip(elw[:, :, None] - lw[:, None, :], -60.0, 0.0))
+    scores = jnp.einsum("blnh,bsnh,blsnh->blsn", rf, kf, D)
+    mask = (jnp.arange(L)[:, None] > jnp.arange(L)[None, :])
+    scores = scores * mask[None, :, :, None]
+    # bonus diagonal: (r_t ⊙ u)·k_t
+    bonus = jnp.einsum("blnh,blnh->bln", rf * u[None, None], kf)
+    y_intra = jnp.einsum("blsn,bsnh->blnh", scores, vf) \
+        + bonus[..., None] * vf
+
+    # state update: S1 = diag(exp(lw_L)) S0 + sum_s (k_s ⊙ exp(lw_L - lw_s)) v_s^T
+    k_s = kf * jnp.exp(lw[:, -1:] - lw)                # (B,L,H,hd), bounded <=1
+    S1 = jnp.exp(lw[:, -1])[:, :, :, None] * S0 \
+        + jnp.einsum("blnh,blne->bnhe", k_s, vf)
+    return (y_inter + y_intra).astype(r.dtype), S1
+
+
+def apply_train(params, x: jax.Array, cfg: ArchConfig, **_) -> jax.Array:
+    B, S, d = x.shape
+    hd = cfg.rwkv.head_dim
+    H = d // hd
+    dt = x.dtype
+    x_prev = jnp.zeros_like(x[:, :1])
+    r, k, v, g, log_w = _mix_projections(params, x, x_prev, cfg)
+    r = shard_logical(r, ("batch", None, "heads", None))
+
+    L = min(cfg.rwkv.chunk, S)
+    assert S % L == 0, (S, L)
+    nch = S // L
+
+    def body(S0, inp):
+        rc, kc, vc, lwc = inp
+        y, S1 = _chunk_wkv(rc, kc, vc, lwc, params["u"], S0)
+        return S1, y
+
+    reshape = lambda t: t.reshape(B, nch, L, H, hd).swapaxes(0, 1)
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    _, y = jax.lax.scan(body, S0, (reshape(r), reshape(k), reshape(v),
+                                   reshape(log_w)))
+    y = y.swapaxes(0, 1).reshape(B, S, d)
+    y = norms.rms_apply(params["out_norm"], y) * g
+    out = jnp.einsum("bsnh,nhd->bsd", y.reshape(B, S, H, hd),
+                     params["wo"].astype(dt))
+    return shard_logical(out, ("batch", None, None))
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, *, dtype=jnp.bfloat16,
+               **_) -> Dict:
+    d = cfg.d_model
+    hd = cfg.rwkv.head_dim
+    H = d // hd
+    return {
+        "state": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "shift": jnp.zeros((batch, 1, d), dtype),
+    }
+
+
+def cache_specs(cfg: ArchConfig, **_) -> Dict:
+    return {"state": ("batch", "heads", None, None),
+            "shift": ("batch", None, None)}
+
+
+def apply_decode(params, x: jax.Array, cache: Dict, pos: jax.Array,
+                 cfg: ArchConfig, **_) -> Tuple[jax.Array, Dict]:
+    B, _, d = x.shape
+    hd = cfg.rwkv.head_dim
+    H = d // hd
+    dt = x.dtype
+    r, k, v, g, log_w = _mix_projections(params, x, cache["shift"].astype(dt), cfg)
+    rf, kf, vf = (t[:, 0].astype(jnp.float32) for t in (r, k, v))  # (B,H,hd)
+    w = jnp.exp(log_w[:, 0])                           # (B,H,hd)
+    S0 = cache["state"]
+    kv = kf[..., :, None] * vf[..., None, :]           # (B,H,hd,hd)
+    y = jnp.einsum("bnh,bnhe->bne", rf, S0 + params["u"][None, :, :, None] * kv)
+    S1 = w[..., :, None] * S0 + kv
+    y = y.reshape(B, 1, d).astype(dt)
+    y = norms.rms_apply(params["out_norm"], y) * g
+    out = jnp.einsum("bsnh,nhd->bsd", y.reshape(B, 1, H, hd),
+                     params["wo"].astype(dt))
+    return out, {"state": S1, "shift": x.astype(cache["shift"].dtype)}
+
+
+def apply_prefill(params, x: jax.Array, cfg: ArchConfig, *, cache_dtype=jnp.bfloat16, **_) -> Tuple[jax.Array, Dict]:
+    """Forward + final (wkv state, shift token) as the decode cache."""
+    B, S, d = x.shape
+    hd = cfg.rwkv.head_dim
+    H = d // hd
+    dt = x.dtype
+    x_prev = jnp.zeros_like(x[:, :1])
+    r, k, v, g, log_w = _mix_projections(params, x, x_prev, cfg)
+
+    L = min(cfg.rwkv.chunk, S)
+    nch = S // L
+
+    def body(S0, inp):
+        rc, kc, vc, lwc = inp
+        y, S1 = _chunk_wkv(rc, kc, vc, lwc, params["u"], S0)
+        return S1, y
+
+    reshape = lambda t: t.reshape(B, nch, L, H, hd).swapaxes(0, 1)
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    S_last, y = jax.lax.scan(body, S0, (reshape(r), reshape(k), reshape(v),
+                                        reshape(log_w)))
+    y = y.swapaxes(0, 1).reshape(B, S, d)
+    y = norms.rms_apply(params["out_norm"], y) * g
+    out = jnp.einsum("bsnh,nhd->bsd", y.reshape(B, S, H, hd),
+                     params["wo"].astype(dt))
+    out = shard_logical(out, ("batch", None, None))
+    cache = {"state": S_last, "shift": x[:, -1:].astype(cache_dtype)}
+    return out, cache

@@ -1,0 +1,104 @@
+"""Step functions: train / prefill / decode, shared by the launcher, the
+dry-run, and the smoke tests.
+
+``make_*_step`` return pure functions of (state/params, batch) suitable for
+``jax.jit`` with in/out shardings from ``sharding.partitioning``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig, ShapeConfig
+from repro.models import transformer
+from repro.optim import adam, schedules
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adam.AdamState
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """logits (B,S,V) any dtype; labels (B,S) int32, -1 = masked.
+
+    Sharding-aware: the gold logit is picked with a fused iota-compare
+    reduction instead of ``take_along_axis`` (a gather over the
+    vocab-sharded axis would make GSPMD all-gather the logits), and the f32
+    upcast stays inside the reductions so no f32 (B,S,V) buffer
+    materializes."""
+    mask = (labels >= 0)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          len(logits.shape) - 1)
+    is_gold = vocab_iota == jnp.where(mask, labels, -1)[..., None]
+    mx = jnp.max(logits, axis=-1)
+    exp = jnp.exp(logits.astype(jnp.float32) - mx.astype(jnp.float32)[..., None])
+    logz = jnp.log(jnp.sum(exp, axis=-1)) + mx.astype(jnp.float32)
+    gold = jnp.sum(jnp.where(is_gold, logits, 0).astype(jnp.float32), axis=-1)
+    ce = (logz - gold) * mask.astype(jnp.float32)
+    return ce.sum() / jnp.maximum(mask.sum().astype(jnp.float32), 1.0)
+
+
+def loss_fn(params, cfg: ArchConfig, batch: Dict, *, remat: bool = True):
+    logits, aux = transformer.forward(
+        params, cfg,
+        tokens=batch.get("tokens"), frames=batch.get("frames"),
+        patches=batch.get("patches"), remat=remat)
+    ce = cross_entropy(logits, batch["labels"])
+    moe_w = cfg.moe.router_aux_weight if cfg.moe else 0.0
+    return ce + moe_w * aux, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ArchConfig, *, peak_lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10_000,
+                    clip_norm: float = 1.0, remat: bool = True):
+    def train_step(state: TrainState, batch: Dict):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, remat=remat), has_aux=True
+        )(state.params)
+        grads, gnorm = adam.clip_by_global_norm(grads, clip_norm)
+        lr = schedules.linear_warmup_cosine(
+            state.opt.step + 1, peak_lr=peak_lr, warmup=warmup, total=total_steps)
+        new_params, new_opt = adam.update(grads, state.opt, state.params, lr=lr)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch: Dict):
+        logits, caches = transformer.prefill(
+            params, cfg,
+            tokens=batch.get("tokens"), frames=batch.get("frames"),
+            patches=batch.get("patches"))
+        return logits, caches
+
+    return prefill_step
+
+
+def make_encode_step(cfg: ArchConfig):
+    """Encoder-only archs (hubert): full forward, no cache, no labels."""
+    def encode_step(params, batch: Dict):
+        logits, _ = transformer.forward(
+            params, cfg, tokens=batch.get("tokens"),
+            frames=batch.get("frames"), patches=batch.get("patches"))
+        return logits
+
+    return encode_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode_step(params, caches, token, pos):
+        return transformer.decode_step(params, caches, cfg, token=token, pos=pos)
+
+    return decode_step
+
+
+def init_train_state(key, cfg: ArchConfig, dtype=jnp.float32,
+                     opt_dtype=jnp.float32) -> TrainState:
+    params = transformer.init_params(key, cfg, dtype)
+    return TrainState(params=params, opt=adam.init(params, opt_dtype))

@@ -1,0 +1,281 @@
+"""Stack builder: (mixer, ffn) stages -> scanned, remat'd, sharded model.
+
+Each config stage ``(repeats, sub_pattern)`` becomes one ``lax.scan`` over
+``repeats`` with the sub_pattern's sublayers unrolled inside the (remat'd)
+body — periodic interleaves (gemma3 5:1, jamba 1:7+MoE) compile to small HLO
+while keeping per-sublayer-kind parameters exactly stacked.
+
+Three execution modes share the same parameters:
+  forward      train / encoder forward (no caches)
+  prefill      forward + return per-layer decode caches
+  decode       single-token step against caches
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (ATTN_FULL, ATTN_MLA, ATTN_SLIDING, FFN_DENSE,
+                          FFN_MOE, MAMBA, RWKV6, ArchConfig)
+from repro.models.layers import (attention, embedding, ffn, mamba, mla, moe,
+                                 norms, rwkv)
+from repro.sharding.context import shard_logical
+
+# ---------------------------------------------------------------------------
+# dispatch tables
+# ---------------------------------------------------------------------------
+_MIXERS = {
+    ATTN_FULL: attention, ATTN_SLIDING: attention, ATTN_MLA: mla,
+    MAMBA: mamba, RWKV6: rwkv,
+}
+
+
+def _mixer_kwargs(kind: str) -> Dict[str, Any]:
+    if kind in (ATTN_FULL, ATTN_SLIDING):
+        return {"sliding": kind == ATTN_SLIDING}
+    return {}
+
+
+def _ffn_init(key, cfg: ArchConfig, kind: str, dtype):
+    if kind == FFN_MOE:
+        return moe.init(key, cfg, dtype)
+    if cfg.rwkv is not None:
+        return ffn.rwkv_cmix_init(key, cfg.d_model, cfg.d_ff, dtype)
+    return ffn.swiglu_init(key, cfg.d_model, cfg.d_ff, dtype)
+
+
+def _ffn_specs(cfg: ArchConfig, kind: str):
+    if kind == FFN_MOE:
+        return moe.specs(cfg)
+    if cfg.rwkv is not None:
+        return ffn.rwkv_cmix_specs()
+    return ffn.swiglu_specs()
+
+
+# ---------------------------------------------------------------------------
+# init / specs
+# ---------------------------------------------------------------------------
+def init_sublayer(key, cfg: ArchConfig, mixer_kind: str, ffn_kind: str,
+                  dtype=jnp.float32) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": norms.rms_init(cfg.d_model, dtype),
+        "mixer": _MIXERS[mixer_kind].init(k1, cfg, dtype),
+        "norm2": norms.rms_init(cfg.d_model, dtype),
+        "ffn": _ffn_init(k2, cfg, ffn_kind, dtype),
+    }
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    keys = jax.random.split(key, len(cfg.stage_list()) + 1)
+    stages: List[Dict] = []
+    for si, (repeats, sub) in enumerate(cfg.stage_list()):
+        def one(k):
+            ks = jax.random.split(k, len(sub))
+            return {"sub": [init_sublayer(ks[i], cfg, m, f, dtype)
+                            for i, (m, f) in enumerate(sub)]}
+        stages.append(jax.vmap(one)(jax.random.split(keys[si], repeats)))
+    return {
+        "embed": embedding.init(keys[-1], cfg, dtype),
+        "stages": stages,
+        "final_norm": norms.rms_init(cfg.d_model, dtype),
+    }
+
+
+def param_specs(cfg: ArchConfig) -> Dict:
+    stages = []
+    for repeats, sub in cfg.stage_list():
+        subspecs = []
+        for m, f in sub:
+            subspecs.append({
+                "norm1": norms.rms_specs(),
+                "mixer": _MIXERS[m].specs(cfg),
+                "norm2": norms.rms_specs(),
+                "ffn": _ffn_specs(cfg, f),
+            })
+        # stacked layer axis is unsharded: prepend None to every leaf spec
+        stacked = jax.tree.map(lambda s: (None,) + tuple(s), {"sub": subspecs},
+                               is_leaf=lambda s: isinstance(s, tuple))
+        stages.append(stacked)
+    return {
+        "embed": embedding.specs(cfg),
+        "stages": stages,
+        "final_norm": norms.rms_specs(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward (train / encode)
+# ---------------------------------------------------------------------------
+def _sublayer_forward(lp, x, cfg, mixer_kind, ffn_kind):
+    aux = jnp.zeros((), jnp.float32)
+    h = norms.rms_apply(lp["norm1"], x, cfg.norm_eps)
+    h = _MIXERS[mixer_kind].apply_train(lp["mixer"], h, cfg,
+                                        **_mixer_kwargs(mixer_kind))
+    x = x + h
+    h = norms.rms_apply(lp["norm2"], x, cfg.norm_eps)
+    if ffn_kind == FFN_MOE:
+        h, aux = moe.apply(lp["ffn"], h, cfg)
+    elif cfg.rwkv is not None:
+        h = ffn.rwkv_cmix_apply(lp["ffn"], h)
+    else:
+        h = ffn.swiglu_apply(lp["ffn"], h)
+    x = x + h
+    x = shard_logical(x, ("batch", "act_seq", None))
+    return x, aux
+
+
+def forward(params, cfg: ArchConfig, *, tokens=None, frames=None,
+            patches=None, remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B,S,V), aux_loss)."""
+    x = embedding.embed(params["embed"], cfg, tokens=tokens, frames=frames,
+                        patches=patches)
+    aux_total = jnp.zeros((), jnp.float32)
+    for (repeats, sub), stage_params in zip(cfg.stage_list(), params["stages"]):
+        def body(carry, layer_params):
+            x, aux = carry
+            for i, (m, f) in enumerate(sub):
+                x, a = _sublayer_forward(layer_params["sub"][i], x, cfg, m, f)
+                aux = aux + a
+            return (x, aux), None
+
+        body_fn = jax.checkpoint(body) if remat else body
+        (x, aux_total), _ = jax.lax.scan(body_fn, (x, aux_total), stage_params)
+    x = norms.rms_apply(params["final_norm"], x, cfg.norm_eps)
+    return embedding.logits(params["embed"], cfg, x), aux_total
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+def init_caches(cfg: ArchConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> List[Dict]:
+    """Stacked per-stage caches matching the parameter layout."""
+    stages = []
+    for repeats, sub in cfg.stage_list():
+        def one(_):
+            entry = {"sub": []}
+            for m, f in sub:
+                c = {"mixer": _MIXERS[m].init_cache(
+                    cfg, batch, max_len, sliding=(m == ATTN_SLIDING),
+                    dtype=dtype)}
+                if cfg.rwkv is not None and f == FFN_DENSE:
+                    c["ffn"] = {"shift": jnp.zeros((batch, 1, cfg.d_model), dtype)}
+                else:
+                    c["ffn"] = {}
+                entry["sub"].append(c)
+            return entry
+        stages.append(jax.vmap(one)(jnp.arange(repeats)))
+    return stages
+
+
+def cache_specs(cfg: ArchConfig, *, long_context: bool) -> List[Dict]:
+    stages = []
+    for repeats, sub in cfg.stage_list():
+        subspecs = []
+        for m, f in sub:
+            c = {"mixer": _MIXERS[m].cache_specs(
+                cfg, sliding=(m == ATTN_SLIDING), long_context=long_context)}
+            if cfg.rwkv is not None and f == FFN_DENSE:
+                c["ffn"] = {"shift": ("batch", None, None)}
+            else:
+                c["ffn"] = {}
+            subspecs.append(c)
+        stacked = jax.tree.map(lambda s: (None,) + tuple(s), {"sub": subspecs},
+                               is_leaf=lambda s: isinstance(s, tuple))
+        stages.append(stacked)
+    return stages
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def _sublayer_decode(lp, lc, x, pos, cfg, mixer_kind, ffn_kind):
+    h = norms.rms_apply(lp["norm1"], x, cfg.norm_eps)
+    h, new_mixer_cache = _MIXERS[mixer_kind].apply_decode(
+        lp["mixer"], h, lc["mixer"], pos, cfg, **_mixer_kwargs(mixer_kind))
+    x = x + h
+    h = norms.rms_apply(lp["norm2"], x, cfg.norm_eps)
+    new_ffn_cache = lc["ffn"]
+    if ffn_kind == FFN_MOE:
+        h, _ = moe.apply(lp["ffn"], h, cfg)
+    elif cfg.rwkv is not None:
+        h2 = ffn.rwkv_cmix_apply(lp["ffn"], h, lc["ffn"]["shift"].astype(h.dtype))
+        new_ffn_cache = {"shift": h.astype(lc["ffn"]["shift"].dtype)}
+        h = h2
+    else:
+        h = ffn.swiglu_apply(lp["ffn"], h)
+    x = x + h
+    return x, {"mixer": new_mixer_cache, "ffn": new_ffn_cache}
+
+
+def decode_step(params, caches, cfg: ArchConfig, *, token, pos,
+                ) -> Tuple[jax.Array, List]:
+    """token: (B, 1) int32; pos: scalar.  Returns (logits (B,1,V), caches)."""
+    x = embedding.embed(params["embed"], cfg, tokens=token)
+    new_stages = []
+    for (repeats, sub), sp, sc in zip(cfg.stage_list(), params["stages"], caches):
+        def body(x, inp):
+            layer_params, layer_cache = inp
+            new_sub = []
+            for i, (m, f) in enumerate(sub):
+                x, nc = _sublayer_decode(layer_params["sub"][i],
+                                         layer_cache["sub"][i], x, pos, cfg, m, f)
+                new_sub.append(nc)
+            return x, {"sub": new_sub}
+
+        x, new_cache = jax.lax.scan(body, x, (sp, sc))
+        new_stages.append(new_cache)
+    x = norms.rms_apply(params["final_norm"], x, cfg.norm_eps)
+    return embedding.logits(params["embed"], cfg, x), new_stages
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+def _sublayer_prefill(lp, x, cfg, mixer_kind, ffn_kind, cache_len, cache_dtype):
+    h = norms.rms_apply(lp["norm1"], x, cfg.norm_eps)
+    h, mixer_cache = _MIXERS[mixer_kind].apply_prefill(
+        lp["mixer"], h, cfg, cache_len=cache_len, cache_dtype=cache_dtype,
+        **_mixer_kwargs(mixer_kind))
+    x = x + h
+    h = norms.rms_apply(lp["norm2"], x, cfg.norm_eps)
+    ffn_cache = {}
+    if ffn_kind == FFN_MOE:
+        h, _ = moe.apply(lp["ffn"], h, cfg)
+    elif cfg.rwkv is not None:
+        ffn_cache = {"shift": h[:, -1:].astype(cache_dtype)}
+        h = ffn.rwkv_cmix_apply(lp["ffn"], h)
+    else:
+        h = ffn.swiglu_apply(lp["ffn"], h)
+    x = x + h
+    x = shard_logical(x, ("batch", None, None))
+    return x, {"mixer": mixer_cache, "ffn": ffn_cache}
+
+
+def prefill(params, cfg: ArchConfig, *, tokens=None, frames=None,
+            patches=None, remat: bool = True, max_len: int = 0,
+            cache_dtype=jnp.bfloat16) -> Tuple[jax.Array, List]:
+    """Full-sequence forward returning (last-token logits, decode caches).
+    ``max_len``: cache capacity (>= prompt len + planned decode steps)."""
+    x = embedding.embed(params["embed"], cfg, tokens=tokens, frames=frames,
+                        patches=patches)
+    cache_len = max(max_len, x.shape[1])
+    new_stages = []
+    for (repeats, sub), sp in zip(cfg.stage_list(), params["stages"]):
+        def body(x, layer_params):
+            new_sub = []
+            for i, (m, f) in enumerate(sub):
+                x, c = _sublayer_prefill(layer_params["sub"][i], x, cfg, m, f,
+                                         cache_len, cache_dtype)
+                new_sub.append(c)
+            return x, {"sub": new_sub}
+
+        body_fn = jax.checkpoint(body) if remat else body
+        x, cache = jax.lax.scan(body_fn, x, sp)
+        new_stages.append(cache)
+    x = norms.rms_apply(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    return embedding.logits(params["embed"], cfg, x), new_stages

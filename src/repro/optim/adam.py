@@ -1,0 +1,64 @@
+"""AdamW, pure-JAX, with sharded states (each moment inherits its parameter's
+PartitionSpec, so FSDP/TP sharding extends to the optimizer for free)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def init(params, dtype=jnp.float32) -> AdamState:
+    zeros = lambda p: jnp.zeros(p.shape, dtype)
+    return AdamState(step=jnp.zeros((), jnp.int32),
+                     m=jax.tree.map(zeros, params),
+                     v=jax.tree.map(zeros, params))
+
+
+def update(
+    grads, state: AdamState, params,
+    *, lr: jax.Array | float, b1: float = 0.9, b2: float = 0.95,
+    eps: float = 1e-8, weight_decay: float = 0.1,
+) -> Tuple[Any, AdamState]:
+    step = state.step + 1
+    sf = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** sf
+    bc2 = 1.0 - b2 ** sf
+
+    def upd(g, m, v, p):
+        gf = g.astype(m.dtype)
+        m2 = b1 * m + (1.0 - b1) * gf
+        v2 = b2 * v + (1.0 - b2) * jnp.square(gf)
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(m.dtype)
+        return (p - lr * delta.astype(p.dtype)).astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamState(step=step, m=new_m, v=new_v)
+
+
+def global_norm(grads) -> jax.Array:
+    leaves = jax.tree.leaves(grads)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm

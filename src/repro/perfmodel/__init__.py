@@ -1,0 +1,4 @@
+from repro.perfmodel.skydiver import (HardwareConfig, LayerPerf, NetPerf,
+                                      XC7Z045, simulate_network)
+
+__all__ = ["HardwareConfig", "LayerPerf", "NetPerf", "XC7Z045", "simulate_network"]

@@ -1,0 +1,92 @@
+"""Fault tolerance for long-running training (DESIGN §5).
+
+``ResilientLoop`` wraps a step function with:
+  * periodic async checkpoints (atomic, elastic-restorable);
+  * automatic resume from the latest checkpoint on (re)start;
+  * bounded retry on transient step failures — on TPU fleets these are
+    preemptions/ICI flaps surfaced as XlaRuntimeError; the recovery path is
+    restore-from-last-checkpoint and replay;
+  * a failure budget: more than ``max_failures`` within ``window`` steps
+    escalates (raises) so the cluster scheduler can reschedule the job.
+
+The loop is deliberately synchronous-SPMD-shaped: on a real fleet every host
+runs it identically; checkpoint/restore are collective-free here because
+payloads are gathered (see checkpoint.Checkpointer).
+"""
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterator, List, Optional, Tuple
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+log = logging.getLogger("repro.runtime")
+
+
+@dataclass
+class LoopConfig:
+    checkpoint_every: int = 100
+    max_failures: int = 3
+    failure_window: int = 1000          # steps
+    max_steps: int = 1000
+
+
+@dataclass
+class LoopStats:
+    resumed_from: Optional[int] = None
+    failures: List[Tuple[int, str]] = field(default_factory=list)
+    steps_done: int = 0
+    step_times: List[float] = field(default_factory=list)
+
+
+class ResilientLoop:
+    def __init__(self, step_fn: Callable[[Any, Any], Tuple[Any, Any]],
+                 ckpt: Checkpointer, cfg: LoopConfig):
+        self.step_fn = step_fn
+        self.ckpt = ckpt
+        self.cfg = cfg
+        self.stats = LoopStats()
+
+    def run(self, state: Any, batches: Iterator[Any],
+            start_step: int = 0,
+            on_metrics: Optional[Callable[[int, Any], None]] = None) -> Any:
+        # resume if a newer checkpoint exists
+        latest = self.ckpt.latest_step()
+        if latest is not None and latest > start_step:
+            state = self.ckpt.restore(latest, state)
+            start_step = latest
+            self.stats.resumed_from = latest
+            log.info("resumed from checkpoint step %d", latest)
+
+        step = start_step
+        while step < self.cfg.max_steps:
+            batch = next(batches)
+            t0 = time.perf_counter()
+            try:
+                state, metrics = self.step_fn(state, batch)
+            except Exception as e:  # noqa: BLE001 — transient device failures
+                self.stats.failures.append((step, repr(e)))
+                recent = [s for s, _ in self.stats.failures
+                          if s > step - self.cfg.failure_window]
+                if len(recent) > self.cfg.max_failures:
+                    raise RuntimeError(
+                        f"failure budget exceeded at step {step}") from e
+                latest = self.ckpt.latest_step()
+                if latest is not None:
+                    self.ckpt.wait()
+                    state = self.ckpt.restore(latest, state)
+                    step = latest
+                    log.warning("step %d failed (%r); rolled back to %d",
+                                step, e, latest)
+                continue
+            self.stats.step_times.append(time.perf_counter() - t0)
+            step += 1
+            self.stats.steps_done += 1
+            if on_metrics is not None:
+                on_metrics(step, metrics)
+            if step % self.cfg.checkpoint_every == 0:
+                self.ckpt.save(step, state)
+        self.ckpt.save(step, state, blocking=True)
+        return state

@@ -1,0 +1,65 @@
+"""Straggler detection + mitigation hooks.
+
+In synchronous SPMD training the step time is the MAX over hosts — one slow
+host drags the fleet, exactly the lane-imbalance problem Skydiver solves at
+SPE granularity (the balance-ratio math is identical: fleet efficiency =
+mean(host_time)/max(host_time)).
+
+``StragglerMonitor`` keeps an EWMA + variance per host and flags hosts whose
+step time departs by ``z_thresh`` sigma.  Mitigations are pluggable; the
+built-in one re-runs CBWS over the *measured* per-host work to produce a
+rebalanced lane assignment — i.e. the paper's scheduler reused as a
+cluster-level straggler mitigation (see tests/test_runtime.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.balance import balance_ratio
+from repro.core.cbws import cbws_partition
+
+
+@dataclass
+class HostStat:
+    ewma: float = 0.0
+    var: float = 0.0
+    n: int = 0
+
+
+class StragglerMonitor:
+    def __init__(self, num_hosts: int, alpha: float = 0.1,
+                 z_thresh: float = 3.0):
+        self.alpha = alpha
+        self.z = z_thresh
+        self.stats: List[HostStat] = [HostStat() for _ in range(num_hosts)]
+
+    def record(self, host_times: Sequence[float]) -> List[int]:
+        """Feed one step's per-host times; returns indices flagged slow."""
+        flagged = []
+        for i, t in enumerate(host_times):
+            s = self.stats[i]
+            if s.n == 0:
+                s.ewma, s.var = t, 0.0
+            else:
+                d = t - s.ewma
+                s.ewma += self.alpha * d
+                s.var = (1 - self.alpha) * (s.var + self.alpha * d * d)
+            s.n += 1
+        fleet_mean = float(np.mean([s.ewma for s in self.stats]))
+        fleet_std = float(np.std([s.ewma for s in self.stats])) + 1e-9
+        for i, s in enumerate(self.stats):
+            if s.n >= 3 and (s.ewma - fleet_mean) / fleet_std > self.z:
+                flagged.append(i)
+        return flagged
+
+    def fleet_balance(self) -> float:
+        return balance_ratio([s.ewma for s in self.stats])
+
+
+def rebalance_lanes(measured_work: Sequence[float], num_lanes: int):
+    """CBWS over measured work — the paper's Algorithm 1 reused to re-pack
+    work units (channels, experts, shards) away from slow lanes."""
+    return cbws_partition(measured_work, num_lanes)

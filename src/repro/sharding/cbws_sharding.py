@@ -1,0 +1,63 @@
+"""CBWS-driven placement for the distributed layer (DESIGN §2).
+
+Two applications of the paper's scheduler at mesh granularity:
+
+1. ``snn_channel_permutation`` — permute SNN conv output channels so each
+   `model`-axis shard owns a contiguous, workload-balanced channel group
+   (the chip-level version of the SPE-cluster assignment).  Equal group
+   sizes are required by sharding, so the equal-size CBWS variant is used.
+
+2. ``expert_placement`` — permute the MoE expert axis so each expert-parallel
+   shard owns a load-balanced expert *group*.  Expert load plays the role of
+   channel spikerate; like APRC, it is predicted offline — either from router
+   statistics of a profiling run, or (before any data) uniformly.  Without
+   this, shards striped with hot experts bottleneck the MoE all-reduce
+   exactly like Skydiver's hot channels bottleneck an SPE.
+
+Both produce plain permutations applied to the weight pytree once at load
+time — zero runtime overhead, the paper's key property.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import numpy as np
+
+from repro.core.cbws import Partition, cbws_partition_equal
+from repro.core.balance import measure_balance
+
+__all__ = ["expert_placement", "snn_channel_permutation", "placement_balance"]
+
+
+def expert_placement(expert_loads: Sequence[float], num_shards: int) -> np.ndarray:
+    """Permutation of the expert axis: experts of shard j occupy the
+    contiguous block [j*E/N, (j+1)*E/N) after permutation."""
+    p = cbws_partition_equal(np.asarray(expert_loads, dtype=np.float64),
+                             num_shards)
+    return p.permutation()
+
+
+def snn_channel_permutation(filter_magnitudes: Sequence[float],
+                            num_shards: int) -> np.ndarray:
+    w = np.maximum(np.asarray(filter_magnitudes, dtype=np.float64), 0.0)
+    return cbws_partition_equal(w, num_shards).permutation()
+
+
+def placement_balance(loads: Sequence[float], perm: np.ndarray,
+                      num_shards: int) -> float:
+    """Balance ratio achieved by a contiguous-block placement under ``perm``."""
+    loads = np.asarray(loads, dtype=np.float64)[perm]
+    groups = np.array_split(np.arange(len(loads)), num_shards)
+    lane = [loads[g].sum() for g in groups]
+    mx = max(lane)
+    return float(np.mean(lane) / mx) if mx > 0 else 1.0
+
+
+def apply_expert_permutation(moe_params: Dict, perm: np.ndarray) -> Dict:
+    """Permute the expert axis of a single MoE layer's params + its router
+    columns, preserving the network function exactly."""
+    out = dict(moe_params)
+    out["router"] = moe_params["router"][:, perm]
+    for k in ("w_gate", "w_up", "w_down"):
+        out[k] = moe_params[k][perm]
+    return out

@@ -1,0 +1,181 @@
+"""Sharding context: thread (mesh, logical rules) to layer code without
+plumbing it through every call signature.
+
+Layers call ``shard_logical(x, ("batch", None, "ffn"))``; if no context is
+active (unit tests, single device) it is a no-op.  Rules resolve logical axis
+names to mesh axes with divisibility checks, so one set of layer annotations
+serves every (arch x mesh) combination.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+# logical axis -> tuple of mesh axes (in sharding priority order)
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "experts": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ffn": ("model",),
+    "vocab": ("model",),
+    "fsdp": ("data",),          # FSDP / ZeRO-3 dimension for big-model training
+    "seq_data": ("data",),      # sequence sharding (long-context decode cache)
+    "seq_model": ("model",),    # sequence parallelism variant
+    "cache_seq": (),            # decode-cache seq axis; set per cell (launch/cells.py)
+    "act_seq": (),              # layer-boundary activation seq sharding (SP)
+}
+
+# Named parallelism profiles (EXPERIMENTS §Perf). A profile is just a rules
+# override — the model code is untouched; re-mapping logical axes re-plans
+# the whole collective schedule.
+RULE_PROFILES: Dict[str, Dict[str, Tuple[str, ...]]] = {
+    # Megatron-style TP(model) x DP(data) + FSDP over data — the baseline.
+    "tp_fsdp": dict(DEFAULT_RULES),
+    # Pure data parallelism over every mesh axis with replicated weights and
+    # ZeRO-1 sharded optimizer states — right-sizes small archs whose TP=16
+    # collective term dwarfs their per-chip compute.
+    "dp_zero1": {
+        "batch": ("pod", "data", "model"),
+        "experts": (), "heads": (), "kv_heads": (), "ffn": (), "vocab": (),
+        "fsdp": (),
+        "opt": ("data", "model"),        # optimizer-state-only sharding
+        "seq_data": ("data",), "seq_model": ("model",),
+    },
+    # 2D expert parallelism: experts fully sharded over (model x data),
+    # tokens dispatched by all-to-all — no per-layer expert-weight gathers.
+    "ep2d": {
+        "batch": ("pod", "data"),
+        "experts": ("model", "data"),
+        "heads": ("model",), "kv_heads": ("model",), "ffn": ("model",),
+        "vocab": ("model",),
+        "fsdp": (),
+        "opt": ("data",),
+        "seq_data": ("data",), "seq_model": ("model",),
+    },
+    # EP + ZeRO-DP, no tensor parallelism (the DeepSeek-V3 recipe): batch is
+    # sharded over EVERY mesh axis (1 sequence per chip at train_4k),
+    # attention/dense weights ZeRO-3 sharded over (data x model) and gathered
+    # per layer (~0.3 GB/layer vs the ~14 GB/layer of Megatron activation
+    # all-reduces they replace); experts stay 2D-EP with fp8 a2a dispatch.
+    "ep2d_zero": {
+        "batch": ("pod", "data", "model"),
+        "experts": ("model", "data"),
+        "heads": (), "kv_heads": (), "ffn": (),
+        "vocab": (),
+        "fsdp": ("data", "model"),
+        "opt": ("pod",),
+        "seq_data": ("data",), "seq_model": ("model",),
+    },
+    # Sequence parallelism + 2D EP + ZeRO-3: layer-boundary activations are
+    # sequence-sharded over `model`; attention/dense weights are stored fully
+    # sharded over (data x model) and gathered per layer — the per-layer
+    # weight all-gather (~hundreds of MB) replaces per-layer activation
+    # all-reduces (~GBs) when tokens*d >> layer params (deepseek-v3 train).
+    "sp_ep2d": {
+        "batch": ("pod", "data"),
+        "experts": ("model", "data"),
+        "heads": (), "kv_heads": (), "ffn": (),
+        "vocab": ("model",),
+        "fsdp": ("data", "model"),
+        "opt": ("data",),
+        "act_seq": ("model",),
+        "seq_data": ("data",), "seq_model": ("model",),
+    },
+    # Serving: weights live model-sharded and replicated across data — decode
+    # must never re-gather weights per step.
+    "serve": {
+        "batch": ("pod", "data"),
+        "experts": ("model",),
+        "heads": ("model",), "kv_heads": ("model",), "ffn": ("model",),
+        "vocab": ("model",),
+        "fsdp": (),
+        "seq_data": ("data",), "seq_model": ("model",),
+    },
+    # Serving with 2D-EP MoE (dsv3-scale: expert weights don't fit a single
+    # model-axis shard).
+    "serve_ep2d": {
+        "batch": ("pod", "data"),
+        "experts": ("model", "data"),
+        "heads": ("model",), "kv_heads": ("model",), "ffn": ("model",),
+        "vocab": ("model",),
+        "fsdp": (),
+        "seq_data": ("data",), "seq_model": ("model",),
+    },
+}
+
+
+def make_rules(profile: str) -> Dict[str, Tuple[str, ...]]:
+    return dict(RULE_PROFILES[profile])
+
+
+class ShardingCtx:
+    def __init__(self, mesh: Mesh, rules: Optional[Dict[str, Tuple[str, ...]]] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES if rules is None else rules)
+
+    def axes_for(self, logical: Optional[str]) -> Tuple[str, ...]:
+        if logical is None:
+            return ()
+        axes = self.rules.get(logical, ())
+        return tuple(a for a in axes if a in self.mesh.axis_names)
+
+    def pspec(self, logical: Sequence[Optional[str]],
+              dims: Optional[Sequence[int]] = None) -> P:
+        """Resolve logical names to a PartitionSpec, dropping axes whose
+        product does not divide the corresponding dim.  A mesh axis may be
+        claimed by at most one dim (left-to-right priority) — later dims
+        silently lose contested axes."""
+        entries = []
+        used: set = set()
+        for i, name in enumerate(logical):
+            axes = tuple(a for a in self.axes_for(name) if a not in used)
+            if not axes:
+                entries.append(None)
+                continue
+            if dims is not None:
+                while axes and dims[i] % int(
+                        np.prod([self.mesh.shape[a] for a in axes])) != 0:
+                    axes = axes[:-1]
+                if not axes:
+                    entries.append(None)
+                    continue
+            used.update(axes)
+            entries.append(axes[0] if len(axes) == 1 else tuple(axes))
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def sharding(self, logical: Sequence[Optional[str]],
+                 dims: Optional[Sequence[int]] = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.pspec(logical, dims))
+
+
+def current_ctx() -> Optional[ShardingCtx]:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding(ctx: Optional[ShardingCtx]):
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _state.ctx = prev
+
+
+def shard_logical(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint against the active context (no-op without)."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, ctx.sharding(logical, x.shape))

@@ -1,0 +1,104 @@
+"""Build concrete NamedSharding trees for pjit in/out_shardings.
+
+Logical specs live next to each layer's ``init`` (see models/layers/*);
+this module resolves them against a mesh + shape tree (divisibility-aware,
+via ``ShardingCtx.pspec``), for params, optimizer state, batches and caches.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ArchConfig, ShapeConfig
+from repro.models import transformer
+from repro.models.lm import TrainState
+from repro.optim import adam
+from repro.sharding.context import ShardingCtx
+
+BATCH_SPEC = ("batch", None)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def sharding_tree(ctx: ShardingCtx, spec_tree: Any, shape_tree: Any):
+    """tree of logical tuples x tree of ShapeDtypeStruct -> NamedShardings."""
+    return jax.tree.map(
+        lambda spec, shp: NamedSharding(ctx.mesh, ctx.pspec(spec, shp.shape)),
+        spec_tree, shape_tree,
+        is_leaf=lambda x: _is_spec(x))
+
+
+def param_shapes(cfg: ArchConfig, dtype=jnp.float32):
+    return jax.eval_shape(
+        lambda: transformer.init_params(jax.random.PRNGKey(0), cfg, dtype))
+
+
+def param_shardings(ctx: ShardingCtx, cfg: ArchConfig, dtype=jnp.float32):
+    return sharding_tree(ctx, transformer.param_specs(cfg),
+                         param_shapes(cfg, dtype))
+
+
+def _opt_specs(ctx: ShardingCtx, pspecs, pshapes):
+    """Adam moments share the parameter layout, except under ZeRO-1 profiles
+    ("opt" rule present): moments of replicated params get their first
+    divisible dim sharded over the opt axes — optimizer-state-only sharding."""
+    opt_axes = ctx.rules.get("opt", ())
+    opt_axes = tuple(a for a in opt_axes if a in ctx.mesh.axis_names)
+    if not opt_axes:
+        return pspecs
+
+    import numpy as np
+    n_opt = int(np.prod([ctx.mesh.shape[a] for a in opt_axes]))
+
+    def one(spec, shp):
+        spec = tuple(spec)
+        # already sharded dims stay; find first unsharded divisible dim
+        resolved = ctx.pspec(spec, shp.shape)
+        entries = list(resolved) + [None] * (len(shp.shape) - len(resolved))
+        for i, dim in enumerate(shp.shape):
+            if entries[i] is None and dim % n_opt == 0:
+                new = list(spec)
+                new[i] = "opt"
+                return tuple(new)
+        return spec
+
+    return jax.tree.map(one, pspecs, pshapes,
+                        is_leaf=lambda x: _is_spec(x))
+
+
+def train_state_shardings(ctx: ShardingCtx, cfg: ArchConfig,
+                          dtype=jnp.float32, opt_dtype=jnp.float32):
+    pspecs = transformer.param_specs(cfg)
+    pshapes = param_shapes(cfg, dtype)
+    p_sh = sharding_tree(ctx, pspecs, pshapes)
+    oshapes = jax.eval_shape(lambda: adam.init(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), pshapes), opt_dtype))
+    ospecs = _opt_specs(ctx, pspecs, pshapes)
+    m_sh = sharding_tree(ctx, ospecs, oshapes.m)
+    v_sh = sharding_tree(ctx, ospecs, oshapes.v)
+    step_sh = NamedSharding(ctx.mesh, P())
+    return TrainState(params=p_sh,
+                      opt=adam.AdamState(step=step_sh, m=m_sh, v=v_sh))
+
+
+def batch_shardings(ctx: ShardingCtx, batch_shapes: Dict[str, Any]):
+    return {
+        k: NamedSharding(ctx.mesh, ctx.pspec(
+            ("batch",) + (None,) * (len(v.shape) - 1), v.shape))
+        for k, v in batch_shapes.items()
+    }
+
+
+def cache_shardings(ctx: ShardingCtx, cfg: ArchConfig, cache_shapes,
+                    *, long_context: bool):
+    specs = transformer.cache_specs(cfg, long_context=long_context)
+    return sharding_tree(ctx, specs, cache_shapes)
+
+
+def replicated(ctx: ShardingCtx):
+    return NamedSharding(ctx.mesh, P())

@@ -1,0 +1,78 @@
+"""APRC tests — including the exact Eq. (5) factorization identity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import get_snn
+from repro.core import aprc
+from repro.core.snn_layers import conv2d
+from repro.core.snn_model import init_snn, snn_apply
+
+
+@given(st.integers(1, 4), st.integers(4, 10), st.integers(1, 3),
+       st.integers(1, 8), st.integers(0, 1000))
+@settings(max_examples=50, deadline=None)
+def test_eq5_exact_factorization(b, h, cin, cout, seed):
+    """Paper Eq. (5): with full padding + stride 1, the spatial sum of each
+    output channel equals (filter magnitude) x (input sum), exactly."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.uniform(k1, (b, h, h, cin))
+    w = jax.random.normal(k2, (3, 3, cin, cout))
+    out = conv2d(x, w, aprc=True)                      # full padding
+    per_channel = np.asarray(out.sum(axis=(0, 1, 2)), np.float64)
+    # Exact identity: sum_xy out_n = sum_i (sum_jk w_n[i]) * (sum_bxy x_i)
+    x_sums = np.asarray(x.sum(axis=(0, 1, 2)), np.float64)
+    w_np = np.asarray(w, np.float64)
+    expected = np.einsum("ic,c->i", w_np.sum(axis=(0, 1)).T, x_sums)
+    np.testing.assert_allclose(per_channel, expected, rtol=1e-4)
+
+
+def test_eq5_fails_without_aprc():
+    """SAME padding breaks the factorization (the paper's motivation)."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.uniform(key, (2, 8, 8, 3))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 3, 4))
+    out = conv2d(x, w, aprc=False)
+    per_channel = np.asarray(out.sum(axis=(0, 1, 2)), np.float64)
+    x_sums = np.asarray(x.sum(axis=(0, 1, 2)), np.float64)
+    expected = np.einsum("ic,c->i", np.asarray(w, np.float64).sum(axis=(0, 1)).T, x_sums)
+    assert not np.allclose(per_channel, expected, rtol=1e-3)
+
+
+def test_paper_example_ratio():
+    """Fig. 4(c): two filters with magnitudes 2.7 and 0.9 produce dV sums
+    in exactly 3:1 ratio on any input."""
+    key = jax.random.PRNGKey(3)
+    x = jax.random.uniform(key, (1, 8, 8, 1))
+    w1 = jnp.full((3, 3, 1, 1), 2.7 / 9.0)
+    w2 = jnp.full((3, 3, 1, 1), 0.9 / 9.0)
+    w = jnp.concatenate([w1, w2], axis=-1)
+    out = conv2d(x, w, aprc=True)
+    sums = out.sum(axis=(0, 1, 2))
+    np.testing.assert_allclose(float(sums[0] / sums[1]), 3.0, rtol=1e-5)
+
+
+def test_aprc_improves_spike_magnitude_correlation():
+    """Fig. 6 reproduction at unit scale: Spearman(spikes, magnitudes) is
+    high with APRC and materially lower without."""
+    import dataclasses
+    cfg = get_snn("snn-mnist")
+    cfg_small = dataclasses.replace(cfg, conv_channels=(12, 16), dense_units=(10,),
+                                    timesteps=6)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.uniform(jax.random.PRNGKey(9), (8, 28, 28, 1))
+
+    corrs = {}
+    for mode in (True, False):
+        c = dataclasses.replace(cfg_small, aprc=mode)
+        params = init_snn(key, c)
+        out = snn_apply(params, x, c)
+        # layer 1's input channels are layer 0's outputs
+        mags = np.maximum(aprc.filter_magnitudes(params["conv"][1]["w"]), 0.0)
+        counts = np.asarray(out.spike_counts[1])
+        corrs[mode] = aprc.proportionality(mags, counts)["spearman"]
+    assert corrs[True] > 0.55, corrs
+    assert corrs[True] >= corrs[False] - 0.05, corrs

@@ -1,0 +1,98 @@
+"""CBWS (Algorithm 1) unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.balance import balance_ratio, measure_balance
+from repro.core.cbws import (cbws_partition, cbws_partition_equal,
+                             greedy_lpt_partition, naive_partition,
+                             partition_sums)
+
+workloads = st.lists(st.floats(0.0, 1048576.0, allow_nan=False, width=32),
+                     min_size=1, max_size=200)
+
+
+@given(workloads, st.integers(1, 16))
+@settings(max_examples=200, deadline=None)
+def test_partition_is_exact_cover(w, n):
+    p = cbws_partition(w, n)
+    all_idx = sorted(i for g in p.groups for i in g)
+    assert all_idx == list(range(len(w)))
+    assert p.num_groups == n
+
+
+@given(workloads, st.integers(1, 16))
+@settings(max_examples=100, deadline=None)
+def test_permutation_is_valid(w, n):
+    p = cbws_partition(w, n)
+    perm = p.permutation()
+    assert sorted(perm.tolist()) == list(range(len(w)))
+
+
+@given(st.lists(st.floats(0.0078125, 1024.0, allow_nan=False, width=32),
+                min_size=8, max_size=128),
+       st.integers(2, 8))
+@settings(max_examples=100, deadline=None)
+def test_cbws_never_worse_than_2x_optimal(w, n):
+    """Makespan of CBWS <= 2 * LPT lower bound (greedy-class guarantee)."""
+    p = cbws_partition(w, n)
+    sums = partition_sums(p, w)
+    lower = max(np.max(w), np.sum(w) / n)   # classic makespan lower bound
+    assert sums.max() <= 2.0 * lower + 1e-6
+
+
+@given(st.lists(st.floats(0.0078125, 1024.0, allow_nan=False, width=32),
+                min_size=16, max_size=64).filter(lambda w: len(w) % 4 == 0))
+@settings(max_examples=100, deadline=None)
+def test_equal_size_variant_has_equal_sizes(w):
+    p = cbws_partition_equal(w, 4)
+    sizes = p.group_sizes()
+    assert (sizes == len(w) // 4).all()
+    all_idx = sorted(i for g in p.groups for i in g)
+    assert all_idx == list(range(len(w)))
+
+
+def test_cbws_beats_naive_on_skewed_workloads():
+    rng = np.random.default_rng(0)
+    wins = 0
+    for trial in range(50):
+        w = rng.lognormal(0.0, 2.0, 64)   # heavy-tailed like spike counts
+        cb = measure_balance(cbws_partition(w, 8), w)
+        nv = measure_balance(naive_partition(64, 8), w)
+        wins += cb >= nv
+    assert wins >= 45, f"CBWS won only {wins}/50"
+
+
+def test_cbws_close_to_lpt():
+    """Algorithm 1 is not LPT-optimal, but stays in its neighborhood."""
+    rng = np.random.default_rng(1)
+    cbs, lpts = [], []
+    for _ in range(20):
+        w = rng.lognormal(0.0, 1.5, 48)
+        cb = measure_balance(cbws_partition(w, 6), w)
+        lpt = measure_balance(greedy_lpt_partition(w, 6), w)
+        assert cb >= lpt - 0.2, (cb, lpt)
+        cbs.append(cb)
+        lpts.append(lpt)
+    assert np.mean(cbs) >= np.mean(lpts) - 0.05
+
+
+def test_paper_band_balance_ratio():
+    """With a good workload predictor, CBWS reaches the paper's >90% band."""
+    rng = np.random.default_rng(2)
+    ratios = []
+    for _ in range(20):
+        w = rng.lognormal(0.0, 1.0, 32)
+        ratios.append(measure_balance(cbws_partition(w, 4), w))
+    assert np.mean(ratios) > 0.9, np.mean(ratios)
+
+
+def test_degenerate_cases():
+    p = cbws_partition([5.0], 4)
+    assert sorted(i for g in p.groups for i in g) == [0]
+    p = cbws_partition([1.0, 1.0, 1.0, 1.0], 4)
+    assert all(len(g) == 1 for g in p.groups)
+    with pytest.raises(ValueError):
+        cbws_partition([1.0], 0)
+    with pytest.raises(ValueError):
+        cbws_partition_equal([1.0, 2.0, 3.0], 2)

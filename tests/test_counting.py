@@ -1,0 +1,52 @@
+"""Analytic param counts must match actual initialized trees exactly."""
+import jax
+import pytest
+
+from repro.config import get_arch, list_archs, reduced
+from repro.models import transformer
+from repro.models.counting import count_params, step_flops
+from repro.config import SHAPES_BY_NAME
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_count_matches_init(arch):
+    cfg = reduced(get_arch(arch))
+    params = jax.eval_shape(
+        lambda: transformer.init_params(jax.random.PRNGKey(0), cfg))
+    actual = sum(int(l.size) for l in jax.tree.leaves(params))
+    analytic = count_params(cfg)
+    assert actual == analytic, (arch, actual, analytic, actual - analytic)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_active_leq_total(arch):
+    cfg = get_arch(arch)
+    assert count_params(cfg, active_only=True) <= count_params(cfg)
+
+
+def test_full_size_params_in_expected_band():
+    """Full configs land near their nameplate sizes."""
+    bands = {
+        "deepseek-v3-671b": (600e9, 720e9),
+        "deepseek-moe-16b": (14e9, 20e9),
+        "jamba-v0.1-52b": (48e9, 56e9),
+        "rwkv6-7b": (6e9, 9e9),
+        "gemma3-4b": (3e9, 5.5e9),
+        "gemma3-27b": (25e9, 30e9),
+        "qwen2.5-3b": (2.7e9, 3.8e9),
+        "command-r-35b": (28e9, 40e9),  # assigned dims sum to 30.3B
+        "pixtral-12b": (11e9, 14e9),
+        "hubert-xlarge": (0.8e9, 1.3e9),
+    }
+    for arch, (lo, hi) in bands.items():
+        n = count_params(get_arch(arch))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"
+
+
+def test_flops_scale_with_shape():
+    cfg = get_arch("qwen2.5-3b")
+    f_train = step_flops(cfg, SHAPES_BY_NAME["train_4k"])
+    f_decode = step_flops(cfg, SHAPES_BY_NAME["decode_32k"])
+    assert f_train["fwd"] > f_decode["fwd"] * 100
+    # 6ND lower bound is within ~2.5x of exact fwd matmul count
+    assert f_train["fwd"] * 3 >= f_train["model_6nd"] * 0.4

@@ -1,0 +1,106 @@
+"""Pallas kernel sweeps vs the pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cbws
+from repro.kernels import ops, ref
+from repro.kernels.spiking_conv import row_block_counts
+
+CONV_CASES = [
+    # B, H, W, Cin, Cout, R, aprc, block_rows, groups
+    (2, 8, 8, 3, 8, 3, True, 4, 2),
+    (1, 28, 28, 1, 16, 3, True, 8, 4),
+    (3, 10, 12, 4, 12, 5, True, 4, 3),
+    (2, 8, 8, 3, 8, 3, False, 4, 2),
+    (1, 7, 9, 2, 6, 3, True, 4, 3),     # ragged rows
+    (1, 16, 16, 8, 32, 3, True, 8, 8),
+    (2, 12, 12, 6, 9, 3, False, 4, 9),  # group = single channel (SPE-like)
+]
+
+
+@pytest.mark.parametrize("case", CONV_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_spiking_conv_matches_ref(case, dtype):
+    b, h, w_, cin, cout, r, aprc, br, g = case
+    key = jax.random.PRNGKey(hash(case) % 2**31)
+    ks = jax.random.split(key, 3)
+    spikes = (jax.random.uniform(ks[0], (b, h, w_, cin)) < 0.15).astype(dtype)
+    w = (jax.random.normal(ks[1], (r, r, cin, cout)) * 0.2).astype(dtype)
+    bias = (jax.random.normal(ks[2], (cout,)) * 0.01).astype(dtype)
+    out = ops.spiking_conv(spikes, w, bias, aprc=aprc, block_rows=br,
+                           num_groups=g, interpret=True)
+    want = ref.spiking_conv_ref(spikes, w, bias, aprc=aprc)
+    assert out.shape == want.shape
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_spiking_conv_zero_input_emits_bias():
+    """Spatio-temporal skip path: all-zero spikes exercise pl.when(count==0)."""
+    spikes = jnp.zeros((2, 8, 8, 3), jnp.float32)
+    w = jnp.ones((3, 3, 3, 4), jnp.float32)
+    bias = jnp.arange(4, dtype=jnp.float32)
+    out = ops.spiking_conv(spikes, w, bias, aprc=True, block_rows=4,
+                           num_groups=2, interpret=True)
+    want = jnp.broadcast_to(bias, out.shape)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want))
+
+
+def test_row_block_counts_match_manual():
+    key = jax.random.PRNGKey(0)
+    x = (jax.random.uniform(key, (2, 13, 9, 3)) < 0.3).astype(jnp.float32)
+    r, br, nb = 3, 4, 3
+    counts = np.asarray(row_block_counts(x, r, br, nb))
+    xs = np.asarray(x)
+    for b in range(2):
+        for i in range(nb):
+            lo, hi = i * br, min(i * br + br + r - 1, 13)
+            assert counts[b, i] == xs[b, lo:hi].sum()
+
+
+def test_cbws_permuted_weights_same_result():
+    """Kernel + CBWS permutation == reference on unpermuted weights after
+    inverse-permuting the output channels (scheduling never changes math)."""
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 3)
+    spikes = (jax.random.uniform(ks[0], (2, 8, 8, 4)) < 0.2).astype(jnp.float32)
+    w = jax.random.normal(ks[1], (3, 3, 4, 8)) * 0.3
+    bias = jax.random.normal(ks[2], (8,)) * 0.1
+    mags = np.asarray(jnp.abs(w).sum(axis=(0, 1, 2)))
+    perm = cbws.cbws_partition_equal(mags, 4).permutation()
+    out_perm = ops.spiking_conv(spikes, w[..., perm], bias[perm],
+                                aprc=True, num_groups=4, interpret=True)
+    want = ref.spiking_conv_ref(spikes, w, bias, aprc=True)
+    np.testing.assert_allclose(np.asarray(out_perm),
+                               np.asarray(want[..., perm]), atol=1e-4)
+
+
+LIF_CASES = [(8, 128), (10, 200), (1, 1), (17, 300), (64, 512)]
+
+
+@pytest.mark.parametrize("shape", LIF_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lif_fused_matches_ref(shape, dtype):
+    key = jax.random.PRNGKey(shape[0])
+    v = jax.random.normal(key, shape).astype(dtype)
+    z = jax.random.normal(jax.random.PRNGKey(1), shape).astype(dtype)
+    v2, s2 = ops.lif_fused(v, z, 1.0, interpret=True)
+    vr, sr = ref.lif_fused_ref(v, z, 1.0)
+    np.testing.assert_allclose(np.asarray(v2, np.float32),
+                               np.asarray(vr, np.float32), atol=1e-2)
+    np.testing.assert_allclose(np.asarray(s2, np.float32),
+                               np.asarray(sr, np.float32))
+
+
+def test_lif_fused_threshold_sweep():
+    v = jnp.linspace(-2, 2, 64).reshape(8, 8)
+    z = jnp.zeros((8, 8))
+    for vth in (0.5, 1.0, 2.0):
+        v2, s2 = ops.lif_fused(v, z, vth, interpret=True)
+        vr, sr = ref.lif_fused_ref(v, z, vth)
+        np.testing.assert_allclose(np.asarray(v2), np.asarray(vr), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(s2), np.asarray(sr))

@@ -1,0 +1,88 @@
+"""Data pipeline, HLO analyzer, sharding context, CBWS-sharding units."""
+import numpy as np
+import pytest
+
+from repro.data import synthetic
+from repro.data.pipeline import Prefetcher
+from repro.launch.hlo_analysis import analyze_collectives
+from repro.sharding.cbws_sharding import (expert_placement, placement_balance,
+                                          snn_channel_permutation)
+
+
+def test_token_batches_shapes_and_vocab():
+    it = synthetic.token_batches(vocab=100, batch=4, seq=16)
+    b = next(it)
+    assert b["tokens"].shape == (4, 16) and b["labels"].shape == (4, 16)
+    assert b["tokens"].max() < 100 and b["tokens"].min() >= 0
+
+
+def test_mnist_like():
+    x, y = synthetic.mnist_like(16, seed=1)
+    assert x.shape == (16, 28, 28, 1) and y.shape == (16,)
+    assert 0 <= x.min() and x.max() <= 1.0
+    assert len(np.unique(y)) > 3
+
+
+def test_road_like():
+    x, m = synthetic.road_like(4)
+    assert x.shape == (4, 80, 160, 3) and m.shape == (4, 80, 160, 1)
+    assert set(np.unique(m)) <= {0.0, 1.0}
+    assert m.mean() > 0.05           # the mask is not empty
+
+
+def test_prefetcher_orders_and_stops():
+    def gen():
+        for i in range(5):
+            yield {"i": np.asarray(i)}
+    pf = Prefetcher(gen(), depth=2)
+    got = [int(b["i"]) for b in pf]
+    assert got == [0, 1, 2, 3, 4]
+
+
+def test_hlo_analyzer_synthetic():
+    hlo = """
+HloModule test, num_partitions=8
+
+%body.1 (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %g = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %ar = f32[8,8]{1,0} all-reduce(%g), replica_groups=[2,4]<=[8], to_apply=%add.2
+  ROOT %t = (s32[], f32[8,8]{1,0}) tuple(%g, %ar)
+}
+
+%cond.1 (p: (s32[], f32[8,8])) -> pred[] {
+  %p2 = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p2), index=0
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %t0 = (s32[], f32[8,8]{1,0}) tuple(%a, %a)
+  %w = (s32[], f32[8,8]{1,0}) while(%t0), condition=%cond.1, body=%body.1
+  %ag = f32[64,8]{1,0} all-gather(%a), replica_groups=[1,8]<=[8], dimensions={0}
+  ROOT %r = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+    st = analyze_collectives(hlo)
+    # body all-reduce: 8*8*4 = 256 B x 7 trips
+    assert st.payload_bytes["all-reduce"] == 256 * 7
+    assert st.payload_bytes["all-gather"] == 256
+    assert st.count["all-reduce"] == 7
+
+
+def test_expert_placement_balances_hot_experts():
+    rng = np.random.default_rng(0)
+    loads = rng.lognormal(0, 1.5, 64)
+    perm = expert_placement(loads, 8)
+    assert sorted(perm.tolist()) == list(range(64))
+    bal = placement_balance(loads, perm, 8)
+    naive = placement_balance(loads, np.arange(64), 8)
+    assert bal > naive and bal > 0.85, (bal, naive)
+
+
+def test_snn_channel_permutation_negative_clamped():
+    mags = np.array([-1.0, 2.0, 0.5, 3.0])
+    perm = snn_channel_permutation(mags, 2)
+    assert sorted(perm.tolist()) == [0, 1, 2, 3]

@@ -1,0 +1,61 @@
+"""Optimizer, schedules, gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import adam, schedules
+from repro.optim.compression import (compress, compress_with_error_feedback,
+                                     decompress, ef_init)
+
+
+def test_adam_minimizes_quadratic():
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = adam.init(params)
+    target = jnp.array([1.0, 1.0])
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        params, state = adam.update(grads, state, params, lr=0.05,
+                                    weight_decay=0.0)
+    np.testing.assert_allclose(np.asarray(params["w"]), [1.0, 1.0], atol=1e-2)
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = adam.clip_by_global_norm(grads, 1.0)
+    assert float(norm) > 1.0
+    np.testing.assert_allclose(float(adam.global_norm(clipped)), 1.0, rtol=1e-5)
+
+
+def test_schedule_warmup_then_decay():
+    lrs = [float(schedules.linear_warmup_cosine(
+        jnp.asarray(s), peak_lr=1e-3, warmup=10, total=100)) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1e-3 + 1e-9
+    assert lrs[99] < lrs[50] < lrs[12]
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_compression_error_bounded(seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (64,)) * 10.0
+    q, s = compress(x)
+    err = np.abs(np.asarray(decompress(q, s) - x))
+    assert err.max() <= float(s) * 0.5 + 1e-6   # round-to-nearest bound
+
+
+def test_error_feedback_unbiased_over_time():
+    """With EF, the accumulated transmitted signal tracks the true sum."""
+    rng = np.random.default_rng(0)
+    grads_true = [jnp.asarray(rng.normal(0, 1, 32), jnp.float32)
+                  for _ in range(50)]
+    ef = ef_init({"g": grads_true[0]})
+    sent_total = np.zeros(32)
+    for g in grads_true:
+        qtree, ef = compress_with_error_feedback({"g": g}, ef)
+        q, s = qtree["g"]
+        sent_total += np.asarray(decompress(q, s))
+    true_total = np.sum([np.asarray(g) for g in grads_true], axis=0)
+    resid = np.asarray(ef.residual["g"])
+    np.testing.assert_allclose(sent_total + resid, true_total, atol=1e-3)

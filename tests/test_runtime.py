@@ -1,0 +1,94 @@
+"""Fault tolerance + straggler mitigation."""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core.balance import balance_ratio
+from repro.runtime.fault_tolerance import LoopConfig, ResilientLoop
+from repro.runtime.straggler import StragglerMonitor, rebalance_lanes
+
+
+def _batches():
+    return itertools.repeat({"x": 1.0})
+
+
+def test_loop_runs_and_checkpoints(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=5)
+
+    def step(state, batch):
+        return {"w": state["w"] + 1.0}, {"loss": float(state["w"])}
+
+    loop = ResilientLoop(step, ck, LoopConfig(checkpoint_every=3, max_steps=10))
+    out = loop.run({"w": jnp.zeros(())}, _batches())
+    assert float(out["w"]) == 10.0
+    ck.wait()
+    assert 10 in ck.all_steps()
+
+
+def test_loop_recovers_from_transient_failure(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=5)
+    fail_at = {7}
+
+    def step(state, batch):
+        s = int(state["w"])
+        if s + 1 in fail_at:
+            fail_at.clear()           # transient: fails once
+            raise RuntimeError("simulated preemption")
+        return {"w": state["w"] + 1.0}, {}
+
+    loop = ResilientLoop(step, ck, LoopConfig(checkpoint_every=2, max_steps=10))
+    out = loop.run({"w": jnp.zeros(())}, _batches())
+    assert float(out["w"]) == 10.0
+    assert len(loop.stats.failures) == 1
+
+
+def test_loop_escalates_after_budget(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=5)
+
+    def step(state, batch):
+        raise RuntimeError("hard failure")
+
+    loop = ResilientLoop(step, ck, LoopConfig(checkpoint_every=2, max_steps=10,
+                                              max_failures=2))
+    with pytest.raises(RuntimeError, match="failure budget"):
+        loop.run({"w": jnp.zeros(())}, _batches())
+
+
+def test_loop_resumes_from_checkpoint(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=5)
+
+    def step(state, batch):
+        return {"w": state["w"] + 1.0}, {}
+
+    loop = ResilientLoop(step, ck, LoopConfig(checkpoint_every=2, max_steps=6))
+    loop.run({"w": jnp.zeros(())}, _batches())
+    ck.wait()
+    # "restart the job": fresh loop resumes at step 6, runs to 9
+    loop2 = ResilientLoop(step, ck, LoopConfig(checkpoint_every=2, max_steps=9))
+    out = loop2.run({"w": jnp.zeros(())}, _batches())
+    assert loop2.stats.resumed_from == 6
+    assert float(out["w"]) == 9.0
+
+
+def test_straggler_monitor_flags_slow_host():
+    mon = StragglerMonitor(num_hosts=8, z_thresh=2.0)
+    rng = np.random.default_rng(0)
+    flagged = []
+    for step in range(30):
+        times = rng.normal(1.0, 0.02, 8)
+        times[3] = 1.5 if step > 10 else times[3]   # host 3 degrades
+        flagged = mon.record(times)
+    assert flagged == [3]
+    assert mon.fleet_balance() < 0.95
+
+
+def test_rebalance_restores_balance():
+    work = np.r_[np.full(28, 1.0), [9.0, 7.0, 5.0, 3.0]]
+    before = balance_ratio([w.sum() for w in np.array_split(work, 4)])
+    p = rebalance_lanes(work, 4)
+    after = balance_ratio([sum(work[i] for i in g) for g in p.groups])
+    assert after > before
+    assert after > 0.9
