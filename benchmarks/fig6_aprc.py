@@ -24,7 +24,7 @@ def run(batch: int = 16, timesteps: int = 12):
         cfg = dataclasses.replace(cfg0, aprc=mode, timesteps=timesteps)
         params = init_snn(jax.random.PRNGKey(0), cfg)
         t0 = time.perf_counter()
-        out = snn_apply(params, imgs, cfg)
+        out = snn_apply(params, imgs, cfg, backend="batched")
         jax.block_until_ready(out.logits)
         dt = time.perf_counter() - t0
         for l in range(1, len(cfg.conv_channels)):

@@ -1,10 +1,22 @@
 """Benchmark harness — one module per paper table/figure (+ kernel micro
 benches and the dry-run roofline summary).  Prints ``name,us_per_call,
-derived`` CSV as required."""
+derived`` CSV as required.
+
+Modes:
+  (default)          every section, quick-sized workloads
+  --full             every section, full-sized workloads
+  --quick            kernel + model-forward section only, and write
+                     ``BENCH_kernels.json`` (name -> us_per_call/derived)
+                     so successive PRs accumulate a perf trajectory
+                     (consumed by scripts/smoke.sh).
+"""
 from __future__ import annotations
 
+import json
 import os
 import sys
+
+BENCH_JSON = "BENCH_kernels.json"
 
 
 def _roofline_rows():
@@ -25,25 +37,40 @@ def _roofline_rows():
 
 
 def main() -> None:
-    quick = "--full" not in sys.argv
-    from benchmarks import (bench_kernels, fig6_aprc, fig7_balance,
-                            table1_throughput, table2_resources)
-    sections = [
-        ("fig6", lambda: fig6_aprc.run()),
-        ("fig7", lambda: fig7_balance.run(quick=quick)),
-        ("table1", lambda: table1_throughput.run(quick=quick)),
-        ("table2", lambda: table2_resources.run()),
-        ("kernels", lambda: bench_kernels.run()),
-        ("roofline", _roofline_rows),
-    ]
+    quick = "--quick" in sys.argv
+    full = "--full" in sys.argv
+    from benchmarks import bench_kernels
+    if quick:
+        sections = [("kernels", lambda: bench_kernels.run())]
+    else:
+        from benchmarks import (fig6_aprc, fig7_balance, table1_throughput,
+                                table2_resources)
+        sections = [
+            ("fig6", lambda: fig6_aprc.run()),
+            ("fig7", lambda: fig7_balance.run(quick=not full)),
+            ("table1", lambda: table1_throughput.run(quick=not full)),
+            ("table2", lambda: table2_resources.run()),
+            ("kernels", lambda: bench_kernels.run()),
+            ("roofline", _roofline_rows),
+        ]
+    collected = []
     print("name,us_per_call,derived")
     for tag, fn in sections:
         try:
             for r in fn():
+                collected.append(r)
                 print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}",
                       flush=True)
         except Exception as e:  # noqa: BLE001 — report, keep harness alive
             print(f"{tag}/ERROR,0.0,{type(e).__name__}:{e}", flush=True)
+    if quick:
+        payload = {r["name"]: {"us_per_call": round(r["us_per_call"], 1),
+                               "derived": r["derived"]}
+                   for r in collected}
+        with open(BENCH_JSON, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {BENCH_JSON} ({len(payload)} entries)", flush=True)
 
 
 if __name__ == "__main__":

@@ -28,7 +28,8 @@ from repro.perfmodel import XC7Z045, simulate_network
 def _perf_for(cfg, frames, timesteps):
     cfg = dataclasses.replace(cfg, timesteps=timesteps)
     params = init_snn(jax.random.PRNGKey(0), cfg)
-    out = snn_apply(params, frames, cfg)
+    # time-batched backend: same spike statistics, ~1.7x faster to collect
+    out = snn_apply(params, frames, cfg, backend="batched")
     b, h, w, c = frames.shape
     per_layer = [np.full((timesteps, c), float(h * w) / c)]  # per-frame
     for l in range(len(cfg.conv_channels) - 1):

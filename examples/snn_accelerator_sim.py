@@ -23,7 +23,7 @@ from repro.perfmodel import XC7Z045, simulate_network
 
 
 def measure(cfg, params, frames):
-    out = snn_apply(params, frames, cfg)
+    out = snn_apply(params, frames, cfg, backend="batched")
     b, h, w, c = frames.shape
     per_layer = [np.full((cfg.timesteps, c), float(b * h * w) / c)]
     for l in range(len(cfg.conv_channels) - 1):

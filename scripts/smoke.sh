@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Smoke gate: fast tier-1 tests (slow-marked system/LM suites excluded by
+# pytest.ini) + the quick kernel/model-forward bench, which refreshes
+# BENCH_kernels.json so every PR leaves a perf-trajectory data point.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 (fast) tests =="
+python -m pytest -x -q
+
+echo "== quick bench -> BENCH_kernels.json =="
+python -m benchmarks.run --quick
+
+echo "== smoke OK =="

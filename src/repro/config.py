@@ -186,6 +186,8 @@ def get_arch(name: str) -> ArchConfig:
 
 def get_snn(name: str) -> SNNConfig:
     _ensure_loaded()
+    if name not in _SNN_REGISTRY:
+        raise KeyError(f"unknown SNN {name!r}; have {sorted(_SNN_REGISTRY)}")
     return _SNN_REGISTRY[name]
 
 

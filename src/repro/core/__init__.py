@@ -17,7 +17,8 @@ from repro.core.cbws import (Partition, cbws_partition, greedy_lpt_partition,
 from repro.core.encoding import direct_encode, poisson_encode
 from repro.core.neuron import LIFState, lif_init, lif_over_time, lif_step
 from repro.core.scheduler import LayerSchedule, build_schedule, permute_conv_params
-from repro.core.snn_model import SNNOutputs, init_snn, layer_shapes, snn_apply
+from repro.core.snn_model import (SNN_BACKENDS, SNNOutputs, init_snn,
+                                  layer_shapes, snn_apply)
 from repro.core.surrogate import spike_fn
 
 __all__ = [
@@ -27,5 +28,6 @@ __all__ = [
     "partition_sums", "direct_encode", "poisson_encode",
     "LIFState", "lif_init", "lif_over_time", "lif_step",
     "LayerSchedule", "build_schedule", "permute_conv_params",
-    "SNNOutputs", "init_snn", "layer_shapes", "snn_apply", "spike_fn",
+    "SNN_BACKENDS", "SNNOutputs", "init_snn", "layer_shapes", "snn_apply",
+    "spike_fn",
 ]

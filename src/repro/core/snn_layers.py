@@ -53,8 +53,23 @@ def init_dense(key, din: int, dout: int, dtype=jnp.float32) -> Dict:
 def spiking_conv_step(
     params: Dict, state: LIFState, spikes_in: jax.Array,
     *, aprc: bool, v_th: float, surrogate_alpha: float = 10.0,
+    backend: str = "ref", num_groups: int = 1,
 ) -> Tuple[LIFState, jax.Array]:
-    """One timestep: synaptic current (Eq. 2) then LIF update (Eq. 1+3)."""
+    """One timestep: synaptic current (Eq. 2) then LIF update (Eq. 1+3).
+
+    ``backend="ref"`` is the differentiable XLA path (surrogate gradient).
+    ``backend="pallas"`` runs the fused conv+LIF kernel
+    (``kernels.spiking_conv_lif``) with T=1 — one HBM round trip for the
+    membrane, no materialized synaptic current; forward-only (Heaviside).
+    """
+    if backend == "pallas":
+        from repro.kernels import ops
+        s, v = ops.spiking_conv_lif(
+            spikes_in[None], state.v, params["w"], params["b"],
+            v_th=float(v_th), aprc=aprc, num_groups=num_groups)
+        return LIFState(v=v), s[0]
+    if backend != "ref":  # pragma: no cover
+        raise ValueError(f"unknown backend {backend!r}")
     z = conv2d(spikes_in, params["w"], aprc=aprc) + params["b"]
     return lif_step(state, z, v_th=v_th, surrogate_alpha=surrogate_alpha)
 

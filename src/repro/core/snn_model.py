@@ -3,11 +3,28 @@
   classification : 28x28-16c-32c-8c-10   (MNIST, §IV)
   segmentation   : 160x80x3-8C3-16C3-32C3-32C3-16C3-1C3-160x80x1 (MLND-Capstone)
 
-Execution: ``lax.scan`` over ``T`` timesteps; every conv layer is a spiking
-LIF layer; the head (dense classifier / final conv mask) accumulates membrane
-potential without firing — standard readout.  The scan carry additionally
-accumulates per-layer per-output-channel **spike counts**, which is the
-actual-workload signal consumed by CBWS/balance evaluation (paper Fig. 2/7).
+Two execution orders, selected by ``snn_apply(..., backend=...)``:
+
+``backend="ref"`` (timestep-outer, the seed path): ``lax.scan`` over ``T``
+timesteps; every conv layer is a spiking LIF layer; the head (dense
+classifier / final conv mask) accumulates membrane potential without firing.
+Differentiable via the surrogate gradient — this is the training path.
+
+``backend="batched"`` / ``backend="pallas"`` (layer-outer, time-batched):
+each layer processes the **whole (T, B) spatio-temporal block** before the
+next layer starts (FireFly v2, arXiv 2309.16158).  The convolution is
+time-invariant, so it runs once over the folded ``T*B`` batch; only the
+cheap elementwise LIF recurrence scans over ``T``.  Direct-coded input is
+constant over ``T``, so the first-layer conv is hoisted out of the time loop
+entirely — computed once and reused for all ``T`` steps.  ``"batched"``
+stays in XLA ops (the fast CPU path); ``"pallas"`` dispatches the fused
+``spiking_conv_lif`` kernel per layer (time loop inside the kernel, membrane
+in registers, (T,B,row-block) spike-skip table; see docs/kernels.md).
+
+Both orders compute the same math; outputs agree to float tolerance.  The
+scan carry / layer pipeline additionally accumulates per-layer per-channel
+**spike counts**, the actual-workload signal consumed by CBWS/balance
+evaluation (paper Fig. 2/7).
 
 With APRC on, spatial dims grow by ``R-1`` per conv layer ("full" conv); the
 segmentation head center-crops back to the label resolution, which leaves the
@@ -15,16 +32,21 @@ workload factorization of Eq. (5) untouched.
 """
 from __future__ import annotations
 
-from typing import Dict, List, NamedTuple, Tuple
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import SNNConfig
 from repro.core import snn_layers as L
 from repro.core.neuron import LIFState, lif_init
+from repro.core.surrogate import spike_fn
 
-__all__ = ["init_snn", "snn_apply", "SNNOutputs", "layer_shapes"]
+__all__ = ["init_snn", "snn_apply", "SNNOutputs", "layer_shapes",
+           "SNN_BACKENDS"]
+
+SNN_BACKENDS = ("ref", "batched", "pallas")
 
 
 class SNNOutputs(NamedTuple):
@@ -62,9 +84,25 @@ def init_snn(key: jax.Array, cfg: SNNConfig) -> Dict:
 
 
 def snn_apply(params: Dict, frames: jax.Array, cfg: SNNConfig,
-              *, surrogate_alpha: float = 10.0) -> SNNOutputs:
+              *, surrogate_alpha: float = 10.0, backend: str = "ref",
+              schedule: Optional[Sequence] = None) -> SNNOutputs:
     """frames: (B, H, W, Cin) analog input in [0,1] (direct coding) or a
-    pre-encoded spike train (T, B, H, W, Cin)."""
+    pre-encoded spike train (T, B, H, W, Cin).
+
+    backend: "ref" (timestep-outer scan, differentiable), "batched"
+    (time-batched layer pipeline, XLA ops) or "pallas" (time-batched with
+    the fused conv+LIF Pallas kernel).  ``schedule`` (a
+    ``core.scheduler.build_schedule`` result, built outside jit) routes the
+    pallas backend through CBWS-permuted weights; outputs are reported in
+    canonical channel order regardless.
+    """
+    if backend in ("batched", "pallas"):
+        return _apply_time_batched(
+            params, frames, cfg, surrogate_alpha=surrogate_alpha,
+            use_pallas=(backend == "pallas"), schedule=schedule)
+    if backend != "ref":
+        raise ValueError(
+            f"unknown backend {backend!r}; expected one of {SNN_BACKENDS}")
     if frames.ndim == 4:
         z_in = jnp.broadcast_to(frames[None], (cfg.timesteps,) + frames.shape)
     else:
@@ -134,6 +172,187 @@ def snn_apply(params: Dict, frames: jax.Array, cfg: SNNConfig,
         spike_counts=tuple(counts),
         spike_totals=tuple(c.sum() for c in counts),
         timestep_counts=tuple(t_counts),
+    )
+
+
+def _lif_scan(z_seq: jax.Array, v_th: float,
+              alpha: float) -> Tuple[jax.Array, jax.Array]:
+    """LIF recurrence over a precomputed current train z_seq: (T, B, ...).
+
+    Returns (spike train (T, ...), per-step channel counts (T, C)).
+
+    Two deliberate CPU-perf choices, both measured on the jitted model
+    forward: ``lax.scan`` (not unrolling — a T-deep unrolled elementwise
+    chain regressed the forward ~30%), and the channel-count reduction
+    *inside* the scan body, where it fuses with the spike computation (a
+    separate post-hoc reduction over the stacked train forced extra
+    materializations and roughly doubled the whole-model time)."""
+    def body(v, z):
+        v = v + z
+        s = spike_fn(v - v_th, alpha)
+        return v - v_th * s, (s, s.sum(axis=tuple(range(s.ndim - 1))))
+
+    _, (s_seq, cnt) = jax.lax.scan(body, jnp.zeros_like(z_seq[0]), z_seq)
+    return s_seq, cnt
+
+
+def _lif_scan_const(z: jax.Array, t: int, v_th: float,
+                    alpha: float) -> Tuple[jax.Array, jax.Array]:
+    """LIF recurrence with a time-constant current (hoisted first layer)."""
+    def body(v, _):
+        v = v + z
+        s = spike_fn(v - v_th, alpha)
+        return v - v_th * s, (s, s.sum(axis=tuple(range(s.ndim - 1))))
+
+    _, (s_seq, cnt) = jax.lax.scan(body, jnp.zeros_like(z), None, length=t)
+    return s_seq, cnt
+
+
+def _conv_xla(x: jax.Array, p: Dict, aprc: bool) -> jax.Array:
+    """Synaptic-current conv, XLA path.  For single-channel input (the
+    direct-coded grayscale frame) XLA:CPU's conv is pathologically slow, so
+    the R*R-tap implicit GEMM — the same formulation the Pallas kernel
+    uses — is dispatched instead (~5x faster, identical math)."""
+    w = p["w"]
+    r, _, cin, cout = w.shape
+    if cin > 1:
+        return L.conv2d(x, w, aprc=aprc) + p["b"]
+    b_, h, w_in = x.shape[0], x.shape[1], x.shape[2]
+    if aprc:
+        pad_lo = pad_hi = r - 1                       # full conv
+    else:
+        pad_lo = (r - 1) // 2                         # SAME
+        pad_hi = r - 1 - pad_lo
+    e_h = h + pad_lo + pad_hi - r + 1
+    e_w = w_in + pad_lo + pad_hi - r + 1
+    xp = jnp.pad(x, ((0, 0), (pad_lo, pad_hi), (pad_lo, pad_hi), (0, 0)))
+    taps = []
+    for dy in range(r):
+        for dx in range(r):
+            taps.append(jax.lax.dynamic_slice(
+                xp, (0, dy, dx, 0), (b_, e_h, e_w, cin)))
+    patches = jnp.concatenate(taps, axis=-1)          # (B, E, E', R*R*Cin)
+    wm = w.reshape(r * r * cin, cout)
+    z = patches.reshape(b_ * e_h * e_w, r * r * cin) @ wm
+    return z.reshape(b_, e_h, e_w, cout) + p["b"]
+
+
+def _conv_folded(x_seq: jax.Array, p: Dict, cfg: SNNConfig,
+                 use_pallas: bool, num_groups: int) -> jax.Array:
+    """Time-batched synaptic current: fold (T, B) -> T*B and convolve once.
+
+    The fold puts the full spatio-temporal workload on the kernel's batch
+    grid axis, so its spike-count skip table covers (T x B x row-blocks).
+    """
+    t, b = x_seq.shape[:2]
+    x = x_seq.reshape((t * b,) + x_seq.shape[2:])
+    if use_pallas:
+        from repro.kernels import ops
+        z = ops.spiking_conv(x, p["w"], p["b"], aprc=cfg.aprc,
+                             num_groups=num_groups)
+    else:
+        z = _conv_xla(x, p, cfg.aprc)
+    return z.reshape((t, b) + z.shape[1:])
+
+
+def _kernel_groups(cout: int, cfg: SNNConfig) -> int:
+    """Largest lane count <= num_spe_clusters that divides Cout."""
+    return max(g for g in range(1, cfg.num_spe_clusters + 1)
+               if cout % g == 0)
+
+
+def _apply_time_batched(params: Dict, frames: jax.Array, cfg: SNNConfig,
+                        *, surrogate_alpha: float, use_pallas: bool,
+                        schedule: Optional[Sequence]) -> SNNOutputs:
+    """Layer-outer execution: each layer consumes the whole (T, B) block.
+
+    Equivalent math to the timestep-outer scan (backend="ref"), reordered:
+      * direct-coded input is constant over T -> the first-layer conv is
+        computed ONCE and reused for all T steps (T-fold conv saving);
+      * deeper layers convolve the folded (T*B) spike train in one call;
+      * only the elementwise LIF recurrence scans over T;
+      * the classifier readout is one folded matmul instead of T.
+    """
+    T = cfg.timesteps
+    hoist = frames.ndim == 4
+    if hoist:
+        B = frames.shape[0]
+    else:
+        T, B = frames.shape[0], frames.shape[1]
+    n_conv = len(cfg.conv_channels)
+    shapes = layer_shapes(cfg)
+    head_dim = cfg.dense_units[-1] if cfg.dense_units else None
+    v_th = cfg.v_threshold
+
+    inv_perms: List[Optional[np.ndarray]] = [None] * n_conv
+    if use_pallas and schedule is not None:
+        from repro.core.scheduler import permute_conv_params
+        params = permute_conv_params(params, list(schedule))
+        inv_perms = [np.argsort(s.out_perm) for s in schedule]
+
+    counts_t: List[jax.Array] = []      # per layer (T, Cout)
+    x = frames                          # (B,...) analog | (T,B,...) spikes
+    v_out = None
+    for i in range(n_conv):
+        p = params["conv"][i]
+        cout = p["w"].shape[-1]
+        groups = _kernel_groups(cout, cfg)
+        if i == n_conv - 1 and head_dim is None:
+            # segmentation: non-firing conv readout — membrane accumulates
+            if hoist and i == 0:        # degenerate single-layer net
+                x = jnp.broadcast_to(x[None], (T,) + x.shape)
+                hoist = False
+            z = _conv_folded(x, p, cfg, use_pallas, groups)
+            v_traj = jnp.cumsum(z.astype(jnp.float32), axis=0)
+            s_metric = (v_traj >= v_th).astype(z.dtype)
+            cnt = s_metric.sum(axis=(1, 2, 3))
+            v_out = v_traj[-1].astype(z.dtype)
+        elif hoist and i == 0:
+            # direct coding: input constant over T -> conv once, reuse
+            if use_pallas:
+                from repro.kernels import ops
+                z1 = ops.spiking_conv(x, p["w"], p["b"], aprc=cfg.aprc,
+                                      num_groups=groups)
+            else:
+                z1 = _conv_xla(x, p, cfg.aprc)
+            s, cnt = _lif_scan_const(z1, T, v_th, surrogate_alpha)
+            x = s
+        else:
+            if use_pallas:
+                from repro.kernels import ops
+                e_h, e_w, _ = shapes[i]
+                v0 = jnp.zeros((B, e_h, e_w, cout), x.dtype)
+                s, _ = ops.spiking_conv_lif(
+                    x, v0, p["w"], p["b"], v_th=float(v_th), aprc=cfg.aprc,
+                    num_groups=groups)
+                cnt = s.sum(axis=(1, 2, 3))
+            else:
+                z = _conv_folded(x, p, cfg, use_pallas, groups)
+                s, cnt = _lif_scan(z, v_th, surrogate_alpha)
+            x = s
+        if inv_perms[i] is not None:
+            cnt = cnt[:, inv_perms[i]]
+        counts_t.append(cnt.astype(jnp.float32))
+
+    if head_dim is not None:
+        x = x.reshape(T, B, -1)
+        for j, dp in enumerate(params["dense"][:-1]):
+            z = x.reshape(T * B, -1) @ dp["w"] + dp["b"]
+            x, _ = _lif_scan(z.reshape(T, B, -1), v_th, surrogate_alpha)
+        dp = params["dense"][-1]
+        z = (x.reshape(T * B, -1) @ dp["w"] + dp["b"]).reshape(T, B, -1)
+        v_out = z.sum(axis=0)           # readout accumulates, never fires
+    elif cfg.aprc:
+        h0, w0 = cfg.input_hw
+        H, W = v_out.shape[1], v_out.shape[2]
+        dh, dw = (H - h0) // 2, (W - w0) // 2
+        v_out = v_out[:, dh:dh + h0, dw:dw + w0, :]
+
+    return SNNOutputs(
+        logits=v_out / cfg.timesteps,
+        spike_counts=tuple(c.sum(axis=0) for c in counts_t),
+        spike_totals=tuple(c.sum() for c in counts_t),
+        timestep_counts=tuple(counts_t),
     )
 
 

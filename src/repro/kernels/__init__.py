@@ -1,3 +1,8 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the paper's hot path (see docs/kernels.md).
+
+  spiking_conv      spike-driven conv, implicit GEMM + spatio-temporal skip
+  lif               fused LIF update (integrate/fire/reset, one round trip)
+  spiking_conv_lif  conv+LIF fused across all T timesteps (the hot path)
+  ops               jit'd public wrappers (auto interpret-mode off-TPU)
+  ref               pure-jnp oracles (the allclose targets)
+"""

@@ -4,6 +4,12 @@ Naively, Eq. (1)+(3) is three elementwise HBM round trips
 (v+=z; s=v>=th; v-=th*s).  This kernel fuses them into one read of (v, z)
 and one write of (v', s) per tile — the memory-bound term drops ~2.5x.
 
+``z`` here is still a materialized synaptic-current tensor; the layer-level
+fusion that never writes dV to HBM at all (and keeps ``v`` in registers
+across all T timesteps) is ``kernels/spiking_conv_lif.py`` — this kernel
+remains the building block for timestep-streaming callers and non-conv
+layers.  See docs/kernels.md for the memory-traffic model.
+
 Tiles are (block_rows, block_cols) over a 2-D flattened view; block_cols
 should be a multiple of 128 (VPU lane width), block_rows a multiple of 8.
 """

@@ -13,8 +13,10 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.lif import lif_fused_pallas
 from repro.kernels.spiking_conv import spiking_conv_pallas
+from repro.kernels.spiking_conv_lif import spiking_conv_lif_pallas
 
-__all__ = ["spiking_conv", "lif_fused", "default_interpret"]
+__all__ = ["spiking_conv", "lif_fused", "spiking_conv_lif",
+           "default_interpret"]
 
 
 def default_interpret() -> bool:
@@ -60,6 +62,25 @@ def lif_fused(
                             block_cols=block_cols, interpret=interpret)
 
 
+def spiking_conv_lif(
+    spikes: jax.Array, v0: jax.Array, w: jax.Array, bias: jax.Array,
+    *, v_th: float = 1.0, aprc: bool = True, block_rows: int = 8,
+    num_groups: int = 4, interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused conv+LIF over a whole spike train (see kernels.spiking_conv_lif).
+
+    spikes: (T, B, H, W, Cin);  v0: (B, E, E', Cout).  Returns the output
+    spike train and final membrane, matching the composition
+    ``ref.spiking_conv_ref`` + ``ref.lif_fused_ref`` scanned over T.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return spiking_conv_lif_pallas(
+        spikes, v0, w, bias, v_th=float(v_th), aprc=aprc,
+        block_rows=block_rows, num_groups=num_groups, interpret=interpret)
+
+
 # re-export oracles for test convenience
 spiking_conv_ref = ref.spiking_conv_ref
 lif_fused_ref = ref.lif_fused_ref
+spiking_conv_lif_ref = ref.spiking_conv_lif_ref

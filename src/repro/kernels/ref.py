@@ -6,7 +6,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["spiking_conv_ref", "lif_fused_ref"]
+__all__ = ["spiking_conv_ref", "lif_fused_ref", "spiking_conv_lif_ref"]
 
 
 def spiking_conv_ref(spikes: jax.Array, w: jax.Array, b: jax.Array,
@@ -32,3 +32,21 @@ def lif_fused_ref(v: jax.Array, z: jax.Array, v_th: float
     s = (vf >= v_th).astype(v.dtype)
     v_new = (vf - v_th * s.astype(jnp.float32)).astype(v.dtype)
     return v_new, s
+
+
+def spiking_conv_lif_ref(spikes: jax.Array, v0: jax.Array, w: jax.Array,
+                         b: jax.Array, *, v_th: float = 1.0,
+                         aprc: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for the fused conv+LIF kernel: the explicit composition of
+    ``spiking_conv_ref`` and ``lif_fused_ref`` scanned over the time axis.
+
+    spikes: (T, B, H, W, Cin);  v0: (B, E, E', Cout).
+    Returns (spike train (T, B, E, E', Cout), final membrane).
+    """
+    def step(v, s_t):
+        z = spiking_conv_ref(s_t, w, b, aprc=aprc).astype(jnp.float32)
+        v, s = lif_fused_ref(v, z, v_th)
+        return v, s
+
+    v_final, s_seq = jax.lax.scan(step, v0, spikes)
+    return s_seq, v_final

@@ -11,8 +11,22 @@ TPU-native adaptation of Skydiver's event-driven SPE array (DESIGN §2/§6):
     (the "4 streams" of a SPE, generalized).
   * spatio-temporal skip: a scalar-prefetch table ``counts[b, i]`` holds the
     spike population of the input rows feeding row-block i of image b
-    (b folds batch x timestep).  ``pl.when(count == 0)`` skips the whole
-    tile — the block-granular analogue of the paper's per-spike skip.
+    (b folds **batch x timestep** — callers running the time-batched layer
+    pipeline fold ``(T, B) -> T*B`` so the skip table covers the full
+    spatio-temporal workload of paper Fig. 2).  ``pl.when(count == 0)``
+    skips the whole tile — the block-granular analogue of the paper's
+    per-spike skip.
+
+Memory-traffic model (per grid cell, halo BlockSpec):
+
+  * input block: ``(block_rows + R - 1) x W_pad x Cin`` — only the halo
+    rows feeding this output row-block are loaded (``pl.unblocked``
+    element-offset indexing).  Before this fix every one of the
+    ``n_blocks x num_groups`` cells re-read the entire padded image, an
+    ``n_blocks x num_groups``-fold overread; now total input traffic is
+    ``~(1 + (R-1)/block_rows) x num_groups`` image reads.
+  * weights: one ``(R, R, Cin, Cout/num_groups)`` tap block per cell.
+  * output: each dV element is written exactly once.
 
 Weights arrive already CBWS-permuted (see core.scheduler); the kernel sees
 only equal-size contiguous channel groups.
@@ -47,14 +61,14 @@ def _make_kernel(r: int, block_rows: int, w_out: int):
 
         @pl.when(counts_ref[b, i] != 0)
         def _compute():
-            x = x_ref[0].astype(jnp.float32)          # (H_pad, W_pad, Cin)
+            # halo block: only the block_rows + R - 1 receptive rows
+            x = x_ref[0].astype(jnp.float32)   # (block_rows+R-1, W_pad, Cin)
             cin = x.shape[-1]
             acc = jnp.zeros((block_rows * w_out, cout_blk), jnp.float32)
             for dy in range(r):                        # R*R MXU matmuls
                 for dx in range(r):
                     tile = jax.lax.dynamic_slice(
-                        x, (i * block_rows + dy, dx, 0),
-                        (block_rows, w_out, cin))
+                        x, (dy, dx, 0), (block_rows, w_out, cin))
                     tap = w_ref[dy, dx].astype(jnp.float32)   # (Cin, Cout_blk)
                     acc = acc + jnp.dot(
                         tile.reshape(block_rows * w_out, cin), tap,
@@ -68,9 +82,13 @@ def _make_kernel(r: int, block_rows: int, w_out: int):
 def row_block_counts(spikes_padded: jax.Array, r: int, block_rows: int,
                      n_blocks: int) -> jax.Array:
     """counts[b, i] = #spikes in padded input rows [i*br, i*br + br + r - 1)
-    — exactly the receptive rows of output row-block i."""
+    — exactly the receptive rows of output row-block i.
+
+    Counts *nonzero* entries (not the value sum): the first layer feeds the
+    analog direct-coded frame through the same kernel, and a value sum < 1
+    would truncate to 0 under the int cast and wrongly skip a live block."""
     b = spikes_padded.shape[0]
-    row_tot = spikes_padded.sum(axis=(2, 3))          # (B, H_pad)
+    row_tot = (spikes_padded != 0).sum(axis=(2, 3))   # (B, H_pad)
     # windowed sum over rows via cumulative sum
     cs = jnp.cumsum(row_tot, axis=1)
     cs = jnp.concatenate([jnp.zeros((b, 1), cs.dtype), cs], axis=1)
@@ -84,7 +102,7 @@ def row_block_counts(spikes_padded: jax.Array, r: int, block_rows: int,
     jax.jit,
     static_argnames=("aprc", "block_rows", "num_groups", "interpret"))
 def spiking_conv_pallas(
-    spikes: jax.Array,       # (B, H, W, Cin) binary
+    spikes: jax.Array,       # (B, H, W, Cin) binary; B may fold T x batch
     w: jax.Array,            # (R, R, Cin, Cout) — CBWS-permuted
     bias: jax.Array,         # (Cout,)
     *,
@@ -115,6 +133,7 @@ def spiking_conv_pallas(
     x = jax.lax.dynamic_update_slice(x, spikes, (0, pad_lo, pad_lo, 0))
 
     counts = row_block_counts(x, R, block_rows, n_blocks)
+    halo_rows = block_rows + R - 1
 
     kernel = _make_kernel(R, block_rows, e_w)
     out = pl.pallas_call(
@@ -122,7 +141,11 @@ def spiking_conv_pallas(
         grid=(B, n_blocks, num_groups),
         in_specs=[
             pl.BlockSpec((B, n_blocks), lambda b, i, g: (0, 0)),      # counts
-            pl.BlockSpec((1, h_pad, w_pad, Cin), lambda b, i, g: (b, 0, 0, 0)),
+            # halo input block: element offsets (pl.unblocked) — row-block i
+            # reads exactly its block_rows + R - 1 receptive rows
+            pl.BlockSpec((1, halo_rows, w_pad, Cin),
+                         lambda b, i, g: (b, i * block_rows, 0, 0),
+                         indexing_mode=pl.unblocked),
             pl.BlockSpec((R, R, Cin, cout_blk), lambda b, i, g: (0, 0, 0, g)),
             pl.BlockSpec((cout_blk,), lambda b, i, g: (g,)),
         ],
@@ -132,3 +155,6 @@ def spiking_conv_pallas(
         interpret=interpret,
     )(counts, x, w, bias)
     return out[:, :e_h]
+
+
+spiking_conv_kernel = _make_kernel

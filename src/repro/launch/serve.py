@@ -1,11 +1,16 @@
-"""Serving launcher: continuous batched decode against prefix caches.
+"""Serving launcher: continuous batched decode against prefix caches, and
+SNN frame inference through the selectable kernel backend.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
         --batch 4 --prompt-len 64 --new 32
+    PYTHONPATH=src python -m repro.launch.serve --snn snn-mnist \
+        --backend batched --batch 4 --steps 8
 
 Production path: the same prefill/decode step functions are lowered with the
 `serve`/`serve_ep2d` profiles on the pod mesh (see launch/cells.py); here
-they run reduced on CPU.
+they run reduced on CPU.  The SNN path serves the paper's networks with the
+time-batched layer pipeline ("batched"), the fused Pallas kernels
+("pallas"), or the seed scan ("ref") — see core.snn_model.
 """
 from __future__ import annotations
 
@@ -15,18 +20,55 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.config import get_arch, reduced
+from repro.config import get_arch, get_snn, reduced
 from repro.models import transformer
+
+
+def serve_snn(args) -> None:
+    from repro.core import build_schedule, init_snn, snn_apply
+
+    cfg = get_snn(args.snn)
+    params = init_snn(jax.random.PRNGKey(0), cfg)
+    schedule = (build_schedule(params, cfg, "aprc+cbws")
+                if args.backend == "pallas" else None)
+    fwd = jax.jit(lambda p, x: snn_apply(p, x, cfg, backend=args.backend,
+                                         schedule=schedule))
+    frames = jax.random.uniform(
+        jax.random.PRNGKey(1),
+        (args.batch, *cfg.input_hw, cfg.input_channels))
+    jax.block_until_ready(fwd(params, frames).logits)     # compile
+    t0 = time.time()
+    done = 0
+    for _ in range(args.steps):
+        out = fwd(params, frames)
+        jax.block_until_ready(out.logits)
+        done += args.batch
+    dt = time.time() - t0
+    rate = sum(float(t) for t in out.spike_totals)
+    print(f"served {done} frames in {dt:.2f}s "
+          f"({done / dt:.1f} FPS, backend={args.backend}, "
+          f"T={cfg.timesteps}, total_spikes/frame={rate / args.batch:.0f})")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--snn", default=None,
+                    help="serve an SNN (e.g. snn-mnist) instead of an LM")
+    ap.add_argument("--backend", default="batched",
+                    choices=("ref", "batched", "pallas"),
+                    help="SNN execution backend (see core.snn_model)")
+    ap.add_argument("--steps", type=int, default=8,
+                    help="SNN serving iterations")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new", type=int, default=32)
     ap.add_argument("--full-config", action="store_true")
     args = ap.parse_args()
+
+    if args.snn:
+        serve_snn(args)
+        return
 
     cfg = get_arch(args.arch) if args.full_config else reduced(get_arch(args.arch))
     if cfg.is_encoder_only:

@@ -1,0 +1,37 @@
+"""Optional-hypothesis shim for the property-based suites.
+
+``pytest.importorskip("hypothesis")`` at module level would skip the whole
+file — including the plain unit tests that share it.  Instead: re-export
+the real hypothesis API when it is installed, and otherwise stand-in
+decorators that skip *only* the ``@given`` property tests, so unit
+coverage never silently disappears from the tier-1 gate.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Absorbs any strategy-builder call chain (st.lists(st.floats(...)))."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _AnyStrategy()
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (property test)")(fn)
+        return deco
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco

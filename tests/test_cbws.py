@@ -1,7 +1,8 @@
 """CBWS (Algorithm 1) unit + property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+# shim: skips only the @given tests when hypothesis is absent
+from _hypothesis_compat import given, settings, st
 
 from repro.core.balance import balance_ratio, measure_balance
 from repro.core.cbws import (cbws_partition, cbws_partition_equal,

@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow  # heavyweight; excluded from default tier-1 run
+
 from repro.config import get_arch, reduced
 from repro.models import transformer
 

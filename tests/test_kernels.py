@@ -8,15 +8,16 @@ from repro.core import cbws
 from repro.kernels import ops, ref
 from repro.kernels.spiking_conv import row_block_counts
 
+# Interpret mode runs the grid in a Python loop — keep shapes small so the
+# default (non-slow) suite stays fast while covering every structural case.
 CONV_CASES = [
     # B, H, W, Cin, Cout, R, aprc, block_rows, groups
     (2, 8, 8, 3, 8, 3, True, 4, 2),
-    (1, 28, 28, 1, 16, 3, True, 8, 4),
-    (3, 10, 12, 4, 12, 5, True, 4, 3),
+    (1, 12, 12, 1, 16, 3, True, 8, 4),
+    (2, 6, 10, 4, 12, 5, True, 4, 3),   # 5x5 taps
     (2, 8, 8, 3, 8, 3, False, 4, 2),
     (1, 7, 9, 2, 6, 3, True, 4, 3),     # ragged rows
-    (1, 16, 16, 8, 32, 3, True, 8, 8),
-    (2, 12, 12, 6, 9, 3, False, 4, 9),  # group = single channel (SPE-like)
+    (2, 10, 10, 6, 9, 3, False, 4, 9),  # group = single channel (SPE-like)
 ]
 
 
@@ -50,6 +51,20 @@ def test_spiking_conv_zero_input_emits_bias():
     np.testing.assert_allclose(np.asarray(out), np.asarray(want))
 
 
+def test_faint_analog_input_not_skipped():
+    """Direct-coded frames are analog: a block whose *value* sum is < 1 must
+    still convolve (the skip table counts nonzero entries, it does not sum
+    values — a value sum would truncate to 0 under the int32 cast)."""
+    spikes = jnp.zeros((1, 8, 8, 1), jnp.float32).at[0, 2, 3, 0].set(0.2)
+    w = jnp.ones((3, 3, 1, 4), jnp.float32)
+    bias = jnp.zeros((4,), jnp.float32)
+    out = ops.spiking_conv(spikes, w, bias, aprc=True, block_rows=4,
+                           num_groups=2, interpret=True)
+    want = ref.spiking_conv_ref(spikes, w, bias, aprc=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-6)
+    assert float(jnp.abs(out).max()) > 0
+
+
 def test_row_block_counts_match_manual():
     key = jax.random.PRNGKey(0)
     x = (jax.random.uniform(key, (2, 13, 9, 3)) < 0.3).astype(jnp.float32)
@@ -79,7 +94,7 @@ def test_cbws_permuted_weights_same_result():
                                np.asarray(want[..., perm]), atol=1e-4)
 
 
-LIF_CASES = [(8, 128), (10, 200), (1, 1), (17, 300), (64, 512)]
+LIF_CASES = [(8, 128), (10, 200), (1, 1), (17, 300), (32, 256)]
 
 
 @pytest.mark.parametrize("shape", LIF_CASES)
@@ -104,3 +119,80 @@ def test_lif_fused_threshold_sweep():
         vr, sr = ref.lif_fused_ref(v, z, vth)
         np.testing.assert_allclose(np.asarray(v2), np.asarray(vr), atol=1e-6)
         np.testing.assert_allclose(np.asarray(s2), np.asarray(sr))
+
+
+# ---------------------------------------------------------------------------
+# fused spiking-conv + LIF kernel
+# ---------------------------------------------------------------------------
+
+FUSED_CASES = [
+    # T, B, H, W, Cin, Cout, R, aprc, block_rows, groups
+    (3, 2, 8, 8, 3, 8, 3, True, 4, 2),
+    (2, 1, 7, 9, 2, 6, 3, True, 4, 3),    # non-block-divisible rows
+    (2, 2, 6, 6, 4, 6, 3, False, 4, 2),   # same-pad (APRC off)
+]
+
+
+def _fused_inputs(case, rate, v0_scale=0.3):
+    t, b, h, w_, cin, cout, r, aprc, br, g = case
+    key = jax.random.PRNGKey((hash(case) ^ int(rate * 1000)) % 2**31)
+    ks = jax.random.split(key, 4)
+    spikes = (jax.random.uniform(ks[0], (t, b, h, w_, cin)) < rate
+              ).astype(jnp.float32)
+    w = jax.random.normal(ks[1], (r, r, cin, cout)) * 0.3
+    bias = jax.random.normal(ks[2], (cout,)) * 0.05
+    e_h = h + r - 1 if aprc else h
+    e_w = w_ + r - 1 if aprc else w_
+    v0 = jax.random.normal(ks[3], (b, e_h, e_w, cout)) * v0_scale
+    return spikes, v0, w, bias
+
+
+@pytest.mark.parametrize("rate", [0.02, 0.18, 0.5])
+@pytest.mark.parametrize("case", FUSED_CASES)
+def test_spiking_conv_lif_matches_composed_ref(case, rate):
+    """Fused kernel == ref.spiking_conv_ref + ref.lif_fused_ref scanned
+    over T, across spike rates spanning the paper's Fig. 2 regime."""
+    _, _, _, _, _, _, r, aprc, br, g = case
+    spikes, v0, w, bias = _fused_inputs(case, rate)
+    s, v = ops.spiking_conv_lif(spikes, v0, w, bias, v_th=1.0, aprc=aprc,
+                                block_rows=br, num_groups=g, interpret=True)
+    sr, vr = ref.spiking_conv_lif_ref(spikes, v0, w, bias, v_th=1.0,
+                                      aprc=aprc)
+    assert s.shape == sr.shape and v.shape == vr.shape
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(vr), atol=1e-4)
+
+
+def test_spiking_conv_lif_zero_train_takes_skip_path():
+    """All-zero input exercises the spatio-temporal skip on every (t, b, i)
+    cell: dV must be bias-only while the LIF recurrence still advances."""
+    t = 3
+    spikes = jnp.zeros((t, 2, 8, 8, 3), jnp.float32)
+    v0 = jnp.zeros((2, 10, 10, 4), jnp.float32)
+    w = jnp.ones((3, 3, 3, 4), jnp.float32)
+    bias = jnp.full((4,), 0.4, jnp.float32)
+    s, v = ops.spiking_conv_lif(spikes, v0, w, bias, v_th=1.0, aprc=True,
+                                block_rows=4, num_groups=2, interpret=True)
+    sr, vr = ref.spiking_conv_lif_ref(spikes, v0, w, bias, v_th=1.0,
+                                      aprc=True)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr))
+    np.testing.assert_allclose(np.asarray(v), np.asarray(vr), atol=1e-6)
+    # bias 0.4, threshold 1.0: first spike lands exactly at step 3 (v=1.2)
+    assert float(s[:2].sum()) == 0.0 and float(s[2].sum()) > 0.0
+
+
+def test_spiking_conv_lif_single_step_matches_two_kernel_path():
+    """T=1 degenerates to the unfused spiking_conv + lif_fused pair — the
+    drop-in contract used by snn_layers.spiking_conv_step(backend='pallas')."""
+    case = (1, 2, 8, 8, 3, 8, 3, True, 4, 2)
+    spikes, v0, w, bias = _fused_inputs(case, 0.18)
+    s, v = ops.spiking_conv_lif(spikes, v0, w, bias, v_th=1.0, aprc=True,
+                                block_rows=4, num_groups=2, interpret=True)
+    z = ops.spiking_conv(spikes[0], w, bias, aprc=True, block_rows=4,
+                         num_groups=2, interpret=True)
+    v2, s2 = ops.lif_fused(v0.reshape(-1, v0.shape[-1]),
+                           z.reshape(-1, z.shape[-1]), 1.0, interpret=True)
+    np.testing.assert_allclose(np.asarray(s[0]),
+                               np.asarray(s2.reshape(s[0].shape)), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(v),
+                               np.asarray(v2.reshape(v.shape)), atol=1e-5)

@@ -7,6 +7,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # heavyweight; excluded from default tier-1 run
+
 _PRELUDE = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"

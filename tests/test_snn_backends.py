@@ -1,0 +1,125 @@
+"""Backend equivalence: the time-batched layer pipeline ("batched" /
+"pallas") must reproduce the timestep-outer scan ("ref") exactly —
+identical spike counts, logits to float tolerance — including through
+CBWS-permuted weights (scheduling never changes the network function)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_snn
+from repro.core import build_schedule, init_snn, snn_apply
+from repro.core.neuron import lif_init
+from repro.core.snn_layers import spiking_conv_step
+from repro.core.snn_model import layer_shapes
+
+
+def _tiny_mnist_cfg():
+    return dataclasses.replace(
+        get_snn("snn-mnist"), input_hw=(8, 8), conv_channels=(8, 8),
+        timesteps=3, num_spe_clusters=4)
+
+
+def _tiny_seg_cfg():
+    return dataclasses.replace(
+        get_snn("snn-seg"), input_hw=(6, 8), conv_channels=(4, 1),
+        timesteps=2, num_spe_clusters=2)
+
+
+def _assert_outputs_match(a, b, logits_tol=1e-5):
+    np.testing.assert_allclose(np.asarray(a.logits), np.asarray(b.logits),
+                               atol=logits_tol, rtol=logits_tol)
+    for ca, cb in zip(a.spike_counts, b.spike_counts):
+        np.testing.assert_array_equal(np.asarray(ca), np.asarray(cb))
+    for ca, cb in zip(a.timestep_counts, b.timestep_counts):
+        np.testing.assert_array_equal(np.asarray(ca), np.asarray(cb))
+    for ta, tb in zip(a.spike_totals, b.spike_totals):
+        assert float(ta) == float(tb)
+
+
+@pytest.mark.parametrize("backend", ["batched", "pallas"])
+def test_classification_backends_match_ref(backend):
+    cfg = _tiny_mnist_cfg()
+    params = init_snn(jax.random.PRNGKey(0), cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (2, 8, 8, 1))
+    want = snn_apply(params, x, cfg, backend="ref")
+    got = snn_apply(params, x, cfg, backend=backend)
+    _assert_outputs_match(want, got)
+
+
+@pytest.mark.parametrize("backend", ["batched", "pallas"])
+def test_segmentation_backends_match_ref(backend):
+    cfg = _tiny_seg_cfg()
+    params = init_snn(jax.random.PRNGKey(2), cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(3), (1, 6, 8, 3))
+    want = snn_apply(params, x, cfg, backend="ref")
+    got = snn_apply(params, x, cfg, backend=backend)
+    _assert_outputs_match(want, got)
+
+
+def test_pallas_backend_with_cbws_schedule_matches_ref():
+    """CBWS-permuted kernel lanes (core.scheduler) leave logits AND the
+    canonical-order spike counts unchanged."""
+    cfg = _tiny_mnist_cfg()
+    params = init_snn(jax.random.PRNGKey(0), cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (2, 8, 8, 1))
+    sched = build_schedule(params, cfg, "aprc+cbws")
+    want = snn_apply(params, x, cfg, backend="ref")
+    got = snn_apply(params, x, cfg, backend="pallas", schedule=sched)
+    _assert_outputs_match(want, got)
+
+
+def test_pre_encoded_spike_train_backends_match_ref():
+    """5-D input (T, B, H, W, Cin): no first-layer hoist, pure (T,B) fold."""
+    cfg = _tiny_mnist_cfg()
+    params = init_snn(jax.random.PRNGKey(4), cfg)
+    z = (jax.random.uniform(jax.random.PRNGKey(5),
+                            (cfg.timesteps, 2, 8, 8, 1)) < 0.4
+         ).astype(jnp.float32)
+    want = snn_apply(params, z, cfg, backend="ref")
+    for backend in ("batched", "pallas"):
+        _assert_outputs_match(want, snn_apply(params, z, cfg, backend=backend))
+
+
+def test_time_batched_is_jittable_and_differentiable():
+    """backend="batched" keeps the surrogate-gradient path intact."""
+    cfg = _tiny_mnist_cfg()
+    params = init_snn(jax.random.PRNGKey(0), cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (2, 8, 8, 1))
+
+    @jax.jit
+    def loss(p):
+        return jnp.sum(snn_apply(p, x, cfg, backend="batched").logits ** 2)
+
+    g = jax.grad(loss)(params)
+    leaves = jax.tree_util.tree_leaves(g)
+    assert all(bool(jnp.isfinite(l).all()) for l in leaves)
+    assert any(float(jnp.abs(l).max()) > 0 for l in leaves)
+
+
+def test_spiking_conv_step_pallas_matches_ref():
+    """The per-timestep streaming entry point honours the backend switch."""
+    cfg = _tiny_mnist_cfg()
+    params = init_snn(jax.random.PRNGKey(0), cfg)["conv"][0]
+    b = 2
+    spikes = (jax.random.uniform(jax.random.PRNGKey(6), (b, 8, 8, 1)) < 0.3
+              ).astype(jnp.float32)
+    state = lif_init((b,) + layer_shapes(cfg)[0])
+    st_ref, s_ref = spiking_conv_step(params, state, spikes, aprc=cfg.aprc,
+                                      v_th=cfg.v_threshold)
+    st_pal, s_pal = spiking_conv_step(params, state, spikes, aprc=cfg.aprc,
+                                      v_th=cfg.v_threshold, backend="pallas",
+                                      num_groups=2)
+    np.testing.assert_array_equal(np.asarray(s_ref), np.asarray(s_pal))
+    np.testing.assert_allclose(np.asarray(st_ref.v), np.asarray(st_pal.v),
+                               atol=1e-5)
+
+
+def test_unknown_backend_raises():
+    cfg = _tiny_mnist_cfg()
+    params = init_snn(jax.random.PRNGKey(0), cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (1, 8, 8, 1))
+    with pytest.raises(ValueError, match="backend"):
+        snn_apply(params, x, cfg, backend="tpu")

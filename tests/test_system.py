@@ -13,6 +13,9 @@ from repro.core import (build_schedule, init_snn, measure_balance,
                         permute_conv_params, snn_apply)
 from repro.core.balance import throughput_gain
 from repro.perfmodel import XC7Z045, simulate_network
+import pytest
+
+pytestmark = pytest.mark.slow  # heavyweight; excluded from default tier-1 run
 
 
 def _small_seg_cfg():
