@@ -1,0 +1,197 @@
+"""Serving load benchmark: open-loop Poisson arrivals against the
+continuous-batching engine (repro.serving).
+
+Three sections, each a ``name,us_per_call,derived`` row family:
+
+  serve/admission/*    CBWS vs FIFO request binning on a skewed synthetic
+                       workload (adversarial arrival order) — the measured
+                       request-level balance ratio must favor CBWS
+  serve/load/*         open-loop Poisson arrivals at several offered loads
+                       (fractions of measured capacity): p50/p99 latency,
+                       FPS, queue depth, energy/image via the perf model
+  serve/throughput/*   engine pipelined throughput vs the old synchronous
+                       per-batch-blocking loop at equal batch size
+
+``--quick`` shrinks the workload and writes ``BENCH_serving.json`` (same
+name -> {us_per_call, derived} shape as BENCH_kernels.json) so every PR
+leaves a serving-trajectory data point alongside the kernel one
+(scripts/smoke.sh runs this).
+"""
+from __future__ import annotations
+
+import json
+import statistics
+import sys
+import time
+
+import jax
+import numpy as np
+
+BENCH_JSON = "BENCH_serving.json"
+
+
+def _skewed_frames(n: int, cfg, sigma: float = 1.2, seed: int = 0):
+    """Digit frames with lognormal per-request intensity skew — the
+    request-granularity analogue of the paper's Fig. 2b channel skew
+    (spike workloads spread over orders of magnitude)."""
+    from repro.data.synthetic import mnist_like
+    rng = np.random.default_rng(seed)
+    imgs, _ = mnist_like(n, seed=seed)
+    scale = rng.lognormal(-0.5, sigma, (n, 1, 1, 1))
+    return np.clip(imgs * scale, 0.0, 1.0).astype(np.float32)
+
+
+def _engine(params, cfg, policy, lanes, max_batch, fault_hook=None):
+    from repro.serving import EngineConfig, ServingEngine
+    return ServingEngine(params, cfg, EngineConfig(
+        backend="batched", num_lanes=lanes, max_batch=max_batch,
+        admission=policy, keep_logits=False, fault_hook=fault_hook))
+
+
+def admission_rows(params, cfg, quick: bool):
+    """(a) CBWS admission vs FIFO binning, measured request-level balance."""
+    n = 24 if quick else 96
+    lanes, max_batch = 4, 8
+    frames = _skewed_frames(n, cfg)
+    # adversarial arrival order: heaviest first, so FIFO striping stacks the
+    # heavy requests onto the same contiguous micro-batches
+    order = np.argsort(-frames.sum(axis=(1, 2, 3)))
+    rows, balances = [], {}
+    for policy in ("fifo", "cbws"):
+        eng = _engine(params, cfg, policy, lanes, max_batch)
+        eng.warmup()                   # compiles outside the timed region
+        for i in order:
+            eng.submit(frames[i], arrival=0.0)
+        t0 = time.perf_counter()
+        s = eng.run()
+        dt = time.perf_counter() - t0
+        balances[policy] = s["request_balance"]
+        rows.append({
+            "name": f"serve/admission/{policy}",
+            "us_per_call": dt * 1e6,
+            "derived": (f"request_balance={s['request_balance']:.4f};"
+                        f"predicted_balance={s['predicted_balance']:.4f};"
+                        f"served={s['served']:.0f};rounds={s['rounds']:.0f}"),
+        })
+    rows.append({
+        "name": "serve/admission/gain",
+        "us_per_call": 0.0,
+        "derived": (f"cbws_over_fifo="
+                    f"{balances['cbws'] / max(balances['fifo'], 1e-9):.3f}x;"
+                    f"cbws_beats_fifo={balances['cbws'] > balances['fifo']}"),
+    })
+    return rows
+
+
+def load_rows(params, cfg, quick: bool):
+    """(b) open-loop Poisson sweep: latency/FPS/queue depth/energy."""
+    from repro.serving import serve_frames
+    lanes, max_batch = 2, 8
+    n = 32 if quick else 128
+    # capacity from a measured full-batch service time
+    warm = _skewed_frames(max_batch, cfg, seed=3)
+    svc = serve_frames(params, cfg, warm, steps=2)["seconds"] / 2
+    capacity = lanes * max_batch / svc            # frames/s, all lanes busy
+    rows = []
+    for rho in ((0.5, 0.9) if quick else (0.3, 0.6, 0.9, 1.2)):
+        frames = _skewed_frames(n, cfg, seed=int(rho * 10))
+        rng = np.random.default_rng(int(rho * 100))
+        arrivals = np.cumsum(rng.exponential(1.0 / (rho * capacity), n))
+        eng = _engine(params, cfg, "cbws", lanes, max_batch)
+        for f, a in zip(frames, arrivals):
+            eng.submit(f, arrival=float(a))
+        s = eng.run()
+        rows.append({
+            "name": f"serve/load/rho{rho}",
+            "us_per_call": s["p50_latency_s"] * 1e6,
+            "derived": (f"p99_ms={s['p99_latency_s']*1e3:.1f};"
+                        f"fps={s['fps']:.1f};"
+                        f"mean_queue={s['mean_queue_depth']:.1f};"
+                        f"balance={s['request_balance']:.3f};"
+                        f"balance_rounds={s['balance_rounds']:.0f};"
+                        f"energy_uj_per_image="
+                        f"{s.get('energy_j_per_image', 0.0)*1e6:.1f};"
+                        f"offered_fps={rho * capacity:.1f}"),
+        })
+    return rows
+
+
+def throughput_rows(params, cfg, quick: bool):
+    """(c) engine pipelined mode vs the old synchronous per-batch loop,
+    equal batch size and backend.  The old loop computed the full
+    SNNOutputs and host-synced every batch; the engine serves a logits-only
+    executable with deferred syncs (see ServingEngine.infer_pipelined).
+    Interleaved pairs + median-of-ratios (the bench_kernels timing
+    discipline) to cancel shared-CPU drift."""
+    from repro.core import snn_apply
+    from repro.serving import EngineConfig, ServingEngine
+
+    batch, steps, pairs = (8, 8, 5) if quick else (8, 16, 9)
+    frames = _skewed_frames(batch, cfg, seed=7)
+    fwd = jax.jit(lambda p, x: snn_apply(p, x, cfg, backend="batched"))
+    jax.block_until_ready(fwd(params, frames).logits)        # compile
+
+    def sync_loop():
+        """The pre-engine serving loop: full outputs, host-sync per batch."""
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            jax.block_until_ready(fwd(params, frames).logits)
+        return time.perf_counter() - t0
+
+    eng = ServingEngine(params, cfg, EngineConfig(
+        backend="batched", num_lanes=1, max_batch=batch, keep_logits=False))
+    eng.infer_pipelined(frames, 1)                           # compile + warm
+    t_sync, t_eng, ratios = [], [], []
+    for _ in range(pairs):
+        s = sync_loop()
+        e = eng.infer_pipelined(frames, steps)
+        t_sync.append(s)
+        t_eng.append(e)
+        ratios.append(s / e)
+    done = batch * steps
+    us_sync = statistics.median(t_sync) * 1e6
+    us_eng = statistics.median(t_eng) * 1e6
+    ratio = statistics.median(ratios)
+    return [
+        {"name": "serve/throughput/sync_loop",
+         "us_per_call": us_sync,
+         "derived": f"fps={done / (us_sync / 1e6):.1f};batch={batch}"},
+        {"name": "serve/throughput/engine",
+         "us_per_call": us_eng,
+         "derived": (f"fps={done / (us_eng / 1e6):.1f};batch={batch};"
+                     f"speedup_vs_sync={ratio:.3f}x")},
+    ]
+
+
+def run(quick: bool = True):
+    from repro.config import get_snn
+    from repro.core import init_snn
+
+    cfg = get_snn("snn-mnist")
+    params = init_snn(jax.random.PRNGKey(0), cfg)
+    rows = []
+    rows += admission_rows(params, cfg, quick)
+    rows += load_rows(params, cfg, quick)
+    rows += throughput_rows(params, cfg, quick)
+    return rows
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    rows = run(quick=quick)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}", flush=True)
+    if quick:
+        # only quick mode writes the tracked artifact: full-run numbers use
+        # different workload sizes/rates and would break the PR-to-PR diff
+        payload = {r["name"]: {"us_per_call": round(r["us_per_call"], 1),
+                               "derived": r["derived"]} for r in rows}
+        with open(BENCH_JSON, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {BENCH_JSON} ({len(payload)} entries)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

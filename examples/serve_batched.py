@@ -20,25 +20,25 @@ from repro.models import transformer
 
 
 def serve_snn_batched(args) -> None:
-    """Serve SNN frames: A/B the seed scan vs the time-batched pipeline."""
-    from repro.core import init_snn, snn_apply
+    """Serve SNN frames: A/B the seed scan vs the time-batched pipeline,
+    both through the serving engine's single-shot path (repro.serving)."""
+    import numpy as np
+
+    from repro.core import init_snn
+    from repro.serving import serve_frames
 
     cfg = get_snn(args.snn)
     params = init_snn(jax.random.PRNGKey(0), cfg)
-    frames = jax.random.uniform(
+    frames = np.asarray(jax.random.uniform(
         jax.random.PRNGKey(1),
-        (args.batch, *cfg.input_hw, cfg.input_channels))
+        (args.batch, *cfg.input_hw, cfg.input_channels)))
     results = {}
     for backend in ("ref", args.backend):
-        fwd = jax.jit(lambda p, x: snn_apply(p, x, cfg, backend=backend))
-        jax.block_until_ready(fwd(params, frames).logits)
-        t0 = time.time()
-        for _ in range(4):
-            out = fwd(params, frames)
-            jax.block_until_ready(out.logits)
-        results[backend] = (time.time() - t0) / 4
+        s = serve_frames(params, cfg, frames, backend=backend, steps=4)
+        results[backend] = s["seconds"] / 4
         print(f"{backend:8s}: {results[backend]*1e3:6.1f} ms/batch "
-              f"({args.batch / results[backend]:.1f} FPS)")
+              f"({s['fps']:.1f} FPS)")
+        out = s["outputs"]
     if args.backend != "ref":
         print(f"time-batched speedup vs seed scan: "
               f"{results['ref'] / results[args.backend]:.2f}x")

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Smoke gate: fast tier-1 tests (slow-marked system/LM suites excluded by
-# pytest.ini) + the quick kernel/model-forward bench, which refreshes
-# BENCH_kernels.json so every PR leaves a perf-trajectory data point.
+# pytest.ini) + the quick kernel/model-forward bench and the quick serving
+# load bench, which refresh BENCH_kernels.json and BENCH_serving.json so
+# every PR leaves both kernel and serving perf-trajectory data points.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -11,5 +12,8 @@ python -m pytest -x -q
 
 echo "== quick bench -> BENCH_kernels.json =="
 python -m benchmarks.run --quick
+
+echo "== quick serving load bench -> BENCH_serving.json =="
+python -m benchmarks.serve_load --quick
 
 echo "== smoke OK =="

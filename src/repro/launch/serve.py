@@ -5,12 +5,18 @@ SNN frame inference through the selectable kernel backend.
         --batch 4 --prompt-len 64 --new 32
     PYTHONPATH=src python -m repro.launch.serve --snn snn-mnist \
         --backend batched --batch 4 --steps 8
+    PYTHONPATH=src python -m repro.launch.serve --snn snn-mnist \
+        --engine --lanes 2 --batch 8
 
 Production path: the same prefill/decode step functions are lowered with the
 `serve`/`serve_ep2d` profiles on the pod mesh (see launch/cells.py); here
 they run reduced on CPU.  The SNN path serves the paper's networks with the
 time-batched layer pipeline ("batched"), the fused Pallas kernels
-("pallas"), or the seed scan ("ref") — see core.snn_model.
+("pallas"), or the seed scan ("ref") — see core.snn_model.  Both SNN modes
+go through ``repro.serving``: the default is the engine's single-shot path
+(fixed batch, per-step sync); ``--engine`` runs the full continuous-batching
+loop (FIFO windows, CBWS-balanced micro-batch lanes, straggler-aware
+placement) on a synthetic Poisson arrival trace — see docs/serving.md.
 """
 from __future__ import annotations
 
@@ -19,35 +25,46 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import get_arch, get_snn, reduced
 from repro.models import transformer
 
 
 def serve_snn(args) -> None:
-    from repro.core import build_schedule, init_snn, snn_apply
+    from repro.core import init_snn
+    from repro.serving import EngineConfig, ServingEngine, serve_frames
 
     cfg = get_snn(args.snn)
     params = init_snn(jax.random.PRNGKey(0), cfg)
-    schedule = (build_schedule(params, cfg, "aprc+cbws")
-                if args.backend == "pallas" else None)
-    fwd = jax.jit(lambda p, x: snn_apply(p, x, cfg, backend=args.backend,
-                                         schedule=schedule))
-    frames = jax.random.uniform(
+    schedule_mode = "aprc+cbws" if args.backend == "pallas" else None
+    frames = np.asarray(jax.random.uniform(
         jax.random.PRNGKey(1),
-        (args.batch, *cfg.input_hw, cfg.input_channels))
-    jax.block_until_ready(fwd(params, frames).logits)     # compile
-    t0 = time.time()
-    done = 0
-    for _ in range(args.steps):
-        out = fwd(params, frames)
-        jax.block_until_ready(out.logits)
-        done += args.batch
-    dt = time.time() - t0
-    rate = sum(float(t) for t in out.spike_totals)
-    print(f"served {done} frames in {dt:.2f}s "
-          f"({done / dt:.1f} FPS, backend={args.backend}, "
-          f"T={cfg.timesteps}, total_spikes/frame={rate / args.batch:.0f})")
+        (args.batch, *cfg.input_hw, cfg.input_channels)))
+
+    if args.engine:
+        # continuous-batching engine on a synthetic open-loop arrival trace
+        eng = ServingEngine(params, cfg, EngineConfig(
+            backend=args.backend, num_lanes=args.lanes,
+            max_batch=args.batch, schedule_mode=schedule_mode))
+        rng = np.random.default_rng(0)
+        n = args.steps * args.batch
+        gaps = rng.exponential(1e-3, n)
+        for i, arr in enumerate(np.cumsum(gaps)):
+            eng.submit(frames[i % args.batch], arrival=float(arr))
+        s = eng.run()
+        print(f"engine served {s['served']:.0f} frames in {s['rounds']:.0f} "
+              f"rounds ({s['fps']:.1f} FPS, backend={args.backend}, "
+              f"lanes={args.lanes}, p50={s['p50_latency_s']*1e3:.1f}ms, "
+              f"p99={s['p99_latency_s']*1e3:.1f}ms, "
+              f"balance={s['request_balance']:.3f})")
+        return
+
+    s = serve_frames(params, cfg, frames, backend=args.backend,
+                     steps=args.steps, schedule_mode=schedule_mode)
+    print(f"served {s['frames']} frames in {s['seconds']:.2f}s "
+          f"({s['fps']:.1f} FPS, backend={args.backend}, "
+          f"T={cfg.timesteps}, total_spikes/frame={s['spikes_per_frame']:.0f})")
 
 
 def main():
@@ -60,6 +77,11 @@ def main():
                     help="SNN execution backend (see core.snn_model)")
     ap.add_argument("--steps", type=int, default=8,
                     help="SNN serving iterations")
+    ap.add_argument("--engine", action="store_true",
+                    help="serve through the continuous-batching engine "
+                         "(repro.serving) on a synthetic Poisson trace")
+    ap.add_argument("--lanes", type=int, default=2,
+                    help="engine micro-batch lanes (with --engine)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new", type=int, default=32)

@@ -25,6 +25,37 @@ from repro.checkpoint.checkpointer import Checkpointer
 log = logging.getLogger("repro.runtime")
 
 
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded-retry budget for a single work unit (the serving-lane
+    analogue of ResilientLoop's per-step failure budget)."""
+    max_retries: int = 2
+
+
+def call_with_retry(fn: Callable[..., Any], *args: Any,
+                    policy: RetryPolicy = RetryPolicy(),
+                    on_failure: Optional[Callable[[int, Exception], None]] = None,
+                    ) -> Any:
+    """Run ``fn(*args)``, retrying transient failures up to the budget.
+
+    ``on_failure(attempt, exc)`` is the observability hook (serving lanes use
+    it to count retries per request).  The final failure propagates so the
+    caller can escalate — e.g. mark a serving lane dead and re-queue its
+    micro-batch on the survivors.
+    """
+    last: Optional[Exception] = None
+    for attempt in range(policy.max_retries + 1):
+        try:
+            return fn(*args)
+        except Exception as e:  # noqa: BLE001 — transient device failures
+            last = e
+            log.warning("attempt %d failed: %r", attempt, e)
+            if on_failure is not None:
+                on_failure(attempt, e)
+    raise RuntimeError(
+        f"retry budget ({policy.max_retries}) exhausted") from last
+
+
 @dataclass
 class LoopConfig:
     checkpoint_every: int = 100

@@ -38,8 +38,14 @@ class StragglerMonitor:
 
     def record(self, host_times: Sequence[float]) -> List[int]:
         """Feed one step's per-host times; returns indices flagged slow."""
-        flagged = []
-        for i, t in enumerate(host_times):
+        return self.record_partial(dict(enumerate(host_times)))
+
+    def record_partial(self, host_times: Dict[int, float]) -> List[int]:
+        """Feed times for a subset of hosts (serving lanes free at different
+        moments, so most rounds observe only some lanes).  Only observed
+        hosts' stats update — no fabricated samples — and fleet mean/std are
+        taken over hosts with at least one real observation."""
+        for i, t in host_times.items():
             s = self.stats[i]
             if s.n == 0:
                 s.ewma, s.var = t, 0.0
@@ -48,8 +54,12 @@ class StragglerMonitor:
                 s.ewma += self.alpha * d
                 s.var = (1 - self.alpha) * (s.var + self.alpha * d * d)
             s.n += 1
-        fleet_mean = float(np.mean([s.ewma for s in self.stats]))
-        fleet_std = float(np.std([s.ewma for s in self.stats])) + 1e-9
+        observed = [s.ewma for s in self.stats if s.n > 0]
+        if not observed:
+            return []
+        fleet_mean = float(np.mean(observed))
+        fleet_std = float(np.std(observed)) + 1e-9
+        flagged = []
         for i, s in enumerate(self.stats):
             if s.n >= 3 and (s.ewma - fleet_mean) / fleet_std > self.z:
                 flagged.append(i)
@@ -57,6 +67,16 @@ class StragglerMonitor:
 
     def fleet_balance(self) -> float:
         return balance_ratio([s.ewma for s in self.stats])
+
+    def speed_rank(self) -> List[int]:
+        """Host indices fastest-first (EWMA ascending; unobserved hosts rank
+        at the fleet mean).  Consumers place the heaviest CBWS group on the
+        fastest lane — measured-latency-driven schedule placement."""
+        obs = [s.ewma for s in self.stats if s.n > 0]
+        mean = float(np.mean(obs)) if obs else 0.0
+        keyed = [(s.ewma if s.n > 0 else mean, i)
+                 for i, s in enumerate(self.stats)]
+        return [i for _, i in sorted(keyed)]
 
 
 def rebalance_lanes(measured_work: Sequence[float], num_lanes: int):

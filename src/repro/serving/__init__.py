@@ -1,0 +1,32 @@
+"""Workload-balanced SNN serving engine (continuous batching).
+
+The paper's balance math lifted one level up: frame *requests* arriving with
+different predicted spike workloads are the channels, replica/micro-batch
+lanes are the SPEs, and Algorithm 1 (``core.cbws``) bins each admission
+window into workload-balanced micro-batches.
+
+  request     Request record (frame, arrival, predicted/actual workload)
+  batcher     FIFO queue + padding-bucketed dynamic batching + jit cache
+  admission   APRC-predicted request workloads -> CBWS lane binning
+  dispatch    lane execution, straggler monitoring, failure/retry
+  metrics     p50/p99 latency, FPS, queue depth, balance, energy/image
+  engine      the virtual-clock continuous-batching loop + single-shot mode
+
+See docs/serving.md for the architecture.
+"""
+from repro.serving.admission import admit, predict_workload
+from repro.serving.batcher import (DEFAULT_BUCKETS, DynamicBatcher, JitCache,
+                                   bucket_for)
+from repro.serving.dispatch import LaneDispatcher, LaneFailed
+from repro.serving.engine import EngineConfig, ServingEngine, serve_frames
+from repro.serving.metrics import ServingMetrics, energy_per_image
+from repro.serving.request import Request
+
+__all__ = [
+    "admit", "predict_workload",
+    "DEFAULT_BUCKETS", "DynamicBatcher", "JitCache", "bucket_for",
+    "LaneDispatcher", "LaneFailed",
+    "EngineConfig", "ServingEngine", "serve_frames",
+    "ServingMetrics", "energy_per_image",
+    "Request",
+]

@@ -1,0 +1,131 @@
+"""Dynamic batching: FIFO admission windows, padding buckets, jit cache.
+
+Requests are admitted strictly in arrival order (the window is a FIFO prefix
+of the queue — later arrivals can never overtake an earlier one into a
+window, which is what rules out starvation).  A window's micro-batches are
+padded up to a small set of bucket sizes so the engine compiles one XLA
+executable per ``(bucket, backend)`` instead of one per observed batch size.
+
+Padding frames are all-zero: under direct coding a zero frame injects zero
+current, and this repo's conv/dense biases are sub-threshold (zero-init; see
+``snn_layers.init_conv``), so padded rows fire no spikes and leave the
+engine's spike-count/energy metrics exact.  Padded logit rows are sliced off
+before results are returned.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.serving.request import Request
+
+__all__ = ["DEFAULT_BUCKETS", "bucket_for", "pad_frames", "JitCache",
+           "DynamicBatcher"]
+
+DEFAULT_BUCKETS: Tuple[int, ...] = (1, 2, 4, 8, 16)
+
+
+def bucket_for(n: int, buckets: Sequence[int] = DEFAULT_BUCKETS) -> int:
+    """Smallest bucket >= n (deterministic; n above the largest bucket is a
+    caller bug — windows are capped at max_batch <= max(buckets))."""
+    if n <= 0:
+        raise ValueError(f"empty batch (n={n})")
+    for b in sorted(buckets):
+        if n <= b:
+            return int(b)
+    raise ValueError(f"batch of {n} exceeds largest bucket {max(buckets)}")
+
+
+def pad_frames(frames: Sequence[np.ndarray], bucket: int) -> np.ndarray:
+    """Stack (H, W, C) frames into a (bucket, H, W, C) zero-padded batch."""
+    x = np.stack([np.asarray(f, dtype=np.float32) for f in frames])
+    if x.shape[0] < bucket:
+        pad = np.zeros((bucket - x.shape[0],) + x.shape[1:], x.dtype)
+        x = np.concatenate([x, pad], axis=0)
+    return x
+
+
+class JitCache:
+    """One jitted ``snn_apply`` per (bucket, backend) — the engine's compile
+    cache.  jax.jit would retrace per shape anyway; keeping the cache explicit
+    bounds it to the bucket set and lets the engine report compile counts.
+
+    ``outputs="logits"`` compiles a logits-only forward: serving clients
+    consume logits, so XLA dead-code-eliminates the per-layer spike-count
+    reductions (a measurable fraction of the time-batched forward) — the
+    engine's throughput mode uses this; metric-bearing paths use "full".
+    """
+
+    def __init__(self, params, cfg, schedule=None):
+        self.params = params
+        self.cfg = cfg
+        self.schedule = schedule
+        self._fns: Dict[Tuple[int, str, str], object] = {}
+        self.compiles = 0
+
+    def has(self, bucket: int, backend: str, outputs: str = "full") -> bool:
+        return (int(bucket), str(backend), str(outputs)) in self._fns
+
+    def get(self, bucket: int, backend: str, outputs: str = "full"):
+        key = (int(bucket), str(backend), str(outputs))
+        fn = self._fns.get(key)
+        if fn is None:
+            from repro.core import snn_apply
+            cfg, sched = self.cfg, self.schedule
+            if outputs == "logits":
+                fn = jax.jit(lambda p, x: snn_apply(
+                    p, x, cfg, backend=backend, schedule=sched).logits)
+            else:
+                fn = jax.jit(lambda p, x: snn_apply(
+                    p, x, cfg, backend=backend, schedule=sched))
+            self._fns[key] = fn
+            self.compiles += 1
+        return fn
+
+    def run(self, frames: np.ndarray, backend: str):
+        """Execute one padded bucket batch; returns the SNNOutputs."""
+        return self.get(frames.shape[0], backend)(self.params, frames)
+
+
+class DynamicBatcher:
+    """FIFO request queue + window former.
+
+    ``push`` enqueues; ``take_window`` pops the FIFO prefix of requests that
+    have arrived by virtual time ``t`` (capped at ``max_batch * num_lanes``).
+    Queue-depth samples feed the metrics module.
+    """
+
+    def __init__(self, max_batch: int,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS):
+        if max_batch > max(buckets):
+            raise ValueError(
+                f"max_batch={max_batch} exceeds largest bucket {max(buckets)}")
+        self.max_batch = int(max_batch)
+        self.buckets = tuple(sorted(buckets))
+        self._queue: Deque[Request] = deque()
+
+    def push(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def push_front(self, reqs: Sequence[Request]) -> None:
+        """Re-queue retried requests at the head (they keep FIFO priority)."""
+        for r in reversed(list(reqs)):
+            self._queue.appendleft(r)
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def next_arrival(self) -> Optional[float]:
+        return self._queue[0].arrival if self._queue else None
+
+    def take_window(self, t: float, num_lanes: int) -> List[Request]:
+        """FIFO prefix of arrived requests, at most max_batch per lane."""
+        cap = self.max_batch * max(1, int(num_lanes))
+        window: List[Request] = []
+        while self._queue and len(window) < cap \
+                and self._queue[0].arrival <= t:
+            window.append(self._queue.popleft())
+        return window

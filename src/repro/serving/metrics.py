@@ -1,0 +1,115 @@
+"""Serving metrics: latency percentiles, FPS, queue depth, balance, energy.
+
+Latency/FPS are virtual-time quantities (arrival -> completion on the
+engine's event clock, service times measured on the wall); the balance
+ratios are ``core.balance`` applied at request granularity; energy/image
+routes the engine's accumulated spike counts through the Skydiver cycle
+model (``perfmodel.skydiver``), the same path Table 1 uses.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.balance import balance_ratio
+
+__all__ = ["ServingMetrics", "percentile", "energy_per_image"]
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs, dtype=np.float64), q)) if xs else 0.0
+
+
+@dataclass
+class ServingMetrics:
+    latencies: List[float] = field(default_factory=list)
+    queue_depths: List[int] = field(default_factory=list)
+    predicted_balances: List[float] = field(default_factory=list)
+    measured_balances: List[float] = field(default_factory=list)
+    wall_balances: List[float] = field(default_factory=list)
+    rounds: int = 0
+    served: int = 0
+    retries: int = 0
+    first_arrival: float = float("inf")
+    last_finish: float = 0.0
+
+    def record_round(self, *, queue_depth: int,
+                     predicted: Optional[float] = None,
+                     measured: Optional[float] = None,
+                     lane_wall: Sequence[float] = ()) -> None:
+        """Balance samples are only meaningful for rounds that actually ran
+        >= 2 micro-batches (mean/max of one lane is vacuously 1.0) — callers
+        pass None to skip them; queue depth is recorded every round."""
+        self.rounds += 1
+        self.queue_depths.append(int(queue_depth))
+        if predicted is not None:
+            self.predicted_balances.append(float(predicted))
+        if measured is not None:
+            self.measured_balances.append(float(measured))
+        if len(lane_wall) >= 2:
+            self.wall_balances.append(balance_ratio(lane_wall))
+
+    def record_completion(self, arrival: float, finish: float) -> None:
+        self.served += 1
+        self.latencies.append(finish - arrival)
+        self.first_arrival = min(self.first_arrival, arrival)
+        self.last_finish = max(self.last_finish, finish)
+
+    def fps(self) -> float:
+        span = self.last_finish - self.first_arrival
+        return self.served / span if span > 0 else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "served": self.served,
+            "rounds": self.rounds,
+            "retries": self.retries,
+            "p50_latency_s": percentile(self.latencies, 50),
+            "p99_latency_s": percentile(self.latencies, 99),
+            "fps": self.fps(),
+            "mean_queue_depth": float(np.mean(self.queue_depths))
+            if self.queue_depths else 0.0,
+            "max_queue_depth": float(max(self.queue_depths, default=0)),
+            # mean over multi-lane rounds only; balance_rounds says how many
+            # samples back it (0 -> the 1.0 default is vacuous, not measured)
+            "balance_rounds": float(len(self.measured_balances)),
+            "request_balance": float(np.mean(self.measured_balances))
+            if self.measured_balances else 1.0,
+            "predicted_balance": float(np.mean(self.predicted_balances))
+            if self.predicted_balances else 1.0,
+            "wall_balance": float(np.mean(self.wall_balances))
+            if self.wall_balances else 1.0,
+        }
+
+
+def energy_per_image(cfg, params, timestep_counts: Sequence[np.ndarray],
+                     num_images: int, input_hw=None) -> Dict[str, float]:
+    """Route accumulated spike workloads through the Skydiver cycle model.
+
+    ``timestep_counts[l]`` is the engine's accumulated (T, Cout) spike count
+    of conv layer ``l`` over every served frame (the actual-workload signal);
+    layer 0's input is the dense direct-coded frame.  Returns J/image, FPS
+    and GSOp/s of the modeled accelerator for the *average* served image.
+    """
+    from repro.core.scheduler import build_schedule
+    from repro.perfmodel import XC7Z045, simulate_network
+
+    h, w = input_hw if input_hw is not None else cfg.input_hw
+    cin = cfg.input_channels
+    t = cfg.timesteps
+    per_layer = [np.full((t, cin), float(num_images * h * w) / cin)]
+    for l in range(len(cfg.conv_channels) - 1):
+        per_layer.append(np.asarray(timestep_counts[l], dtype=np.float64))
+    scheds = build_schedule(params, cfg, "aprc+cbws")
+    perf = simulate_network(cfg, per_layer,
+                            [s.in_partition for s in scheds],
+                            [s.out_partition for s in scheds], XC7Z045)
+    n = max(1, int(num_images))
+    return {
+        "energy_j_per_image": perf.energy_j(XC7Z045) / n,
+        "model_fps": perf.fps(XC7Z045) * n,
+        "model_gsops": perf.gsops(XC7Z045),
+        "model_balance": perf.balance_spartus,
+    }

@@ -1,0 +1,43 @@
+"""The unit of serving work: one frame inference request.
+
+``workload`` is the APRC-*predicted* relative workload (set at submit time by
+``admission.predict_workload``); ``events`` is the *measured* input-event
+workload (direct coding: every pixel injects ``intensity`` current each of
+the T timesteps, so input synaptic events = T * sum(frame)).  The admission
+scheduler bins on the prediction; the balance ratio the engine reports is
+measured on ``events`` — the same predicted-vs-actual split the paper uses
+for Fig. 7 (partition from predictions, ratio from actual workloads).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["Request"]
+
+
+@dataclass
+class Request:
+    rid: int
+    frame: np.ndarray                 # (H, W, Cin) analog frame in [0, 1]
+    arrival: float                    # virtual arrival time, seconds
+    workload: float = 0.0             # APRC-predicted relative workload
+    events: float = 0.0               # measured input events (T * frame.sum())
+
+    # filled in by the engine at dispatch/completion
+    start: float = -1.0               # virtual dispatch time
+    finish: float = -1.0              # virtual completion time
+    lane: int = -1                    # lane that served it
+    window: int = -1                  # admission-window index (FIFO order)
+    retries: int = 0                  # lane-failure retries
+    logits: Optional[np.ndarray] = field(default=None, repr=False)
+
+    @property
+    def latency(self) -> float:
+        return self.finish - self.arrival
+
+    @property
+    def done(self) -> bool:
+        return self.finish >= 0.0

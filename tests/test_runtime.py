@@ -85,6 +85,39 @@ def test_straggler_monitor_flags_slow_host():
     assert mon.fleet_balance() < 0.95
 
 
+def test_straggler_partial_observations():
+    """Serving lanes report rounds where only some lanes ran: unobserved
+    hosts get no fabricated samples, and a consistently slow host is still
+    flagged once it has enough real observations."""
+    mon = StragglerMonitor(num_hosts=3, z_thresh=0.5)
+    for _ in range(5):
+        mon.record_partial({0: 1.0, 2: 5.0})     # host 1 idle throughout
+    assert mon.stats[1].n == 0
+    assert mon.stats[0].n == 5
+    assert mon.record_partial({0: 1.0, 2: 5.0}) == [2]
+    assert mon.speed_rank()[0] == 0
+
+
+def test_retry_budget_exhaustion_escalates():
+    from repro.runtime.fault_tolerance import RetryPolicy, call_with_retry
+
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert call_with_retry(flaky, policy=RetryPolicy(max_retries=2)) == "ok"
+    calls["n"] = -100                            # now fails every attempt
+    seen = []
+    with pytest.raises(RuntimeError, match="retry budget"):
+        call_with_retry(flaky, policy=RetryPolicy(max_retries=1),
+                        on_failure=lambda a, e: seen.append(a))
+    assert seen == [0, 1]
+
+
 def test_rebalance_restores_balance():
     work = np.r_[np.full(28, 1.0), [9.0, 7.0, 5.0, 3.0]]
     before = balance_ratio([w.sum() for w in np.array_split(work, 4)])

@@ -1,0 +1,285 @@
+"""The serving engine: bucketed batching, APRC/CBWS admission, lane
+dispatch with straggler/failure handling, and end-to-end correctness
+(micro-batched outputs bit-identical to unbatched inference)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import get_snn
+from repro.core import init_snn, snn_apply
+from repro.core.balance import balance_ratio
+from repro.serving import (EngineConfig, ServingEngine, admit, bucket_for,
+                           serve_frames)
+from repro.serving.admission import (layer0_channel_weights, measured_balance,
+                                     predict_workload)
+from repro.serving.batcher import DynamicBatcher, pad_frames
+from repro.serving.request import Request
+
+
+def _tiny_cfg():
+    return dataclasses.replace(
+        get_snn("snn-mnist"), input_hw=(8, 8), conv_channels=(8, 8),
+        timesteps=3, num_spe_clusters=4)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = _tiny_cfg()
+    params = init_snn(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _skewed_frames(n, cfg, seed=0, sigma=1.2):
+    rng = np.random.default_rng(seed)
+    h, w = cfg.input_hw
+    x = rng.uniform(0, 1, (n, h, w, cfg.input_channels))
+    scale = rng.lognormal(-0.5, sigma, (n, 1, 1, 1))
+    return np.clip(x * scale, 0, 1).astype(np.float32)
+
+
+# -- batcher ----------------------------------------------------------------
+
+def test_bucket_selection_deterministic():
+    buckets = (1, 2, 4, 8)
+    want = {1: 1, 2: 2, 3: 4, 4: 4, 5: 8, 8: 8}
+    for n, b in want.items():
+        assert bucket_for(n, buckets) == b
+        assert bucket_for(n, buckets) == b      # stable on repeat
+    with pytest.raises(ValueError):
+        bucket_for(9, buckets)
+    with pytest.raises(ValueError):
+        bucket_for(0, buckets)
+
+
+def test_pad_frames_zero_pads_to_bucket():
+    frames = [np.ones((4, 4, 1), np.float32) * i for i in range(3)]
+    x = pad_frames(frames, 4)
+    assert x.shape == (4, 4, 4, 1)
+    assert float(x[3].sum()) == 0.0
+    np.testing.assert_array_equal(x[1], frames[1])
+
+
+def test_jit_cache_one_compile_per_bucket_backend(tiny):
+    cfg, params = tiny
+    eng = ServingEngine(params, cfg, EngineConfig(num_lanes=1, max_batch=4))
+    frames = _skewed_frames(8, cfg)
+    eng.infer(frames[:3])       # bucket 4
+    eng.infer(frames[:4])       # bucket 4 again — no new compile
+    assert eng.cache.compiles == 1
+    eng.infer(frames[:1])       # bucket 1
+    assert eng.cache.compiles == 2
+
+
+def test_window_is_fifo_prefix():
+    b = DynamicBatcher(max_batch=2, buckets=(1, 2, 4))
+    reqs = [Request(rid=i, frame=np.zeros((2, 2, 1)), arrival=float(i))
+            for i in range(5)]
+    for r in reqs:
+        b.push(r)
+    # at t=2.5 only rids 0..2 have arrived; cap = 2 lanes * 2 = 4
+    window = b.take_window(2.5, num_lanes=2)
+    assert [r.rid for r in window] == [0, 1, 2]
+    assert len(b) == 2
+
+
+# -- admission --------------------------------------------------------------
+
+def test_predicted_workload_tracks_intensity(tiny):
+    cfg, params = tiny
+    w = layer0_channel_weights(params)
+    lo = predict_workload(np.full((8, 8, 1), 0.1, np.float32), w, cfg.timesteps)
+    hi = predict_workload(np.full((8, 8, 1), 0.9, np.float32), w, cfg.timesteps)
+    assert 0 < lo < hi
+
+
+def test_cbws_admission_beats_fifo_on_skewed_workload():
+    rng = np.random.default_rng(0)
+    work = np.sort(rng.lognormal(0, 1.5, 16))[::-1]   # heavy-first arrivals
+    reqs = [Request(rid=i, frame=np.zeros((2, 2, 1)), arrival=0.0,
+                    workload=float(v), events=float(v))
+            for i, v in enumerate(work)]
+    fifo_lanes, _, _ = admit(reqs, 4, policy="fifo")
+    cbws_lanes, _, _ = admit(reqs, 4, policy="cbws")
+    b_fifo = measured_balance(fifo_lanes)
+    b_cbws = measured_balance(cbws_lanes)
+    assert b_cbws > b_fifo
+    # one dominant request bounds mean/max; CBWS should get near that bound
+    best = balance_ratio([work.sum() / 4] * 3 + [work.max()])
+    assert b_cbws > 0.9 * best
+
+
+def test_cbws_groups_capped_at_max_batch(tiny):
+    """Algorithm 1 balances workload, not count: a few dominant requests
+    can push all the light ones into one group.  The cap keeps every
+    micro-batch within the lane's bucket set, and the engine drains such a
+    window without overflowing bucket_for."""
+    work = [1000.0, 900.0, 800.0] + [1.0] * 13   # 3 heavy + 13 light
+    reqs = [Request(rid=i, frame=np.zeros((2, 2, 1)), arrival=0.0,
+                    workload=v, events=v) for i, v in enumerate(work)]
+    lanes, _, _ = admit(reqs, 4, policy="cbws", max_group=4)
+    assert sorted(len(g) for g in lanes) == [4, 4, 4, 4]
+    assert {r.rid for g in lanes for r in g} == set(range(16))
+
+    cfg, params = tiny
+    eng = ServingEngine(params, cfg, EngineConfig(num_lanes=4, max_batch=4))
+    frames = _skewed_frames(16, cfg)
+    frames[:3] = 1.0                             # three dominant requests
+    frames[3:] *= 0.01
+    for f in frames:
+        eng.submit(f, arrival=0.0)
+    s = eng.run()
+    assert s["served"] == 16
+
+
+def test_admission_rejects_unknown_policy():
+    with pytest.raises(ValueError, match="policy"):
+        admit([], 2, policy="lifo")
+
+
+# -- engine end-to-end ------------------------------------------------------
+
+def test_microbatch_outputs_bit_identical_to_unbatched(tiny):
+    """Padding-bucketed micro-batches must not perturb any request's result:
+    engine logits == jitted unbatched snn_apply, bitwise."""
+    cfg, params = tiny
+    eng = ServingEngine(params, cfg, EngineConfig(num_lanes=2, max_batch=4))
+    frames = _skewed_frames(10, cfg)
+    for i, f in enumerate(frames):
+        eng.submit(f, arrival=0.0005 * i)
+    eng.run()
+    single = jax.jit(
+        lambda p, x: snn_apply(p, x, cfg, backend="batched"))
+    assert len(eng.completed) == len(frames)
+    for r in sorted(eng.completed, key=lambda r: r.rid):
+        want = np.asarray(single(params, r.frame[None]).logits[0])
+        np.testing.assert_array_equal(want, r.logits)
+
+
+def test_no_starvation_under_skewed_arrival_order(tiny):
+    """Heaviest-first arrivals with a tiny per-round window: every request
+    completes, and admission windows respect FIFO order (a later arrival
+    never lands in an earlier window)."""
+    cfg, params = tiny
+    eng = ServingEngine(params, cfg, EngineConfig(num_lanes=2, max_batch=2))
+    frames = _skewed_frames(12, cfg, sigma=1.5)
+    order = np.argsort(-frames.sum(axis=(1, 2, 3)))     # heavy first
+    rids = [eng.submit(frames[i], arrival=0.0001 * k)
+            for k, i in enumerate(order)]
+    s = eng.run()
+    assert s["served"] == len(rids)
+    done = {r.rid: r for r in eng.completed}
+    assert sorted(done) == sorted(rids)
+    assert all(r.finish >= 0 for r in done.values())
+    by_arrival = sorted(done.values(), key=lambda r: (r.arrival, r.rid))
+    windows = [r.window for r in by_arrival]
+    assert windows == sorted(windows)                   # FIFO windows
+
+
+def test_request_balance_improves_vs_fifo(tiny):
+    """End-to-end: the engine's measured request-level balance ratio under
+    CBWS admission beats FIFO binning on the same skewed burst."""
+    cfg, params = tiny
+    frames = _skewed_frames(16, cfg, sigma=1.5)
+    order = np.argsort(-frames.sum(axis=(1, 2, 3)))
+    summaries = {}
+    for policy in ("fifo", "cbws"):
+        eng = ServingEngine(params, cfg, EngineConfig(
+            num_lanes=4, max_batch=4, admission=policy, keep_logits=False))
+        for i in order:
+            eng.submit(frames[i], arrival=0.0)
+        summaries[policy] = eng.run()
+    assert (summaries["cbws"]["request_balance"]
+            > summaries["fifo"]["request_balance"])
+
+
+def test_lane_failure_retries_then_requeues(tiny):
+    """A lane that fails persistently burns its retry budget, dies, and its
+    requests complete on the surviving lane."""
+    cfg, params = tiny
+    calls = {"n": 0}
+
+    def fault_hook(lane, attempt):
+        if lane == 0:
+            calls["n"] += 1
+            raise RuntimeError("injected lane fault")
+
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=2, max_batch=2, max_retries=1, fault_hook=fault_hook))
+    frames = _skewed_frames(6, cfg)
+    for f in frames:
+        eng.submit(f, arrival=0.0)
+    s = eng.run()
+    assert s["served"] == len(frames)
+    assert s["dead_lanes"] == 1
+    assert s["retries"] > 0
+    assert calls["n"] == 2                      # initial attempt + 1 retry
+    assert all(r.lane == 1 for r in eng.completed)
+
+
+def test_all_lanes_dead_raises(tiny):
+    cfg, params = tiny
+
+    def fault_hook(lane, attempt):
+        raise RuntimeError("total outage")
+
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=2, max_batch=2, max_retries=0, fault_hook=fault_hook))
+    eng.submit(_skewed_frames(1, cfg)[0], arrival=0.0)
+    with pytest.raises(RuntimeError, match="lanes failed"):
+        eng.run()
+
+
+def test_straggler_lane_gets_lighter_work(tiny):
+    """With an injected 4x-slow lane 0, the measured-latency CBWS placement
+    routes the heavier micro-batch to the fast lane once the straggler
+    monitor has samples."""
+    cfg, params = tiny
+
+    def slow_lane0(lane, wall):
+        # fixed virtual service times (wall ignored) -> fully deterministic
+        return 0.08 if lane == 0 else 0.02
+
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=2, max_batch=4, service_time_fn=slow_lane0,
+        straggler_z=0.5))
+    frames = _skewed_frames(32, cfg, sigma=1.0)
+    for k, f in enumerate(frames):
+        eng.submit(f, arrival=0.002 * k)
+    eng.run()
+    work = {0: 0.0, 1: 0.0}
+    for r in eng.completed:
+        work[r.lane] += r.workload
+    # fast lane absorbed more predicted work than the straggler
+    assert work[1] > work[0]
+    assert eng.dispatcher.monitor.speed_rank()[0] == 1
+
+
+def test_serve_frames_single_shot_matches_direct(tiny):
+    """The shared CLI helper returns the same outputs as a direct jitted
+    snn_apply on the same batch."""
+    cfg, params = tiny
+    frames = _skewed_frames(4, cfg)
+    s = serve_frames(params, cfg, frames, backend="batched", steps=1)
+    want = jax.jit(lambda p, x: snn_apply(p, x, cfg, backend="batched"))(
+        params, frames)
+    np.testing.assert_array_equal(np.asarray(want.logits),
+                                  np.asarray(s["outputs"].logits))
+    assert s["frames"] == 4 and s["fps"] > 0
+
+
+def test_engine_summary_reports_energy(tiny):
+    cfg, params = tiny
+    eng = ServingEngine(params, cfg, EngineConfig(num_lanes=1, max_batch=4))
+    for f in _skewed_frames(4, cfg):
+        eng.submit(f, arrival=0.0)
+    s = eng.run()
+    assert s["energy_j_per_image"] > 0
+    assert s["model_fps"] > 0
+    assert 0 < s["model_balance"] <= 1.0
+
+
+def test_balance_ratio_identity():
+    assert balance_ratio([2.0, 2.0, 2.0]) == 1.0
+    assert balance_ratio([4.0, 0.0]) == 0.5

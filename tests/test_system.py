@@ -1,73 +1,91 @@
 """End-to-end behaviour of the paper's system: APRC + CBWS on the Skydiver
 performance model — reproduces the Fig. 7 mechanism (balance hierarchy
-none < APRC+CBWS, with CBWS-alone degraded by bad predictions) and the
-throughput-gain claim."""
+none <= cbws <= aprc+cbws) and the throughput-gain claim.
+
+The networks run with ``skew_channels``-biased weights: random-init filters
+have near-uniform magnitudes (nothing for a scheduler to balance, and the
+hierarchy came out of the noise — the seed failure), while the lognormal
+channel skew reproduces the trained-net operating regime the paper measures
+(Fig. 2b) and makes the hierarchy deterministic."""
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.config import get_snn
-from repro.core import (build_schedule, init_snn, measure_balance,
-                        permute_conv_params, snn_apply)
+from repro.core import (build_schedule, init_snn, permute_conv_params,
+                        snn_apply)
 from repro.core.balance import throughput_gain
+from repro.core.snn_model import skew_channels
 from repro.perfmodel import XC7Z045, simulate_network
-import pytest
-
-pytestmark = pytest.mark.slow  # heavyweight; excluded from default tier-1 run
 
 
-def _small_seg_cfg():
+def _small_seg_cfg(**over):
     cfg = get_snn("snn-seg")
-    return dataclasses.replace(cfg, input_hw=(20, 40), timesteps=6)
+    return dataclasses.replace(cfg, input_hw=(20, 40), timesteps=6, **over)
 
 
 def _run_and_collect(cfg, params, x):
-    out = snn_apply(params, x, cfg)
+    out = snn_apply(params, x, cfg, backend="batched")
     # input workload of layer l = output spike counts of layer l-1
-    per_layer = []
     t = cfg.timesteps
     b, h, w, c = x.shape
     # layer 0 input: encoded frame treated as dense events
-    dense0 = np.full((t, c), float(b * h * w) / 1.0 / c)
-    per_layer.append(dense0)
+    per_layer = [np.full((t, c), float(b * h * w) / c)]
     for l in range(len(cfg.conv_channels) - 1):
         per_layer.append(np.asarray(out.timestep_counts[l]))
     return out, per_layer
 
 
+def _skewed_params(cfg):
+    return skew_channels(init_snn(jax.random.PRNGKey(0), cfg),
+                         sigma=1.2, seed=1)
+
+
+def _simulate(cfg, params, x, sched_mode):
+    _, per_layer = _run_and_collect(cfg, params, x)
+    scheds = build_schedule(params, cfg, sched_mode)
+    return simulate_network(cfg, per_layer,
+                            in_partitions=[s.in_partition for s in scheds],
+                            out_partitions=[s.out_partition for s in scheds],
+                            hw=XC7Z045)
+
+
 def test_balance_hierarchy_and_throughput():
-    cfg = _small_seg_cfg()
-    key = jax.random.PRNGKey(0)
-    params = init_snn(key, cfg)
-    x = jax.random.uniform(jax.random.PRNGKey(1), (2, *cfg.input_hw,
-                                                   cfg.input_channels))
-    out, per_layer = _run_and_collect(cfg, params, x)
-
+    """Fig. 7's three bars: 'none' stripes channels naively, 'cbws' runs
+    Algorithm 1 on the unmodified (SAME-pad) net, 'aprc+cbws' on the
+    APRC-modified net where Eq. (5) makes the predictions proportional."""
     results = {}
-    for mode in ("none", "aprc+cbws"):
-        scheds = build_schedule(params, cfg, mode)
-        perf = simulate_network(
-            cfg, per_layer,
-            in_partitions=[s.in_partition for s in scheds],
-            out_partitions=[s.out_partition for s in scheds],
-            hw=XC7Z045)
-        results[mode] = perf
+    for mode in ("none", "cbws", "aprc+cbws"):
+        cfg = _small_seg_cfg(aprc=(mode == "aprc+cbws"))
+        params = _skewed_params(cfg)
+        x = jax.random.uniform(jax.random.PRNGKey(1),
+                               (2, *cfg.input_hw, cfg.input_channels))
+        sched_mode = "none" if mode == "none" else "aprc+cbws"
+        results[mode] = _simulate(cfg, params, x, sched_mode)
 
-    b_none = results["none"].balance
-    b_cbws = results["aprc+cbws"].balance
-    assert b_cbws > b_none, (b_cbws, b_none)
-    # unit scale: random weights, 6 timesteps, 1-channel final layer — the
+    b = {m: p.balance_spartus for m, p in results.items()}
+    assert b["none"] <= b["cbws"] + 1e-9, b
+    assert b["cbws"] <= b["aprc+cbws"] + 1e-9, b
+    assert b["none"] < b["aprc+cbws"], b
+    # unit scale: skewed weights, 6 timesteps, 1-channel final layer — the
     # paper-scale bands (>90%) are exercised by benchmarks/fig7_balance.py
-    assert b_cbws > 0.6, b_cbws
+    assert b["aprc+cbws"] > 0.6, b
 
-    gain = throughput_gain(b_cbws, b_none)
-    fps_none = results["none"].fps(XC7Z045)
-    fps_cbws = results["aprc+cbws"].fps(XC7Z045)
-    assert fps_cbws > fps_none
-    # implied and simulated gains agree to ~15%
-    assert abs(gain - fps_cbws / fps_none) / gain < 0.3
+    # throughput claim, same (APRC) net so FPS is apples-to-apples:
+    # schedule-only change none -> aprc+cbws
+    cfg = _small_seg_cfg()
+    params = _skewed_params(cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1),
+                           (2, *cfg.input_hw, cfg.input_channels))
+    none = _simulate(cfg, params, x, "none")
+    both = _simulate(cfg, params, x, "aprc+cbws")
+    assert both.balance > none.balance
+    fps_none, fps_both = none.fps(XC7Z045), both.fps(XC7Z045)
+    assert fps_both > fps_none
+    # implied and simulated gains agree to ~30%
+    gain = throughput_gain(both.balance, none.balance)
+    assert abs(gain - fps_both / fps_none) / gain < 0.3
 
 
 def test_channel_permutation_preserves_network_function():
@@ -89,15 +107,10 @@ def test_channel_permutation_preserves_network_function():
 
 def test_perfmodel_energy_and_gsops_sane():
     cfg = _small_seg_cfg()
-    key = jax.random.PRNGKey(0)
-    params = init_snn(key, cfg)
+    params = _skewed_params(cfg)
     x = jax.random.uniform(jax.random.PRNGKey(1),
                            (1, *cfg.input_hw, cfg.input_channels))
-    out, per_layer = _run_and_collect(cfg, params, x)
-    scheds = build_schedule(params, cfg, "aprc+cbws")
-    perf = simulate_network(cfg, per_layer,
-                            [s.in_partition for s in scheds],
-                            [s.out_partition for s in scheds])
+    perf = _simulate(cfg, params, x, "aprc+cbws")
     assert perf.total_sops > 0
     assert 0 < perf.fps(XC7Z045) < 1e7
     assert perf.energy_j(XC7Z045) > 0
