@@ -10,7 +10,10 @@ The ``model/snn_mnist_forward`` rows time the two model execution orders
 (jitted, reference semantics) head-to-head: the seed timestep-outer scan
 vs the time-batched layer pipeline (first-layer conv hoist + (T, B) fold —
 see core.snn_model).  The time-batched row's ``speedup_vs_seed`` is the
-tracked perf number for this hot path."""
+tracked perf number for this hot path.  The ``model/snn_mnist_train_step``
+rows time the full surrogate-gradient training step the same way (the
+time-batched backends are differentiable since the fused kernel grew its
+custom_vjp — see kernels/spiking_conv_lif.py)."""
 from __future__ import annotations
 
 import time
@@ -101,6 +104,7 @@ def run(**_):
     })
 
     rows.extend(model_forward_rows())
+    rows.extend(train_step_rows())
     return rows
 
 
@@ -152,6 +156,61 @@ def model_forward_rows(batch: int = 1, pairs: int = 16):
             "us_per_call": us_bat,
             "derived": (f"backend=batched;B={batch};T={cfg.timesteps};"
                         f"speedup_vs_seed={speedup:.2f}x"),
+        },
+    ]
+
+
+def train_step_rows(batch: int = 8, pairs: int = 8):
+    """Surrogate-gradient training step (value_and_grad + SGD-momentum),
+    seed timestep-outer scan vs the time-batched layer pipeline — the
+    number that says whether training can live on the serving hot path.
+
+    Both steps share ``core.snn_train.make_train_step`` (the entry points'
+    code path); timing uses the same interleaved-pair median-ratio scheme
+    as ``model_forward_rows`` to cancel shared-CPU drift.  The pallas
+    backend trains through the same custom_vjp but interpret mode is a
+    Python interpreter, not a performance surface (see module doc), so it
+    is benched structurally by the kernel rows above, not by wall time.
+    """
+    import statistics
+
+    from repro.config import get_snn
+    from repro.core import init_snn, make_train_step
+
+    cfg = get_snn("snn-mnist")
+    params = init_snn(jax.random.PRNGKey(0), cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1),
+                           (batch, *cfg.input_hw, cfg.input_channels))
+    y = jax.random.randint(jax.random.PRNGKey(2), (batch,), 0, 10)
+    mom = jax.tree.map(jnp.zeros_like, params)
+    steps = {bk: jax.jit(make_train_step(cfg, backend=bk))
+             for bk in ("ref", "batched")}
+
+    def once(f):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(params, mom, x, y))
+        return time.perf_counter() - t0
+
+    once(steps["ref"]), once(steps["batched"])        # compile + warm up
+    t_ref, t_bat, ratios = [], [], []
+    for _ in range(pairs):
+        r, b = once(steps["ref"]), once(steps["batched"])
+        t_ref.append(r)
+        t_bat.append(b)
+        ratios.append(r / b)
+    return [
+        {
+            "name": "model/snn_mnist_train_step/seed_scan",
+            "us_per_call": statistics.median(t_ref) * 1e6,
+            "derived": f"backend=ref;B={batch};T={cfg.timesteps};"
+                       "grad=surrogate_bptt",
+        },
+        {
+            "name": "model/snn_mnist_train_step/time_batched",
+            "us_per_call": statistics.median(t_bat) * 1e6,
+            "derived": (f"backend=batched;B={batch};T={cfg.timesteps};"
+                        f"grad=surrogate_bptt;"
+                        f"speedup_vs_seed={statistics.median(ratios):.2f}x"),
         },
     ]
 

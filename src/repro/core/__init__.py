@@ -5,6 +5,7 @@
   encoding    spike encoders
   snn_layers  spiking conv/dense with the APRC structural option
   snn_model   the paper's classification & segmentation networks
+  snn_train   backend-selectable surrogate-gradient training step
   aprc        filter-magnitude workload prediction (+ Fig. 6 measurement)
   cbws        Algorithm 1 balanced partitioner
   balance     Spartus balance-ratio metric (Fig. 7)
@@ -19,7 +20,8 @@ from repro.core.neuron import LIFState, lif_init, lif_over_time, lif_step
 from repro.core.scheduler import LayerSchedule, build_schedule, permute_conv_params
 from repro.core.snn_model import (SNN_BACKENDS, SNNOutputs, init_snn,
                                   layer_shapes, snn_apply)
-from repro.core.surrogate import spike_fn
+from repro.core.snn_train import accuracy, make_loss_fn, make_train_step
+from repro.core.surrogate import SURROGATE_KINDS, heaviside, spike_fn
 
 __all__ = [
     "filter_magnitudes", "layer_magnitudes", "proportionality",
@@ -29,5 +31,6 @@ __all__ = [
     "LIFState", "lif_init", "lif_over_time", "lif_step",
     "LayerSchedule", "build_schedule", "permute_conv_params",
     "SNN_BACKENDS", "SNNOutputs", "init_snn", "layer_shapes", "snn_apply",
-    "spike_fn",
+    "accuracy", "make_loss_fn", "make_train_step",
+    "SURROGATE_KINDS", "heaviside", "spike_fn",
 ]

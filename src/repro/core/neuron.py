@@ -36,10 +36,11 @@ def lif_step(
     v_th: float = 1.0,
     leak: float = 1.0,
     surrogate_alpha: float = 10.0,
+    surrogate_kind: str = "fast_sigmoid",
 ) -> Tuple[LIFState, jax.Array]:
     """One timestep of Eq. (1)+(3). Returns (new_state, spikes)."""
     v = state.v * leak + z
-    spikes = spike_fn(v - v_th, surrogate_alpha)
+    spikes = spike_fn(v - v_th, surrogate_alpha, surrogate_kind)
     v = v - v_th * spikes  # reset by subtraction (Eq. 1 third term)
     return LIFState(v=v), spikes
 
@@ -50,6 +51,7 @@ def lif_over_time(
     v_th: float = 1.0,
     leak: float = 1.0,
     surrogate_alpha: float = 10.0,
+    surrogate_kind: str = "fast_sigmoid",
 ) -> Tuple[jax.Array, LIFState]:
     """Run Eq. (1)-(3) over the leading time axis with ``lax.scan``.
 
@@ -59,7 +61,8 @@ def lif_over_time(
 
     def body(state, z):
         state, s = lif_step(state, z, v_th=v_th, leak=leak,
-                            surrogate_alpha=surrogate_alpha)
+                            surrogate_alpha=surrogate_alpha,
+                            surrogate_kind=surrogate_kind)
         return state, s
 
     final, spikes = jax.lax.scan(body, init, z_seq)

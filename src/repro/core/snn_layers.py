@@ -53,30 +53,42 @@ def init_dense(key, din: int, dout: int, dtype=jnp.float32) -> Dict:
 def spiking_conv_step(
     params: Dict, state: LIFState, spikes_in: jax.Array,
     *, aprc: bool, v_th: float, surrogate_alpha: float = 10.0,
+    surrogate_kind: str = "fast_sigmoid",
     backend: str = "ref", num_groups: int = 1,
 ) -> Tuple[LIFState, jax.Array]:
     """One timestep: synaptic current (Eq. 2) then LIF update (Eq. 1+3).
 
-    ``backend="ref"`` is the differentiable XLA path (surrogate gradient).
+    ``backend="ref"``/``"batched"`` is the differentiable XLA path
+    (surrogate gradient) — per-timestep the time-batched backend *is* the
+    reference math, the backends only differ in loop order at the model
+    level (``core.snn_model.snn_apply``), so both names are accepted here.
     ``backend="pallas"`` runs the fused conv+LIF kernel
     (``kernels.spiking_conv_lif``) with T=1 — one HBM round trip for the
-    membrane, no materialized synaptic current; forward-only (Heaviside).
+    membrane, no materialized synaptic current; differentiable via its
+    surrogate custom_vjp.
     """
     if backend == "pallas":
         from repro.kernels import ops
         s, v = ops.spiking_conv_lif(
             spikes_in[None], state.v, params["w"], params["b"],
-            v_th=float(v_th), aprc=aprc, num_groups=num_groups)
+            v_th=float(v_th), aprc=aprc, num_groups=num_groups,
+            surrogate_alpha=surrogate_alpha, surrogate_kind=surrogate_kind)
         return LIFState(v=v), s[0]
-    if backend != "ref":  # pragma: no cover
-        raise ValueError(f"unknown backend {backend!r}")
+    if backend not in ("ref", "batched"):
+        from repro.core.snn_model import SNN_BACKENDS
+        raise ValueError(
+            f"unknown backend {backend!r}; expected one of {SNN_BACKENDS} "
+            "(the model-level switch lives in core.snn_model.snn_apply)")
     z = conv2d(spikes_in, params["w"], aprc=aprc) + params["b"]
-    return lif_step(state, z, v_th=v_th, surrogate_alpha=surrogate_alpha)
+    return lif_step(state, z, v_th=v_th, surrogate_alpha=surrogate_alpha,
+                    surrogate_kind=surrogate_kind)
 
 
 def spiking_dense_step(
     params: Dict, state: LIFState, spikes_in: jax.Array,
     *, v_th: float, surrogate_alpha: float = 10.0,
+    surrogate_kind: str = "fast_sigmoid",
 ) -> Tuple[LIFState, jax.Array]:
     z = spikes_in @ params["w"] + params["b"]
-    return lif_step(state, z, v_th=v_th, surrogate_alpha=surrogate_alpha)
+    return lif_step(state, z, v_th=v_th, surrogate_alpha=surrogate_alpha,
+                    surrogate_kind=surrogate_kind)

@@ -21,6 +21,13 @@ stays in XLA ops (the fast CPU path); ``"pallas"`` dispatches the fused
 ``spiking_conv_lif`` kernel per layer (time loop inside the kernel, membrane
 in registers, (T,B,row-block) spike-skip table; see docs/kernels.md).
 
+All three backends are differentiable with the same selectable surrogate
+(``surrogate_kind`` x ``surrogate_alpha``): the time-batched paths
+backprop through ``spike_fn`` scans and the fused kernel's ``custom_vjp``
+(kernels/spiking_conv_lif.py), and ``jax.grad`` agrees across backends to
+float tolerance (tests/test_snn_backends.py) — training can run on the
+fast layer-outer hot path.
+
 Both orders compute the same math; outputs agree to float tolerance.  The
 scan carry / layer pipeline additionally accumulates per-layer per-channel
 **spike counts**, the actual-workload signal consumed by CBWS/balance
@@ -84,7 +91,8 @@ def init_snn(key: jax.Array, cfg: SNNConfig) -> Dict:
 
 
 def snn_apply(params: Dict, frames: jax.Array, cfg: SNNConfig,
-              *, surrogate_alpha: float = 10.0, backend: str = "ref",
+              *, surrogate_alpha: float = 10.0,
+              surrogate_kind: str = "fast_sigmoid", backend: str = "ref",
               schedule: Optional[Sequence] = None) -> SNNOutputs:
     """frames: (B, H, W, Cin) analog input in [0,1] (direct coding) or a
     pre-encoded spike train (T, B, H, W, Cin).
@@ -99,6 +107,7 @@ def snn_apply(params: Dict, frames: jax.Array, cfg: SNNConfig,
     if backend in ("batched", "pallas"):
         return _apply_time_batched(
             params, frames, cfg, surrogate_alpha=surrogate_alpha,
+            surrogate_kind=surrogate_kind,
             use_pallas=(backend == "pallas"), schedule=schedule)
     if backend != "ref":
         raise ValueError(
@@ -137,7 +146,8 @@ def snn_apply(params: Dict, frames: jax.Array, cfg: SNNConfig,
             else:
                 st, s = L.spiking_conv_step(
                     params["conv"][i], conv_s[i], x, aprc=cfg.aprc,
-                    v_th=cfg.v_threshold, surrogate_alpha=surrogate_alpha)
+                    v_th=cfg.v_threshold, surrogate_alpha=surrogate_alpha,
+                    surrogate_kind=surrogate_kind)
                 new_conv_s.append(st)
                 new_cnts.append(cnts[i] + s.sum(axis=(0, 1, 2)))
                 spikes_t.append(s.sum(axis=(0, 1, 2)))
@@ -148,7 +158,8 @@ def snn_apply(params: Dict, frames: jax.Array, cfg: SNNConfig,
             for j, dp in enumerate(params["dense"][:-1]):
                 st, x = L.spiking_dense_step(dp, dense_s[j], x,
                                              v_th=cfg.v_threshold,
-                                             surrogate_alpha=surrogate_alpha)
+                                             surrogate_alpha=surrogate_alpha,
+                                             surrogate_kind=surrogate_kind)
                 new_dense_s.append(st)
             z = x @ params["dense"][-1]["w"] + params["dense"][-1]["b"]
             v_out = v_out + z
@@ -175,8 +186,8 @@ def snn_apply(params: Dict, frames: jax.Array, cfg: SNNConfig,
     )
 
 
-def _lif_scan(z_seq: jax.Array, v_th: float,
-              alpha: float) -> Tuple[jax.Array, jax.Array]:
+def _lif_scan(z_seq: jax.Array, v_th: float, alpha: float,
+              kind: str = "fast_sigmoid") -> Tuple[jax.Array, jax.Array]:
     """LIF recurrence over a precomputed current train z_seq: (T, B, ...).
 
     Returns (spike train (T, ...), per-step channel counts (T, C)).
@@ -189,19 +200,19 @@ def _lif_scan(z_seq: jax.Array, v_th: float,
     materializations and roughly doubled the whole-model time)."""
     def body(v, z):
         v = v + z
-        s = spike_fn(v - v_th, alpha)
+        s = spike_fn(v - v_th, alpha, kind)
         return v - v_th * s, (s, s.sum(axis=tuple(range(s.ndim - 1))))
 
     _, (s_seq, cnt) = jax.lax.scan(body, jnp.zeros_like(z_seq[0]), z_seq)
     return s_seq, cnt
 
 
-def _lif_scan_const(z: jax.Array, t: int, v_th: float,
-                    alpha: float) -> Tuple[jax.Array, jax.Array]:
+def _lif_scan_const(z: jax.Array, t: int, v_th: float, alpha: float,
+                    kind: str = "fast_sigmoid") -> Tuple[jax.Array, jax.Array]:
     """LIF recurrence with a time-constant current (hoisted first layer)."""
     def body(v, _):
         v = v + z
-        s = spike_fn(v - v_th, alpha)
+        s = spike_fn(v - v_th, alpha, kind)
         return v - v_th * s, (s, s.sum(axis=tuple(range(s.ndim - 1))))
 
     _, (s_seq, cnt) = jax.lax.scan(body, jnp.zeros_like(z), None, length=t)
@@ -262,7 +273,8 @@ def _kernel_groups(cout: int, cfg: SNNConfig) -> int:
 
 
 def _apply_time_batched(params: Dict, frames: jax.Array, cfg: SNNConfig,
-                        *, surrogate_alpha: float, use_pallas: bool,
+                        *, surrogate_alpha: float, surrogate_kind: str,
+                        use_pallas: bool,
                         schedule: Optional[Sequence]) -> SNNOutputs:
     """Layer-outer execution: each layer consumes the whole (T, B) block.
 
@@ -315,7 +327,8 @@ def _apply_time_batched(params: Dict, frames: jax.Array, cfg: SNNConfig,
                                       num_groups=groups)
             else:
                 z1 = _conv_xla(x, p, cfg.aprc)
-            s, cnt = _lif_scan_const(z1, T, v_th, surrogate_alpha)
+            s, cnt = _lif_scan_const(z1, T, v_th, surrogate_alpha,
+                                     surrogate_kind)
             x = s
         else:
             if use_pallas:
@@ -324,11 +337,12 @@ def _apply_time_batched(params: Dict, frames: jax.Array, cfg: SNNConfig,
                 v0 = jnp.zeros((B, e_h, e_w, cout), x.dtype)
                 s, _ = ops.spiking_conv_lif(
                     x, v0, p["w"], p["b"], v_th=float(v_th), aprc=cfg.aprc,
-                    num_groups=groups)
+                    num_groups=groups, surrogate_alpha=surrogate_alpha,
+                    surrogate_kind=surrogate_kind)
                 cnt = s.sum(axis=(1, 2, 3))
             else:
                 z = _conv_folded(x, p, cfg, use_pallas, groups)
-                s, cnt = _lif_scan(z, v_th, surrogate_alpha)
+                s, cnt = _lif_scan(z, v_th, surrogate_alpha, surrogate_kind)
             x = s
         if inv_perms[i] is not None:
             cnt = cnt[:, inv_perms[i]]
@@ -338,7 +352,8 @@ def _apply_time_batched(params: Dict, frames: jax.Array, cfg: SNNConfig,
         x = x.reshape(T, B, -1)
         for j, dp in enumerate(params["dense"][:-1]):
             z = x.reshape(T * B, -1) @ dp["w"] + dp["b"]
-            x, _ = _lif_scan(z.reshape(T, B, -1), v_th, surrogate_alpha)
+            x, _ = _lif_scan(z.reshape(T, B, -1), v_th, surrogate_alpha,
+                             surrogate_kind)
         dp = params["dense"][-1]
         z = (x.reshape(T * B, -1) @ dp["w"] + dp["b"]).reshape(T, B, -1)
         v_out = z.sum(axis=0)           # readout accumulates, never fires

@@ -1,0 +1,72 @@
+"""Shared surrogate-gradient training step for the paper's SNNs.
+
+One builder used by ``examples/snn_mnist_train.py``, the production
+launcher (``python -m repro.launch.train --snn snn-mnist --backend
+batched``) and the ``train_step`` rows of ``benchmarks/bench_kernels.py``
+— so every entry point trains through the same loss/step function and the
+``backend`` switch (``core.snn_model.SNN_BACKENDS``) selects the execution
+order that is actually deployed:
+
+  * ``"ref"``      — seed timestep-outer scan (the original training path)
+  * ``"batched"``  — time-batched layer pipeline (the serving hot path)
+  * ``"pallas"``   — fused conv+LIF kernels, surrogate custom_vjp backward
+
+The paper trains offline and deploys the balanced accelerator; FireFly v2
+(arXiv 2309.16158) argues the deployed dataflow should be the trained one
+— training on the time-batched backends closes that gap here.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SNNConfig
+from repro.core.snn_model import snn_apply
+
+__all__ = ["make_loss_fn", "make_train_step", "accuracy"]
+
+
+def make_loss_fn(cfg: SNNConfig, *, backend: str = "ref",
+                 surrogate_alpha: float = 10.0,
+                 surrogate_kind: str = "fast_sigmoid") -> Callable:
+    """Cross-entropy on the readout logits of the selected backend."""
+    def loss_fn(params: Dict, x: jax.Array, y: jax.Array) -> jax.Array:
+        out = snn_apply(params, x, cfg, backend=backend,
+                        surrogate_alpha=surrogate_alpha,
+                        surrogate_kind=surrogate_kind)
+        logp = jax.nn.log_softmax(out.logits.astype(jnp.float32))
+        # logits batch dim, NOT x.shape[0]: x may be a (T, B, ...) spike train
+        return -logp[jnp.arange(logp.shape[0]), y].mean()
+
+    return loss_fn
+
+
+def make_train_step(cfg: SNNConfig, *, backend: str = "ref", lr: float = 1e-3,
+                    momentum: float = 0.9, surrogate_alpha: float = 10.0,
+                    surrogate_kind: str = "fast_sigmoid") -> Callable:
+    """SGD+momentum step: ``(params, mom, x, y) -> (params, mom, loss)``.
+
+    Jit-friendly (wrap with ``jax.jit`` at the call site); gradients flow
+    through the chosen backend's surrogate path — batched/pallas train to
+    the same accuracy band as the ref scan (tests/test_snn_backends.py).
+    """
+    loss_fn = make_loss_fn(cfg, backend=backend,
+                           surrogate_alpha=surrogate_alpha,
+                           surrogate_kind=surrogate_kind)
+
+    def step(params: Dict, mom: Dict, x: jax.Array, y: jax.Array
+             ) -> Tuple[Dict, Dict, jax.Array]:
+        loss, g = jax.value_and_grad(loss_fn)(params, x, y)
+        mom = jax.tree.map(lambda m, gg: momentum * m + gg, mom, g)
+        params = jax.tree.map(lambda w, m: w - lr * m, params, mom)
+        return params, mom, loss
+
+    return step
+
+
+def accuracy(params: Dict, cfg: SNNConfig, x: jax.Array, y: jax.Array,
+             *, backend: str = "ref") -> float:
+    out = snn_apply(params, x, cfg, backend=backend)
+    return float((jnp.argmax(out.logits, -1) == y).mean())

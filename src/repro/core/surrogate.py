@@ -1,11 +1,18 @@
 """Surrogate gradients for the non-differentiable spike function.
 
 Forward: Heaviside step  U(v - v_th)  (paper Eq. 3).
-Backward: fast-sigmoid (SuperSpike) or triangle surrogate, selectable.
+Backward: fast-sigmoid (SuperSpike), triangle or arctan surrogate, selectable.
 
 The paper trains its networks offline and deploys on the FPGA; here the
 JAX-native route is direct surrogate-gradient training (BPTT through
-``lax.scan`` over timesteps), which reaches the same MNIST accuracy band.
+``lax.scan`` over timesteps — or through the fused time-batched kernels'
+``custom_vjp``, see kernels/spiking_conv_lif.py), which reaches the same
+MNIST accuracy band.
+
+``heaviside`` is the *inference-only* step: differentiating through it is
+a silent-zero-gradient bug (the derivative is 0 a.e.), so its VJP raises
+instead of returning zeros — training code must go through ``spike_fn``
+or one of the differentiable ``snn_apply`` backends.
 """
 from __future__ import annotations
 
@@ -14,35 +21,70 @@ import functools
 import jax
 import jax.numpy as jnp
 
-__all__ = ["spike_fn", "heaviside"]
+__all__ = ["spike_fn", "heaviside", "surrogate_grad", "SURROGATE_KINDS",
+           "NonDifferentiableSpikeError"]
+
+SURROGATE_KINDS = ("fast_sigmoid", "triangle", "arctan")
 
 
+class NonDifferentiableSpikeError(TypeError):
+    """Raised when ``heaviside`` is differentiated (gradient is 0 a.e.)."""
+
+
+def surrogate_grad(v: jax.Array, alpha: float, kind: str) -> jax.Array:
+    """d(spike)/dv of the chosen surrogate, evaluated at ``v = V - V_th``.
+
+    Plain jnp — usable both under autodiff tracing and inside Pallas
+    kernels (the backward kernel inlines it per timestep).
+    """
+    if kind == "fast_sigmoid":
+        # SuperSpike: 1 / (1 + alpha*|v|)^2
+        return 1.0 / (1.0 + alpha * jnp.abs(v)) ** 2
+    if kind == "triangle":
+        return jnp.maximum(0.0, 1.0 - alpha * jnp.abs(v))
+    if kind == "arctan":
+        return 1.0 / (1.0 + (alpha * v) ** 2)
+    raise ValueError(f"unknown surrogate {kind!r}; expected one of "
+                     f"{SURROGATE_KINDS}")
+
+
+@jax.custom_vjp
 def heaviside(v: jax.Array) -> jax.Array:
-    """Straight Heaviside — used at pure-inference time."""
+    """Straight Heaviside — used at pure-inference time.
+
+    Not differentiable: ``jax.grad`` through it raises (see module doc)
+    rather than silently producing zero gradients.
+    """
     return (v >= 0.0).astype(v.dtype)
+
+
+def _heaviside_fwd(v):
+    return heaviside(v), None
+
+
+def _heaviside_bwd(_, g):
+    raise NonDifferentiableSpikeError(
+        "heaviside() has zero gradient almost everywhere; differentiating "
+        "through it silently kills training. Use spike_fn() (surrogate "
+        "gradient) or one of the differentiable snn_apply backends "
+        "('ref', 'batched', 'pallas').")
+
+
+heaviside.defvjp(_heaviside_fwd, _heaviside_bwd)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
 def spike_fn(v: jax.Array, alpha: float = 10.0, kind: str = "fast_sigmoid") -> jax.Array:
     """Spike = U(v);  d(spike)/dv given by the chosen surrogate."""
-    return heaviside(v)
+    return (v >= 0.0).astype(v.dtype)
 
 
 def _spike_fwd(v, alpha, kind):
-    return heaviside(v), v
+    return spike_fn(v, alpha, kind), v
 
 
 def _spike_bwd(alpha, kind, v, g):
-    if kind == "fast_sigmoid":
-        # SuperSpike: 1 / (1 + alpha*|v|)^2
-        surr = 1.0 / (1.0 + alpha * jnp.abs(v)) ** 2
-    elif kind == "triangle":
-        surr = jnp.maximum(0.0, 1.0 - alpha * jnp.abs(v))
-    elif kind == "arctan":
-        surr = 1.0 / (1.0 + (alpha * v) ** 2)
-    else:  # pragma: no cover
-        raise ValueError(f"unknown surrogate {kind!r}")
-    return (g * surr.astype(g.dtype),)
+    return (g * surrogate_grad(v, alpha, kind).astype(g.dtype),)
 
 
 spike_fn.defvjp(_spike_fwd, _spike_bwd)

@@ -2,18 +2,32 @@
 
 ``interpret`` defaults to auto: Pallas interpret mode on CPU (this
 container), compiled Mosaic on real TPU.
+
+All wrappers are **differentiable**: ``spiking_conv`` and
+``spiking_conv_lif`` carry ``jax.custom_vjp`` rules (surrogate BPTT for the
+fused kernel, transposed-tap conv backward for both — see
+kernels/spiking_conv_lif.py), so ``jax.grad`` through the pallas model
+backend trains instead of silently returning zeros.  ``bwd`` selects the
+backward implementation: ``"pallas"`` (the mirror kernels) or ``"xla"``
+(the fallback, default in interpret mode where a Python-interpreted
+backward kernel would be pure overhead).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+import functools
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.lif import lif_fused_pallas
-from repro.kernels.spiking_conv import spiking_conv_pallas
-from repro.kernels.spiking_conv_lif import spiking_conv_lif_pallas
+from repro.kernels.spiking_conv import (conv_grad_input_pallas,
+                                        conv_grad_input_xla,
+                                        conv_grad_weights_xla,
+                                        spiking_conv_pallas)
+from repro.kernels.spiking_conv_lif import (ConvLIFOpts, _largest_divisor,
+                                            spiking_conv_lif_train)
 
 __all__ = ["spiking_conv", "lif_fused", "spiking_conv_lif",
            "default_interpret"]
@@ -23,18 +37,63 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _default_bwd(interpret: bool) -> str:
+    # compiled TPU -> mirror Pallas backward kernels; interpret mode (CPU
+    # validation) -> XLA fallback (an interpreted backward kernel is a
+    # Python loop, not a performance surface)
+    return "xla" if interpret else "pallas"
+
+
+class _ConvOpts(NamedTuple):
+    aprc: bool = True
+    block_rows: int = 8
+    num_groups: int = 4
+    interpret: bool = True
+    bwd: str = "xla"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _spiking_conv_vjp(opts: _ConvOpts, spikes, w, bias):
+    return spiking_conv_pallas(
+        spikes, w, bias, aprc=opts.aprc, block_rows=opts.block_rows,
+        num_groups=opts.num_groups, interpret=opts.interpret)
+
+
+def _spiking_conv_fwd(opts, spikes, w, bias):
+    return _spiking_conv_vjp(opts, spikes, w, bias), (spikes, w, bias)
+
+
+def _spiking_conv_bwd(opts, res, g):
+    spikes, w, bias = res
+    if opts.bwd == "pallas":
+        groups = _largest_divisor(w.shape[2], opts.num_groups)
+        dx = conv_grad_input_pallas(
+            g, w, aprc=opts.aprc, block_rows=opts.block_rows,
+            num_groups=groups, interpret=opts.interpret)
+    else:
+        dx = conv_grad_input_xla(g, w, aprc=opts.aprc)
+    dw, db = conv_grad_weights_xla(spikes, g, aprc=opts.aprc, r=w.shape[0])
+    return (dx.astype(spikes.dtype), dw.astype(w.dtype), db.astype(bias.dtype))
+
+
+_spiking_conv_vjp.defvjp(_spiking_conv_fwd, _spiking_conv_bwd)
+
+
 def spiking_conv(
     spikes: jax.Array, w: jax.Array, bias: jax.Array,
     *, aprc: bool = True, block_rows: int = 8, num_groups: int = 4,
-    interpret: Optional[bool] = None,
+    interpret: Optional[bool] = None, bwd: Optional[str] = None,
 ) -> jax.Array:
     """Spike-driven conv (see kernels.spiking_conv).  Output matches
-    ``ref.spiking_conv_ref`` exactly up to float accumulation order."""
+    ``ref.spiking_conv_ref`` exactly up to float accumulation order.
+    Differentiable (transposed-tap backward)."""
     if interpret is None:
         interpret = default_interpret()
-    return spiking_conv_pallas(
-        spikes, w, bias, aprc=aprc, block_rows=block_rows,
-        num_groups=num_groups, interpret=interpret)
+    if bwd is None:
+        bwd = _default_bwd(interpret)
+    opts = _ConvOpts(aprc=aprc, block_rows=block_rows, num_groups=num_groups,
+                     interpret=interpret, bwd=bwd)
+    return _spiking_conv_vjp(opts, spikes, w, bias)
 
 
 def lif_fused(
@@ -66,18 +125,30 @@ def spiking_conv_lif(
     spikes: jax.Array, v0: jax.Array, w: jax.Array, bias: jax.Array,
     *, v_th: float = 1.0, aprc: bool = True, block_rows: int = 8,
     num_groups: int = 4, interpret: Optional[bool] = None,
+    surrogate_alpha: float = 10.0, surrogate_kind: str = "fast_sigmoid",
+    bwd: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Fused conv+LIF over a whole spike train (see kernels.spiking_conv_lif).
 
     spikes: (T, B, H, W, Cin);  v0: (B, E, E', Cout).  Returns the output
     spike train and final membrane, matching the composition
     ``ref.spiking_conv_ref`` + ``ref.lif_fused_ref`` scanned over T.
+
+    Differentiable: ``jax.grad`` applies the selectable surrogate
+    (``surrogate_kind`` in core.surrogate.SURROGATE_KINDS, scaled by
+    ``surrogate_alpha``) through reverse-time BPTT — the same gradient the
+    ``backend="ref"`` scan computes.
     """
     if interpret is None:
         interpret = default_interpret()
-    return spiking_conv_lif_pallas(
-        spikes, v0, w, bias, v_th=float(v_th), aprc=aprc,
-        block_rows=block_rows, num_groups=num_groups, interpret=interpret)
+    if bwd is None:
+        bwd = _default_bwd(interpret)
+    opts = ConvLIFOpts(
+        v_th=float(v_th), aprc=aprc, block_rows=block_rows,
+        num_groups=num_groups, interpret=interpret,
+        surrogate_alpha=float(surrogate_alpha),
+        surrogate_kind=surrogate_kind, bwd=bwd)
+    return spiking_conv_lif_train(opts, spikes, v0, w, bias)
 
 
 # re-export oracles for test convenience

@@ -43,7 +43,17 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["spiking_conv_kernel", "spiking_conv_pallas", "row_block_counts"]
+__all__ = ["spiking_conv_kernel", "spiking_conv_pallas", "row_block_counts",
+           "conv_grad_input_xla", "conv_grad_input_pallas",
+           "conv_grad_weights_xla", "conv_pads"]
+
+
+def conv_pads(r: int, aprc: bool) -> tuple:
+    """(pad_lo, pad_hi) of the forward conv; APRC = full, else SAME."""
+    if aprc:
+        return r - 1, r - 1
+    lo = (r - 1) // 2
+    return lo, r - 1 - lo
 
 
 def _make_kernel(r: int, block_rows: int, w_out: int):
@@ -158,3 +168,135 @@ def spiking_conv_pallas(
 
 
 spiking_conv_kernel = _make_kernel
+
+
+# ---------------------------------------------------------------------------
+# Backward-pass building blocks (consumed by the custom_vjp rules in
+# spiking_conv_lif.py / ops.py).
+#
+# The transpose of the forward conv (pads (lo, hi)) is itself a conv of the
+# output-cotangent with the spatially-flipped, channel-transposed taps
+#     wt[dy, dx, co, ci] = w[R-1-dy, R-1-dx, ci, co]
+# under pads (R-1-lo, R-1-hi): for APRC's full conv that degenerates to a
+# VALID conv (no padding at all), for SAME it swaps (lo, hi).
+# ---------------------------------------------------------------------------
+
+
+def _transposed_taps(w: jax.Array) -> jax.Array:
+    """(R, R, Cin, Cout) -> flipped (R, R, Cout, Cin) backward taps."""
+    return w[::-1, ::-1].transpose(0, 1, 3, 2)
+
+
+def conv_grad_input_xla(dz: jax.Array, w: jax.Array, *, aprc: bool
+                        ) -> jax.Array:
+    """dL/d(input spikes) from the dV cotangent — XLA fallback path.
+
+    dz: (N, E_h, E_w, Cout) cotangent of the conv output;
+    w:  (R, R, Cin, Cout) forward taps.  Returns (N, H, W, Cin).
+    """
+    r = w.shape[0]
+    lo, hi = conv_pads(r, aprc)
+    pad = (r - 1 - lo, r - 1 - hi)
+    return jax.lax.conv_general_dilated(
+        dz.astype(jnp.float32), _transposed_taps(w).astype(jnp.float32),
+        window_strides=(1, 1), padding=(pad, pad),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _make_grad_input_kernel(r: int, block_rows: int, w_out: int):
+    """Implicit-GEMM tap loop over the *transposed* taps — same MXU
+    structure as the forward kernel, no skip table (the cotangent is
+    dense) and no bias."""
+    def kernel(g_ref, wt_ref, o_ref):
+        cin_blk = o_ref.shape[-1]
+        g = g_ref[0].astype(jnp.float32)     # (block_rows+R-1, W_pad, Cout)
+        cout = g.shape[-1]
+        acc = jnp.zeros((block_rows * w_out, cin_blk), jnp.float32)
+        for dy in range(r):                  # R*R MXU matmuls
+            for dx in range(r):
+                tile = jax.lax.dynamic_slice(
+                    g, (dy, dx, 0), (block_rows, w_out, cout))
+                tap = wt_ref[dy, dx].astype(jnp.float32)  # (Cout, Cin_blk)
+                acc = acc + jnp.dot(
+                    tile.reshape(block_rows * w_out, cout), tap,
+                    preferred_element_type=jnp.float32)
+        o_ref[...] = acc.reshape(block_rows, w_out, cin_blk)[None].astype(
+            o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("aprc", "block_rows", "num_groups", "interpret"))
+def conv_grad_input_pallas(
+    dz: jax.Array,           # (N, E_h, E_w, Cout) conv-output cotangent
+    w: jax.Array,            # (R, R, Cin, Cout) forward taps
+    *,
+    aprc: bool = True,
+    block_rows: int = 8,
+    num_groups: int = 1,     # lanes over Cin (the *output* channels here)
+    interpret: bool = True,
+) -> jax.Array:
+    """Pallas transposed-tap backward kernel: dL/d(input), (N, H, W, Cin)."""
+    N, e_h, e_w, Cout = dz.shape
+    R, _, Cin, _ = w.shape
+    assert Cin % num_groups == 0, (Cin, num_groups)
+    cin_blk = Cin // num_groups
+    lo, hi = conv_pads(R, aprc)
+    H, W = e_h + (R - 1) - lo - hi, e_w + (R - 1) - lo - hi
+    # backward pads (R-1-lo, R-1-hi); pad rows further up to the row-block
+    n_blocks = -(-H // block_rows)
+    h_out_pad = n_blocks * block_rows
+    h_pad = h_out_pad + R - 1
+    w_pad = W + R - 1
+    g = jnp.zeros((N, h_pad, w_pad, Cout), jnp.float32)
+    g = jax.lax.dynamic_update_slice(
+        g, dz.astype(jnp.float32), (0, R - 1 - lo, R - 1 - lo, 0))
+    wt = _transposed_taps(w).astype(jnp.float32)
+    halo_rows = block_rows + R - 1
+
+    kernel = _make_grad_input_kernel(R, block_rows, W)
+    out = pl.pallas_call(
+        kernel,
+        grid=(N, n_blocks, num_groups),
+        in_specs=[
+            pl.BlockSpec((1, halo_rows, w_pad, Cout),
+                         lambda b, i, g_: (b, i * block_rows, 0, 0),
+                         indexing_mode=pl.unblocked),
+            pl.BlockSpec((R, R, Cout, cin_blk),
+                         lambda b, i, g_: (0, 0, 0, g_)),
+        ],
+        out_specs=pl.BlockSpec((1, block_rows, W, cin_blk),
+                               lambda b, i, g_: (b, i, 0, g_)),
+        out_shape=jax.ShapeDtypeStruct((N, h_out_pad, W, Cin), jnp.float32),
+        interpret=interpret,
+    )(g, wt)
+    return out[:, :H]
+
+
+def conv_grad_weights_xla(x: jax.Array, dz: jax.Array, *, aprc: bool,
+                          r: int) -> tuple:
+    """(dL/dw, dL/db) from the dV cotangent — tap-loop of folded matmuls.
+
+    x: (N, H, W, Cin) forward input;  dz: (N, E_h, E_w, Cout).
+    dw[dy,dx,ci,co] = sum_{n,y,x} x_pad[n, y+dy, x+dx, ci] * dz[n, y, x, co]
+    — one (Cin, N*E*E') @ (N*E*E', Cout) matmul per tap, the exact
+    transpose of the forward implicit GEMM.
+    """
+    lo, hi = conv_pads(r, aprc)
+    n, e_h, e_w, cout = dz.shape
+    cin = x.shape[-1]
+    xp = jnp.pad(x.astype(jnp.float32),
+                 ((0, 0), (lo, hi), (lo, hi), (0, 0)))
+    gz = dz.astype(jnp.float32).reshape(n * e_h * e_w, cout)
+    rows = []
+    for dy in range(r):
+        cols = []
+        for dx in range(r):
+            tile = jax.lax.dynamic_slice(
+                xp, (0, dy, dx, 0), (n, e_h, e_w, cin))
+            cols.append(tile.reshape(n * e_h * e_w, cin).T @ gz)
+        rows.append(jnp.stack(cols))
+    dw = jnp.stack(rows)                       # (R, R, Cin, Cout)
+    db = dz.astype(jnp.float32).sum(axis=(0, 1, 2))
+    return dw, db

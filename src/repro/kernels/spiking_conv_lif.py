@@ -1,4 +1,4 @@
-"""Fused spiking-conv + LIF kernel (Pallas, TPU target).
+"""Fused spiking-conv + LIF kernel (Pallas, TPU target) — forward and VJP.
 
 One kernel runs a whole conv layer for **all T timesteps**: the implicit-GEMM
 tap loop of ``spiking_conv.py`` and the LIF integrate/fire/reset of ``lif.py``
@@ -30,23 +30,51 @@ kernel runs in the **layer-by-layer** (time-batched) execution order of
 order.  With ``T=1`` it degenerates to a drop-in fused replacement for
 ``spiking_conv + lif_fused`` inside a timestep-outer scan
 (``core.snn_layers.spiking_conv_step(backend="pallas")``).
+
+Training (``spiking_conv_lif_train``, a ``jax.custom_vjp``): the primal is
+the forward-only kernel above; under ``jax.grad`` the fwd rule reruns it
+with an extra output — the **pre-reset membrane** ``u_t = v_{t-1} + dV_t``,
+exactly the residual the surrogate needs — and the bwd rule runs surrogate
+BPTT in the time-batched order:
+
+  1. reverse-time elementwise scan (``lif_bwd_pallas`` / XLA fallback):
+         lam_t = c_t + (g_s[t] - v_th * c_t) * sg(u_t - v_th)
+         c_{t-1} = lam_t,        dv0 = lam_0
+     with ``sg`` the selectable surrogate (core.surrogate.surrogate_grad)
+     and ``c_{T-1} = g_v`` the final-membrane cotangent.  ``lam_t`` is the
+     cotangent of the synaptic current dV_t.
+  2. conv backward over the folded (T*B) batch: d(input) via the
+     transposed-tap implicit GEMM (``conv_grad_input_pallas`` — the exact
+     mirror of the forward tap loop — or the XLA conv fallback), and
+     (dw, db) via the tap-loop of folded matmuls.
+
+This is the same gradient the ``backend="ref"``/``"batched"`` surrogate
+scans compute, reordered — parity is asserted in tests/test_snn_backends.py.
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.spiking_conv import row_block_counts
+from repro.core.surrogate import surrogate_grad
+from repro.kernels.spiking_conv import (conv_grad_input_pallas,
+                                        conv_grad_input_xla,
+                                        conv_grad_weights_xla,
+                                        row_block_counts)
 
-__all__ = ["spiking_conv_lif_pallas"]
+__all__ = ["spiking_conv_lif_pallas", "spiking_conv_lif_fwd_pallas",
+           "spiking_conv_lif_train", "ConvLIFOpts", "lif_bwd_pallas",
+           "lif_bwd_xla"]
 
 
 def _make_kernel(r: int, t_steps: int, block_rows: int, w_out: int,
-                 v_th: float):
-    def kernel(counts_ref, x_ref, w_ref, b_ref, v0_ref, s_ref, v_ref):
+                 v_th: float, save_u: bool = False):
+    def kernel(counts_ref, x_ref, w_ref, b_ref, v0_ref, s_ref, v_ref,
+               *maybe_u_ref):
         b = pl.program_id(0)
         i = pl.program_id(1)
         cout_blk = v_ref.shape[-1]
@@ -76,6 +104,9 @@ def _make_kernel(r: int, t_steps: int, block_rows: int, w_out: int,
 
         def step(t, v):
             v = v + conv_at(t)                     # Eq. (1)+(2): integrate dV
+            if save_u:
+                # pre-reset membrane: the surrogate's backward residual
+                maybe_u_ref[0][t, 0] = v.astype(maybe_u_ref[0].dtype)
             s = (v >= v_th).astype(jnp.float32)    # Eq. (3): fire
             v = v - v_th * s                       # reset by subtraction
             s_ref[t, 0] = s.astype(s_ref.dtype)
@@ -88,27 +119,8 @@ def _make_kernel(r: int, t_steps: int, block_rows: int, w_out: int,
     return kernel
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("v_th", "aprc", "block_rows", "num_groups", "interpret"))
-def spiking_conv_lif_pallas(
-    spikes: jax.Array,       # (T, B, H, W, Cin) binary input train
-    v0: jax.Array,           # (B, E_h, E_w, Cout) initial membrane
-    w: jax.Array,            # (R, R, Cin, Cout) — CBWS-permuted
-    bias: jax.Array,         # (Cout,)
-    *,
-    v_th: float = 1.0,
-    aprc: bool = True,
-    block_rows: int = 8,
-    num_groups: int = 4,
-    interpret: bool = True,
-):
-    """Fused conv+LIF over a spike train.
-
-    Returns ``(s, v_final)`` with ``s: (T, B, E_h, E_w, Cout)`` the output
-    spike train and ``v_final: (B, E_h, E_w, Cout)`` the membrane after the
-    last step; ``E = H+R-1`` (APRC) or ``H`` (same-pad).
-    """
+def _fused_call(spikes, v0, w, bias, *, v_th, aprc, block_rows, num_groups,
+                interpret, save_u):
     T, B, H, W, Cin = spikes.shape
     R, _, _, Cout = w.shape
     assert Cout % num_groups == 0, (Cout, num_groups)
@@ -139,8 +151,22 @@ def spiking_conv_lif_pallas(
     vp = jnp.zeros((B, e_h_pad, e_w, Cout), v0.dtype)
     vp = jax.lax.dynamic_update_slice(vp, v0, (0, 0, 0, 0))
 
-    kernel = _make_kernel(R, T, block_rows, e_w, float(v_th))
-    s_out, v_out = pl.pallas_call(
+    seq_spec = pl.BlockSpec((T, 1, block_rows, e_w, cout_blk),
+                            lambda b, i, g: (0, b, i, 0, g))
+    mem_spec = pl.BlockSpec((1, block_rows, e_w, cout_blk),
+                            lambda b, i, g: (b, i, 0, g))
+    out_specs = [seq_spec, mem_spec]
+    out_shape = [
+        jax.ShapeDtypeStruct((T, B, e_h_pad, e_w, Cout), spikes.dtype),
+        jax.ShapeDtypeStruct((B, e_h_pad, e_w, Cout), v0.dtype),
+    ]
+    if save_u:
+        out_specs.append(seq_spec)
+        out_shape.append(
+            jax.ShapeDtypeStruct((T, B, e_h_pad, e_w, Cout), jnp.float32))
+
+    kernel = _make_kernel(R, T, block_rows, e_w, float(v_th), save_u=save_u)
+    outs = pl.pallas_call(
         kernel,
         grid=(B, n_blocks, num_groups),
         in_specs=[
@@ -151,19 +177,233 @@ def spiking_conv_lif_pallas(
                          indexing_mode=pl.unblocked),
             pl.BlockSpec((R, R, Cin, cout_blk), lambda b, i, g: (0, 0, 0, g)),
             pl.BlockSpec((cout_blk,), lambda b, i, g: (g,)),
-            pl.BlockSpec((1, block_rows, e_w, cout_blk),
-                         lambda b, i, g: (b, i, 0, g)),
+            mem_spec,
         ],
-        out_specs=[
-            pl.BlockSpec((T, 1, block_rows, e_w, cout_blk),
-                         lambda b, i, g: (0, b, i, 0, g)),
-            pl.BlockSpec((1, block_rows, e_w, cout_blk),
-                         lambda b, i, g: (b, i, 0, g)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((T, B, e_h_pad, e_w, Cout), spikes.dtype),
-            jax.ShapeDtypeStruct((B, e_h_pad, e_w, Cout), v0.dtype),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(counts, x, w, bias, vp)
+    if save_u:
+        s_out, v_out, u_out = outs
+        return s_out[:, :, :e_h], v_out[:, :e_h], u_out[:, :, :e_h]
+    s_out, v_out = outs
     return s_out[:, :, :e_h], v_out[:, :e_h]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("v_th", "aprc", "block_rows", "num_groups", "interpret"))
+def spiking_conv_lif_pallas(
+    spikes: jax.Array,       # (T, B, H, W, Cin) binary input train
+    v0: jax.Array,           # (B, E_h, E_w, Cout) initial membrane
+    w: jax.Array,            # (R, R, Cin, Cout) — CBWS-permuted
+    bias: jax.Array,         # (Cout,)
+    *,
+    v_th: float = 1.0,
+    aprc: bool = True,
+    block_rows: int = 8,
+    num_groups: int = 4,
+    interpret: bool = True,
+):
+    """Fused conv+LIF over a spike train (forward only).
+
+    Returns ``(s, v_final)`` with ``s: (T, B, E_h, E_w, Cout)`` the output
+    spike train and ``v_final: (B, E_h, E_w, Cout)`` the membrane after the
+    last step; ``E = H+R-1`` (APRC) or ``H`` (same-pad).
+    """
+    return _fused_call(spikes, v0, w, bias, v_th=v_th, aprc=aprc,
+                       block_rows=block_rows, num_groups=num_groups,
+                       interpret=interpret, save_u=False)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("v_th", "aprc", "block_rows", "num_groups", "interpret"))
+def spiking_conv_lif_fwd_pallas(
+    spikes: jax.Array, v0: jax.Array, w: jax.Array, bias: jax.Array,
+    *, v_th: float = 1.0, aprc: bool = True, block_rows: int = 8,
+    num_groups: int = 4, interpret: bool = True,
+):
+    """Forward that additionally emits the **pre-reset membrane** train
+    ``u: (T, B, E_h, E_w, Cout) f32`` — the saved residual of the VJP
+    (``sg(u - v_th)`` is the surrogate factor of every step).
+
+    Returns ``(s, v_final, u)``.
+    """
+    return _fused_call(spikes, v0, w, bias, v_th=v_th, aprc=aprc,
+                       block_rows=block_rows, num_groups=num_groups,
+                       interpret=interpret, save_u=True)
+
+
+# ---------------------------------------------------------------------------
+# Backward: reverse-time surrogate scan (Pallas kernel + XLA fallback)
+# ---------------------------------------------------------------------------
+
+
+def lif_bwd_xla(u: jax.Array, g_s: jax.Array, g_v: jax.Array, *,
+                v_th: float, alpha: float, kind: str):
+    """XLA fallback of the reverse-time LIF backward (see module doc).
+
+    u: (T, ...) pre-reset membrane;  g_s: (T, ...) spike-train cotangent;
+    g_v: (...) final-membrane cotangent.  Returns (lam: (T, ...), dv0).
+    """
+    surr = surrogate_grad(u - v_th, alpha, kind)
+
+    def body(c, xs):
+        g_s_t, surr_t = xs
+        lam = c + (g_s_t - v_th * c) * surr_t
+        return lam, lam
+
+    dv0, lam_rev = jax.lax.scan(
+        body, g_v.astype(jnp.float32),
+        (g_s[::-1].astype(jnp.float32), surr[::-1]))
+    return lam_rev[::-1], dv0
+
+
+def _make_bwd_kernel(t_steps: int, v_th: float, alpha: float, kind: str):
+    def kernel(u_ref, gs_ref, gv_ref, lam_ref, dv0_ref):
+        def step(i, c):
+            t = t_steps - 1 - i
+            u = u_ref[t, 0].astype(jnp.float32)
+            g_s = gs_ref[t, 0].astype(jnp.float32)
+            surr = surrogate_grad(u - v_th, alpha, kind)   # plain jnp
+            lam = c + (g_s - v_th * c) * surr
+            lam_ref[t, 0] = lam.astype(lam_ref.dtype)
+            return lam
+
+        c = jax.lax.fori_loop(0, t_steps, step,
+                              gv_ref[0].astype(jnp.float32))
+        dv0_ref[...] = c[None].astype(dv0_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("v_th", "alpha", "kind", "block_rows", "num_groups",
+                     "interpret"))
+def lif_bwd_pallas(
+    u: jax.Array,            # (T, B, E_h, E_w, Cout) pre-reset membrane
+    g_s: jax.Array,          # (T, B, E_h, E_w, Cout) spike cotangent
+    g_v: jax.Array,          # (B, E_h, E_w, Cout) final-membrane cotangent
+    *,
+    v_th: float, alpha: float, kind: str,
+    block_rows: int = 8, num_groups: int = 4, interpret: bool = True,
+):
+    """Pallas reverse-time LIF backward: the T-loop runs backward inside
+    the kernel, the running current-cotangent stays in registers.  Same
+    (B, row-block, channel-group) grid as the forward kernel.
+
+    Returns ``(lam: (T, B, E_h, E_w, Cout) f32, dv0: (B, E_h, E_w, Cout))``.
+    """
+    T, B, e_h, e_w, Cout = u.shape
+    assert Cout % num_groups == 0, (Cout, num_groups)
+    cout_blk = Cout // num_groups
+    n_blocks = -(-e_h // block_rows)
+    e_h_pad = n_blocks * block_rows
+
+    def pad_rows(a):
+        pads = [(0, 0)] * a.ndim
+        pads[-3] = (0, e_h_pad - e_h)
+        return jnp.pad(a, pads)
+
+    up, gsp, gvp = pad_rows(u), pad_rows(g_s), pad_rows(g_v)
+
+    seq_spec = pl.BlockSpec((T, 1, block_rows, e_w, cout_blk),
+                            lambda b, i, g: (0, b, i, 0, g))
+    mem_spec = pl.BlockSpec((1, block_rows, e_w, cout_blk),
+                            lambda b, i, g: (b, i, 0, g))
+    kernel = _make_bwd_kernel(T, float(v_th), float(alpha), kind)
+    lam, dv0 = pl.pallas_call(
+        kernel,
+        grid=(B, n_blocks, num_groups),
+        in_specs=[seq_spec, seq_spec, mem_spec],
+        out_specs=[seq_spec, mem_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, B, e_h_pad, e_w, Cout), jnp.float32),
+            jax.ShapeDtypeStruct((B, e_h_pad, e_w, Cout), jnp.float32),
+        ],
+        interpret=interpret,
+    )(up, gsp, gvp)
+    return lam[:, :, :e_h], dv0[:, :e_h]
+
+
+# ---------------------------------------------------------------------------
+# The trainable fused op: jax.custom_vjp
+# ---------------------------------------------------------------------------
+
+
+class ConvLIFOpts(NamedTuple):
+    """Hashable static config of the trainable fused op (nondiff arg 0)."""
+    v_th: float = 1.0
+    aprc: bool = True
+    block_rows: int = 8
+    num_groups: int = 4
+    interpret: bool = True
+    surrogate_alpha: float = 10.0
+    surrogate_kind: str = "fast_sigmoid"
+    bwd: str = "xla"         # "pallas" | "xla" backward implementation
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    return max(g for g in range(1, cap + 1) if n % g == 0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def spiking_conv_lif_train(opts: ConvLIFOpts, spikes, v0, w, bias):
+    """Differentiable fused conv+LIF: forward == ``spiking_conv_lif_pallas``
+    (Heaviside spikes), backward == surrogate BPTT (see module doc).
+
+    The primal runs the plain forward kernel — inference pays nothing for
+    differentiability; only under ``jax.grad`` does the fwd rule rerun the
+    kernel with the pre-reset-membrane output as the saved residual.
+    """
+    return spiking_conv_lif_pallas(
+        spikes, v0, w, bias, v_th=opts.v_th, aprc=opts.aprc,
+        block_rows=opts.block_rows, num_groups=opts.num_groups,
+        interpret=opts.interpret)
+
+
+def _train_fwd(opts, spikes, v0, w, bias):
+    s, v_final, u = spiking_conv_lif_fwd_pallas(
+        spikes, v0, w, bias, v_th=opts.v_th, aprc=opts.aprc,
+        block_rows=opts.block_rows, num_groups=opts.num_groups,
+        interpret=opts.interpret)
+    return (s, v_final), (spikes, w, bias, u)
+
+
+def _train_bwd(opts, res, cts):
+    spikes, w, bias, u = res
+    g_s, g_v = cts
+    T, B = spikes.shape[:2]
+    R = w.shape[0]
+
+    if opts.bwd == "pallas":
+        lam, dv0 = lif_bwd_pallas(
+            u, g_s, g_v, v_th=opts.v_th, alpha=opts.surrogate_alpha,
+            kind=opts.surrogate_kind, block_rows=opts.block_rows,
+            num_groups=opts.num_groups, interpret=opts.interpret)
+    else:
+        lam, dv0 = lif_bwd_xla(
+            u, g_s.astype(jnp.float32), g_v.astype(jnp.float32),
+            v_th=opts.v_th, alpha=opts.surrogate_alpha,
+            kind=opts.surrogate_kind)
+
+    # conv backward over the folded (T*B) spatio-temporal batch
+    lam2 = lam.reshape((T * B,) + lam.shape[2:])
+    x2 = spikes.reshape((T * B,) + spikes.shape[2:])
+    if opts.bwd == "pallas":
+        cin_groups = _largest_divisor(w.shape[2], opts.num_groups)
+        dx = conv_grad_input_pallas(
+            lam2, w, aprc=opts.aprc, block_rows=opts.block_rows,
+            num_groups=cin_groups, interpret=opts.interpret)
+    else:
+        dx = conv_grad_input_xla(lam2, w, aprc=opts.aprc)
+    dw, db = conv_grad_weights_xla(x2, lam2, aprc=opts.aprc, r=R)
+
+    return (dx.reshape(spikes.shape).astype(spikes.dtype),
+            dv0.astype(g_v.dtype),
+            dw.astype(w.dtype), db.astype(bias.dtype))
+
+
+spiking_conv_lif_train.defvjp(_train_fwd, _train_bwd)

@@ -2,11 +2,18 @@
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
         --steps 100 --batch 8 --seq 256 [--profile dp_zero1] [--mesh 2x2]
+    PYTHONPATH=src python -m repro.launch.train --snn snn-mnist \
+        --backend batched --steps 100
 
 On this CPU container it runs reduced configs on a small mesh (or one
 device); on a real fleet the same entrypoint runs the full config on the
 production mesh — the step function, shardings, checkpointing and the
 fault-tolerant loop are identical code paths (launch/cells.py builds them).
+
+The ``--snn`` path trains the paper's spiking networks with surrogate
+gradients through the selectable execution backend (``--backend
+ref|batched|pallas``, see core.snn_model) — the same hot path the serving
+launcher deploys, so the trained dataflow is the deployed one.
 """
 from __future__ import annotations
 
@@ -17,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.config import get_arch, reduced
+from repro.config import get_arch, get_snn, reduced
 from repro.data.pipeline import Prefetcher
 from repro.data.synthetic import token_batches
 from repro.models import lm
@@ -26,9 +33,50 @@ from repro.runtime.straggler import StragglerMonitor
 from repro.sharding.context import ShardingCtx, make_rules, use_sharding
 
 
+def train_snn(args) -> None:
+    import dataclasses
+
+    from repro.core import accuracy, init_snn, make_train_step
+    from repro.data.synthetic import mnist_like
+
+    cfg = get_snn(args.snn)
+    if args.timesteps:
+        cfg = dataclasses.replace(cfg, timesteps=args.timesteps)
+    params = init_snn(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(make_train_step(cfg, backend=args.backend, lr=args.lr,
+                                   surrogate_kind=args.surrogate))
+    mom = jax.tree.map(jnp.zeros_like, params)
+    t0 = time.perf_counter()
+    for i in range(args.steps):
+        x, y = mnist_like(args.batch, seed=i)
+        params, mom, loss = step(params, mom, jnp.asarray(x), jnp.asarray(y))
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss {float(loss):.4f} "
+                  f"backend={args.backend}")
+    dt = time.perf_counter() - t0
+    xte, yte = mnist_like(256, seed=10_000)
+    acc = accuracy(params, cfg, jnp.asarray(xte), jnp.asarray(yte),
+                   backend=args.backend)
+    print(f"finished {args.steps} SNN steps in {dt:.1f}s "
+          f"(backend={args.backend}, held-out acc {acc*100:.2f}%)")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--snn", default=None,
+                    help="train an SNN (e.g. snn-mnist) instead of an LM")
+    from repro.core import SNN_BACKENDS, SURROGATE_KINDS
+
+    ap.add_argument("--backend", default="ref", choices=SNN_BACKENDS,
+                    help="SNN execution backend to train through "
+                         "(core.snn_model.SNN_BACKENDS)")
+    ap.add_argument("--surrogate", default="fast_sigmoid",
+                    choices=SURROGATE_KINDS,
+                    help="SNN surrogate-gradient kind")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--timesteps", type=int, default=0,
+                    help="override SNN timesteps (0 = config default)")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
@@ -40,6 +88,12 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
     ap.add_argument("--checkpoint-every", type=int, default=50)
     args = ap.parse_args()
+
+    if args.snn:
+        train_snn(args)
+        return
+    if not args.arch:
+        ap.error("one of --arch / --snn is required")
 
     cfg = get_arch(args.arch)
     if not args.full_config:
