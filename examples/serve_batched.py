@@ -6,6 +6,8 @@ kernel backend (time-batched layer pipeline / fused Pallas kernels).
     PYTHONPATH=src python examples/serve_batched.py --arch gemma3-4b --new 32
     PYTHONPATH=src python examples/serve_batched.py --snn snn-mnist \
         --backend batched --batch 8
+    PYTHONPATH=src python examples/serve_batched.py --snn snn-mnist \
+        --threaded --lanes 2        # worker-thread lanes vs single thread
 """
 from __future__ import annotations
 
@@ -17,6 +19,40 @@ import jax.numpy as jnp
 
 from repro.config import get_arch, get_snn, reduced
 from repro.models import transformer
+
+
+def serve_snn_threaded(args) -> None:
+    """A/B the worker-thread engine against the single-thread virtual-clock
+    engine on the same skewed burst (same code path benchmarks/serve_load.py
+    times; here sized for a quick demo)."""
+    import numpy as np
+
+    from repro.core import init_snn
+    from repro.serving import EngineConfig, ServingEngine
+
+    cfg = get_snn(args.snn)
+    params = init_snn(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    n = 4 * args.batch
+    frames = np.clip(
+        rng.uniform(0, 1, (n, *cfg.input_hw, cfg.input_channels))
+        * rng.lognormal(-0.5, 1.2, (n, 1, 1, 1)), 0, 1).astype(np.float32)
+    walls = {}
+    for threaded in (False, True):
+        eng = ServingEngine(params, cfg, EngineConfig(
+            backend=args.backend, num_lanes=args.lanes,
+            max_batch=args.batch, buckets=(args.batch,),
+            threaded=threaded, keep_logits=False))
+        eng.warmup()
+        for f in frames:
+            eng.submit(f, arrival=0.0)
+        t0 = time.time()
+        s = eng.run()
+        walls[threaded] = time.time() - t0
+        mode = "threaded" if threaded else "1-thread"
+        print(f"{mode:9s}: {n / walls[threaded]:7.1f} frames/s wall "
+              f"(balance={s['request_balance']:.3f}, lanes={args.lanes})")
+    print(f"threaded speedup: {walls[False] / walls[True]:.2f}x")
 
 
 def serve_snn_batched(args) -> None:
@@ -54,12 +90,20 @@ def main():
                     choices=("ref", "batched", "pallas"),
                     help="SNN execution backend (see core.snn_model)")
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--threaded", action="store_true",
+                    help="A/B worker-thread engine lanes vs single thread "
+                         "(SNN only)")
+    ap.add_argument("--lanes", type=int, default=2,
+                    help="engine lanes (with --threaded)")
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new", type=int, default=32)
     args = ap.parse_args()
 
     if args.snn:
-        serve_snn_batched(args)
+        if args.threaded:
+            serve_snn_threaded(args)
+        else:
+            serve_snn_batched(args)
         return
 
     cfg = reduced(get_arch(args.arch))

@@ -7,6 +7,8 @@ SNN frame inference through the selectable kernel backend.
         --backend batched --batch 4 --steps 8
     PYTHONPATH=src python -m repro.launch.serve --snn snn-mnist \
         --engine --lanes 2 --batch 8
+    PYTHONPATH=src python -m repro.launch.serve --snn snn-mnist \
+        --engine --threaded --lanes 2 --slo-ms 50 --slo-action degrade
 
 Production path: the same prefill/decode step functions are lowered with the
 `serve`/`serve_ep2d` profiles on the pod mesh (see launch/cells.py); here
@@ -16,7 +18,10 @@ time-batched layer pipeline ("batched"), the fused Pallas kernels
 go through ``repro.serving``: the default is the engine's single-shot path
 (fixed batch, per-step sync); ``--engine`` runs the full continuous-batching
 loop (FIFO windows, CBWS-balanced micro-batch lanes, straggler-aware
-placement) on a synthetic Poisson arrival trace — see docs/serving.md.
+placement) on a synthetic Poisson arrival trace, ``--threaded`` promotes the
+lanes to real worker threads on the wall clock, and ``--slo-ms`` adds
+admission-time latency-budget control (reject or degrade, ``--slo-action``)
+— see docs/serving.md.
 """
 from __future__ import annotations
 
@@ -46,18 +51,24 @@ def serve_snn(args) -> None:
         # continuous-batching engine on a synthetic open-loop arrival trace
         eng = ServingEngine(params, cfg, EngineConfig(
             backend=args.backend, num_lanes=args.lanes,
-            max_batch=args.batch, schedule_mode=schedule_mode))
+            max_batch=args.batch, schedule_mode=schedule_mode,
+            threaded=args.threaded,
+            latency_budget_s=(args.slo_ms / 1e3 if args.slo_ms else None),
+            slo_action=args.slo_action))
         rng = np.random.default_rng(0)
         n = args.steps * args.batch
         gaps = rng.exponential(1e-3, n)
         for i, arr in enumerate(np.cumsum(gaps)):
             eng.submit(frames[i % args.batch], arrival=float(arr))
         s = eng.run()
-        print(f"engine served {s['served']:.0f} frames in {s['rounds']:.0f} "
-              f"rounds ({s['fps']:.1f} FPS, backend={args.backend}, "
-              f"lanes={args.lanes}, p50={s['p50_latency_s']*1e3:.1f}ms, "
+        mode = "threaded" if args.threaded else "virtual"
+        print(f"engine[{mode}] served {s['served']:.0f} frames in "
+              f"{s['rounds']:.0f} rounds ({s['fps']:.1f} FPS, "
+              f"backend={args.backend}, lanes={args.lanes}, "
+              f"p50={s['p50_latency_s']*1e3:.1f}ms, "
               f"p99={s['p99_latency_s']*1e3:.1f}ms, "
-              f"balance={s['request_balance']:.3f})")
+              f"balance={s['request_balance']:.3f}, "
+              f"rejected={s['rejected']:.0f}, degraded={s['degraded']:.0f})")
         return
 
     s = serve_frames(params, cfg, frames, backend=args.backend,
@@ -82,6 +93,15 @@ def main():
                          "(repro.serving) on a synthetic Poisson trace")
     ap.add_argument("--lanes", type=int, default=2,
                     help="engine micro-batch lanes (with --engine)")
+    ap.add_argument("--threaded", action="store_true",
+                    help="run engine lanes as worker threads on the wall "
+                         "clock (with --engine)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="admission latency budget in ms; over-budget "
+                         "requests are rejected/degraded (with --engine)")
+    ap.add_argument("--slo-action", default="reject",
+                    choices=("reject", "degrade"),
+                    help="what to do with over-budget requests")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new", type=int, default=32)

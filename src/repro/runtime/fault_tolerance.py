@@ -28,8 +28,15 @@ log = logging.getLogger("repro.runtime")
 @dataclass(frozen=True)
 class RetryPolicy:
     """Bounded-retry budget for a single work unit (the serving-lane
-    analogue of ResilientLoop's per-step failure budget)."""
+    analogue of ResilientLoop's per-step failure budget).
+
+    ``backoff_s`` sleeps between attempts — real concurrent lanes retrying
+    against a flapping device want to yield the core to their sibling
+    threads rather than hot-loop.  The default 0.0 keeps the deterministic
+    virtual-clock engine sleep-free.
+    """
     max_retries: int = 2
+    backoff_s: float = 0.0
 
 
 def call_with_retry(fn: Callable[..., Any], *args: Any,
@@ -42,6 +49,10 @@ def call_with_retry(fn: Callable[..., Any], *args: Any,
     it to count retries per request).  The final failure propagates so the
     caller can escalate — e.g. mark a serving lane dead and re-queue its
     micro-batch on the survivors.
+
+    Holds no shared state, so it is safe to call concurrently from many
+    lane worker threads (each invocation retries its own work unit; the
+    in-flight micro-batch never leaves the calling thread).
     """
     last: Optional[Exception] = None
     for attempt in range(policy.max_retries + 1):
@@ -52,6 +63,8 @@ def call_with_retry(fn: Callable[..., Any], *args: Any,
             log.warning("attempt %d failed: %r", attempt, e)
             if on_failure is not None:
                 on_failure(attempt, e)
+            if policy.backoff_s > 0 and attempt < policy.max_retries:
+                time.sleep(policy.backoff_s)
     raise RuntimeError(
         f"retry budget ({policy.max_retries}) exhausted") from last
 

@@ -13,6 +13,7 @@ cluster-level straggler mitigation (see tests/test_runtime.py).
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -30,11 +31,20 @@ class HostStat:
 
 
 class StragglerMonitor:
+    """EWMA/variance per host with z-score flagging.
+
+    Thread-safe: serving lanes run as worker threads and both record
+    (completion path) and read (``speed_rank`` in the scheduler's placement
+    loop) concurrently, so every stats access holds ``_lock``.  The lock is
+    uncontended in the single-threaded virtual-clock engine.
+    """
+
     def __init__(self, num_hosts: int, alpha: float = 0.1,
                  z_thresh: float = 3.0):
         self.alpha = alpha
         self.z = z_thresh
         self.stats: List[HostStat] = [HostStat() for _ in range(num_hosts)]
+        self._lock = threading.Lock()
 
     def record(self, host_times: Sequence[float]) -> List[int]:
         """Feed one step's per-host times; returns indices flagged slow."""
@@ -45,37 +55,48 @@ class StragglerMonitor:
         moments, so most rounds observe only some lanes).  Only observed
         hosts' stats update — no fabricated samples — and fleet mean/std are
         taken over hosts with at least one real observation."""
-        for i, t in host_times.items():
-            s = self.stats[i]
-            if s.n == 0:
-                s.ewma, s.var = t, 0.0
-            else:
-                d = t - s.ewma
-                s.ewma += self.alpha * d
-                s.var = (1 - self.alpha) * (s.var + self.alpha * d * d)
-            s.n += 1
-        observed = [s.ewma for s in self.stats if s.n > 0]
-        if not observed:
-            return []
-        fleet_mean = float(np.mean(observed))
-        fleet_std = float(np.std(observed)) + 1e-9
-        flagged = []
-        for i, s in enumerate(self.stats):
-            if s.n >= 3 and (s.ewma - fleet_mean) / fleet_std > self.z:
-                flagged.append(i)
-        return flagged
+        with self._lock:
+            for i, t in host_times.items():
+                s = self.stats[i]
+                if s.n == 0:
+                    s.ewma, s.var = t, 0.0
+                else:
+                    d = t - s.ewma
+                    s.ewma += self.alpha * d
+                    s.var = (1 - self.alpha) * (s.var + self.alpha * d * d)
+                s.n += 1
+            observed = [s.ewma for s in self.stats if s.n > 0]
+            if not observed:
+                return []
+            fleet_mean = float(np.mean(observed))
+            fleet_std = float(np.std(observed)) + 1e-9
+            flagged = []
+            for i, s in enumerate(self.stats):
+                if s.n >= 3 and (s.ewma - fleet_mean) / fleet_std > self.z:
+                    flagged.append(i)
+            return flagged
+
+    def seconds_per_work(self) -> Optional[float]:
+        """Fleet-mean work-normalized service time (s per unit predicted
+        workload), or None before any real observation.  The serving
+        admitter prices queue delay with this."""
+        with self._lock:
+            obs = [s.ewma for s in self.stats if s.n > 0]
+        return float(np.mean(obs)) if obs else None
 
     def fleet_balance(self) -> float:
-        return balance_ratio([s.ewma for s in self.stats])
+        with self._lock:
+            return balance_ratio([s.ewma for s in self.stats])
 
     def speed_rank(self) -> List[int]:
         """Host indices fastest-first (EWMA ascending; unobserved hosts rank
         at the fleet mean).  Consumers place the heaviest CBWS group on the
         fastest lane — measured-latency-driven schedule placement."""
-        obs = [s.ewma for s in self.stats if s.n > 0]
-        mean = float(np.mean(obs)) if obs else 0.0
-        keyed = [(s.ewma if s.n > 0 else mean, i)
-                 for i, s in enumerate(self.stats)]
+        with self._lock:
+            obs = [s.ewma for s in self.stats if s.n > 0]
+            mean = float(np.mean(obs)) if obs else 0.0
+            keyed = [(s.ewma if s.n > 0 else mean, i)
+                     for i, s in enumerate(self.stats)]
         return [i for _, i in sorted(keyed)]
 
 

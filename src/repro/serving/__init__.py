@@ -6,25 +6,32 @@ lanes are the SPEs, and Algorithm 1 (``core.cbws``) bins each admission
 window into workload-balanced micro-batches.
 
   request     Request record (frame, arrival, predicted/actual workload)
-  batcher     FIFO queue + padding-bucketed dynamic batching + jit cache
+  clock       the event loop's clock: VirtualClock (deterministic replay)
+              vs WallClock (live threaded serving)
+  batcher     thread-safe FIFO + padding-bucketed dynamic batching + jit cache
   admission   APRC-predicted request workloads -> CBWS lane binning
+              (batch-aware bucket planning) + SLO reject/degrade control
   dispatch    lane execution, straggler monitoring, failure/retry
   metrics     p50/p99 latency, FPS, queue depth, balance, energy/image
-  engine      the virtual-clock continuous-batching loop + single-shot mode
+  engine      the continuous-batching loop (virtual or worker-thread lanes)
+              + single-shot mode
 
 See docs/serving.md for the architecture.
 """
-from repro.serving.admission import admit, predict_workload
+from repro.serving.admission import (admit, bucket_size_plan,
+                                     predict_workload, slo_filter)
 from repro.serving.batcher import (DEFAULT_BUCKETS, DynamicBatcher, JitCache,
                                    bucket_for)
+from repro.serving.clock import Clock, VirtualClock, WallClock
 from repro.serving.dispatch import LaneDispatcher, LaneFailed
 from repro.serving.engine import EngineConfig, ServingEngine, serve_frames
 from repro.serving.metrics import ServingMetrics, energy_per_image
 from repro.serving.request import Request
 
 __all__ = [
-    "admit", "predict_workload",
+    "admit", "bucket_size_plan", "predict_workload", "slo_filter",
     "DEFAULT_BUCKETS", "DynamicBatcher", "JitCache", "bucket_for",
+    "Clock", "VirtualClock", "WallClock",
     "LaneDispatcher", "LaneFailed",
     "EngineConfig", "ServingEngine", "serve_frames",
     "ServingMetrics", "energy_per_image",

@@ -4,16 +4,27 @@ Requests are admitted strictly in arrival order (the window is a FIFO prefix
 of the queue — later arrivals can never overtake an earlier one into a
 window, which is what rules out starvation).  A window's micro-batches are
 padded up to a small set of bucket sizes so the engine compiles one XLA
-executable per ``(bucket, backend)`` instead of one per observed batch size.
+executable per ``(bucket, backend, timesteps)`` instead of one per observed
+batch size (``timesteps`` keys the SLO-degraded variants, see
+``admission.slo_filter``).
 
 Padding frames are all-zero: under direct coding a zero frame injects zero
-current, and this repo's conv/dense biases are sub-threshold (zero-init; see
-``snn_layers.init_conv``), so padded rows fire no spikes and leave the
-engine's spike-count/energy metrics exact.  Padded logit rows are sliced off
-before results are returned.
+current, so with this repo's zero-init sub-threshold biases padded rows fire
+no spikes.  *Trained* params can have supra-threshold biases that make even
+zero rows fire — the engine subtracts the (deterministic, per-row identical)
+zero-frame spike profile from its accumulated counts so spike/energy metrics
+stay exact either way (see ``ServingEngine._accumulate``).  Padded logit
+rows are sliced off before results are returned.
+
+``DynamicBatcher`` is thread-safe: in the threaded engine the scheduler
+thread forms windows while completions (lane-failure re-queues) land from
+worker-adjacent paths, so every queue op holds one internal lock.  The lock
+is uncontended on the single-threaded virtual-clock path.
 """
 from __future__ import annotations
 
+import dataclasses
+import threading
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
@@ -49,32 +60,50 @@ def pad_frames(frames: Sequence[np.ndarray], bucket: int) -> np.ndarray:
 
 
 class JitCache:
-    """One jitted ``snn_apply`` per (bucket, backend) — the engine's compile
-    cache.  jax.jit would retrace per shape anyway; keeping the cache explicit
-    bounds it to the bucket set and lets the engine report compile counts.
+    """One jitted ``snn_apply`` per (bucket, backend, outputs, timesteps) —
+    the engine's compile cache.  jax.jit would retrace per shape anyway;
+    keeping the cache explicit bounds it to the bucket set and lets the
+    engine report compile counts.
 
     ``outputs="logits"`` compiles a logits-only forward: serving clients
     consume logits, so XLA dead-code-eliminates the per-layer spike-count
     reductions (a measurable fraction of the time-batched forward) — the
     engine's throughput mode uses this; metric-bearing paths use "full".
+
+    ``timesteps`` compiles a reduced-T variant of the network — the
+    executable behind SLO admission's *degrade* action (fewer timesteps =
+    proportionally less predicted work).  ``None`` means the config's T.
+
+    Executing an already-compiled entry is thread-safe (XLA executables
+    are), which is how the threaded engine's lanes share nothing but params;
+    each lane owns its *own* JitCache so tracing/compilation never races.
     """
 
     def __init__(self, params, cfg, schedule=None):
         self.params = params
         self.cfg = cfg
         self.schedule = schedule
-        self._fns: Dict[Tuple[int, str, str], object] = {}
+        self._fns: Dict[Tuple[int, str, str, int], object] = {}
         self.compiles = 0
 
-    def has(self, bucket: int, backend: str, outputs: str = "full") -> bool:
-        return (int(bucket), str(backend), str(outputs)) in self._fns
+    def _key(self, bucket: int, backend: str, outputs: str,
+             timesteps: Optional[int]) -> Tuple[int, str, str, int]:
+        t = self.cfg.timesteps if timesteps is None else int(timesteps)
+        return (int(bucket), str(backend), str(outputs), t)
 
-    def get(self, bucket: int, backend: str, outputs: str = "full"):
-        key = (int(bucket), str(backend), str(outputs))
+    def has(self, bucket: int, backend: str, outputs: str = "full",
+            timesteps: Optional[int] = None) -> bool:
+        return self._key(bucket, backend, outputs, timesteps) in self._fns
+
+    def get(self, bucket: int, backend: str, outputs: str = "full",
+            timesteps: Optional[int] = None):
+        key = self._key(bucket, backend, outputs, timesteps)
         fn = self._fns.get(key)
         if fn is None:
             from repro.core import snn_apply
             cfg, sched = self.cfg, self.schedule
+            if key[3] != cfg.timesteps:
+                cfg = dataclasses.replace(cfg, timesteps=key[3])
             if outputs == "logits":
                 fn = jax.jit(lambda p, x: snn_apply(
                     p, x, cfg, backend=backend, schedule=sched).logits)
@@ -85,16 +114,29 @@ class JitCache:
             self.compiles += 1
         return fn
 
-    def run(self, frames: np.ndarray, backend: str):
+    def run(self, frames: np.ndarray, backend: str,
+            timesteps: Optional[int] = None):
         """Execute one padded bucket batch; returns the SNNOutputs."""
-        return self.get(frames.shape[0], backend)(self.params, frames)
+        return self.get(frames.shape[0], backend,
+                        timesteps=timesteps)(self.params, frames)
+
+    def fork(self) -> "JitCache":
+        """A lane-private cache sharing every executable compiled so far
+        (concurrent *execution* of compiled XLA executables is thread-safe);
+        a compilation after the fork stays private to the copy, so worker
+        threads can never race a trace.  This is how the threaded engine
+        gives each lane its own cache without num_lanes x duplicate
+        compiles of identical programs."""
+        c = JitCache(self.params, self.cfg, schedule=self.schedule)
+        c._fns = dict(self._fns)
+        return c
 
 
 class DynamicBatcher:
-    """FIFO request queue + window former.
+    """FIFO request queue + window former (thread-safe).
 
     ``push`` enqueues; ``take_window`` pops the FIFO prefix of requests that
-    have arrived by virtual time ``t`` (capped at ``max_batch * num_lanes``).
+    have arrived by engine time ``t`` (capped at ``max_batch * num_lanes``).
     Queue-depth samples feed the metrics module.
     """
 
@@ -106,26 +148,32 @@ class DynamicBatcher:
         self.max_batch = int(max_batch)
         self.buckets = tuple(sorted(buckets))
         self._queue: Deque[Request] = deque()
+        self._lock = threading.Lock()
 
     def push(self, req: Request) -> None:
-        self._queue.append(req)
+        with self._lock:
+            self._queue.append(req)
 
     def push_front(self, reqs: Sequence[Request]) -> None:
         """Re-queue retried requests at the head (they keep FIFO priority)."""
-        for r in reversed(list(reqs)):
-            self._queue.appendleft(r)
+        with self._lock:
+            for r in reversed(list(reqs)):
+                self._queue.appendleft(r)
 
     def __len__(self) -> int:
-        return len(self._queue)
+        with self._lock:
+            return len(self._queue)
 
     def next_arrival(self) -> Optional[float]:
-        return self._queue[0].arrival if self._queue else None
+        with self._lock:
+            return self._queue[0].arrival if self._queue else None
 
     def take_window(self, t: float, num_lanes: int) -> List[Request]:
         """FIFO prefix of arrived requests, at most max_batch per lane."""
         cap = self.max_batch * max(1, int(num_lanes))
         window: List[Request] = []
-        while self._queue and len(window) < cap \
-                and self._queue[0].arrival <= t:
-            window.append(self._queue.popleft())
+        with self._lock:
+            while self._queue and len(window) < cap \
+                    and self._queue[0].arrival <= t:
+                window.append(self._queue.popleft())
         return window

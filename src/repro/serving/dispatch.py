@@ -14,11 +14,20 @@ round.  The dispatcher
     lane that exhausts its retry budget is marked dead (``LaneFailed``) and
     the engine re-queues its micro-batch on the survivors.
 
+Thread-safety: in the threaded engine ``execute`` runs on the lane worker
+threads (marking a lane dead races the scheduler reading ``alive()``), so
+all lane-state access holds ``_lock``; the straggler monitor carries its own
+lock.  The virtual-clock engine is single-threaded and pays only an
+uncontended lock.
+
 ``fault_hook(lane, attempt)`` is a test/chaos injection point called before
-every execution attempt; raising from it simulates a lane failure.
+every execution attempt; raising from it simulates a lane failure.  In the
+threaded engine it is called *from the worker thread mid-flight* — chaos
+hooks that keep state must synchronize.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence
@@ -40,7 +49,7 @@ class LaneFailed(RuntimeError):
 
 @dataclass
 class _Lane:
-    free_at: float = 0.0          # virtual time the lane next frees
+    free_at: float = 0.0          # engine time the lane next frees (virtual)
     alive: bool = True
     served: int = 0               # requests completed
     busy_s: float = 0.0           # accumulated measured service time
@@ -55,17 +64,27 @@ class LaneDispatcher:
         self.monitor = StragglerMonitor(num_lanes, z_thresh=straggler_z)
         self.fault_hook = fault_hook
         self.flagged: List[int] = []      # latest straggler verdict
+        self._lock = threading.Lock()
 
     # -- lane state ---------------------------------------------------------
     def alive(self) -> List[int]:
-        return [i for i, l in enumerate(self.lanes) if l.alive]
+        with self._lock:
+            return [i for i, l in enumerate(self.lanes) if l.alive]
 
     def ready(self, t: float) -> List[int]:
-        return [i for i in self.alive() if self.lanes[i].free_at <= t + 1e-12]
+        with self._lock:
+            return [i for i, l in enumerate(self.lanes)
+                    if l.alive and l.free_at <= t + 1e-12]
 
     def next_free(self, t: float) -> Optional[float]:
-        busy = [l.free_at for l in self.lanes if l.alive and l.free_at > t]
+        with self._lock:
+            busy = [l.free_at for l in self.lanes if l.alive and l.free_at > t]
         return min(busy) if busy else None
+
+    def mark_dead(self, lane: int) -> None:
+        """Take a lane out of service (worker thread crash escalation)."""
+        with self._lock:
+            self.lanes[lane].alive = False
 
     def rank(self, lanes: Sequence[int]) -> List[int]:
         """``lanes`` reordered fastest-first by the monitor's measured EWMAs
@@ -80,7 +99,8 @@ class LaneDispatcher:
         """Run one micro-batch on ``lane`` with the retry budget.
 
         Returns (result, measured wall seconds).  Exhausting the budget
-        marks the lane dead and raises ``LaneFailed``.
+        marks the lane dead and raises ``LaneFailed``.  Safe to call from a
+        lane worker thread (the threaded engine does).
         """
         def attempt_counter():
             attempt = {"n": 0}
@@ -98,18 +118,20 @@ class LaneDispatcher:
             out = call_with_retry(attempt_counter(), policy=self.retry,
                                   on_failure=on_retry)
         except RuntimeError as e:
-            self.lanes[lane].alive = False
+            with self._lock:
+                self.lanes[lane].alive = False
             raise LaneFailed(lane, e) from e
         return out, time.perf_counter() - t0
 
     def commit(self, lane: int, t: float, service_s: float, served: int,
                ) -> float:
         """Record a completed micro-batch; returns the lane's finish time."""
-        l = self.lanes[lane]
-        l.free_at = max(t, l.free_at) + service_s
-        l.served += served
-        l.busy_s += service_s
-        return l.free_at
+        with self._lock:
+            l = self.lanes[lane]
+            l.free_at = max(t, l.free_at) + service_s
+            l.served += served
+            l.busy_s += service_s
+            return l.free_at
 
     def record_round(self, norm_times: Dict[int, float]) -> List[int]:
         """Feed one round's work-normalized lane times (s per unit predicted
@@ -122,5 +144,6 @@ class LaneDispatcher:
         return self.flagged
 
     def lane_stats(self) -> List[Dict[str, float]]:
-        return [{"served": l.served, "busy_s": l.busy_s,
-                 "alive": float(l.alive)} for l in self.lanes]
+        with self._lock:
+            return [{"served": l.served, "busy_s": l.busy_s,
+                     "alive": float(l.alive)} for l in self.lanes]

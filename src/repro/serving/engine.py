@@ -1,18 +1,33 @@
 """The continuous-batching serving engine.
 
-Event loop on a virtual clock (service times measured on the wall, queueing
-simulated on arrival timestamps, so open-loop load traces replay
-deterministically on a shared CPU):
+One event loop, two clocks (``serving.clock``):
+
+``run()`` with the default **VirtualClock** replays the submitted load trace
+deterministically (service times measured on the wall — or injected via
+``service_time_fn`` — and queueing simulated on arrival timestamps), the
+historical PR-2 semantics and what tier-1 tests replay bit-identically.
+
+``run()`` with ``EngineConfig.threaded=True`` promotes the loop to a real
+concurrent engine on the **WallClock**: every lane is a worker thread that
+owns its *own* jit cache (forked from one warmed shared cache before the
+clock epoch — compiled executables are shared, traces never race, warmup
+never pollutes latency), fed micro-batches through a per-lane inbox and
+reporting over a shared completion queue.  The scheduler thread replays arrivals on
+the wall, forms FIFO windows whenever lanes are idle, CBWS-bins them
+(admission.admit), and parks between arrival/completion events.  Lane
+execution (pad, jitted forward, host sync, numpy conversion) happens
+entirely on the worker threads — XLA executions from different lanes
+genuinely overlap.
+
+Admission-time SLO control (``EngineConfig.latency_budget_s``): the
+APRC-predicted workload already prices each request, so the admitter
+estimates per-request queue delay from the straggler monitor's measured
+seconds-per-work and rejects — or degrades to fewer timesteps — requests
+whose predicted latency exceeds the budget (``admission.slo_filter``).
 
   submit()          frames + arrival times -> FIFO queue, with the request's
                     APRC-predicted workload attached at admission
-  run()             drain the queue: whenever >=1 lane is free and >=1
-                    request has arrived, take the FIFO window, CBWS-bin it
-                    into per-lane micro-batches (admission.admit), place the
-                    heaviest micro-batch on the measured-fastest lane
-                    (dispatch.rank), execute each as a padding-bucketed
-                    jitted batch, advance the clock to the next lane-free /
-                    arrival event
+  run()             drain the queue (virtual or threaded, see above)
   infer()           single-shot mode: one batch through the same jit cache —
                     the shared code path behind launch/serve.py and
                     examples/serve_batched.py
@@ -22,11 +37,23 @@ deterministically on a shared CPU):
 
 Lane failures (injected via ``EngineConfig.fault_hook`` or real) burn the
 retry budget in ``runtime.fault_tolerance``; a dead lane's micro-batch is
-re-queued at the FIFO head and served by the surviving lanes.
+re-queued at the FIFO head and served by the survivors — in the threaded
+engine the kill lands mid-flight on the worker thread and the batch drains
+back through the completion queue, so no request is ever lost or served
+twice (tests/test_serving_threaded.py chaos-tests this).
+
+Padding correctness: micro-batches pad up to bucket sizes with zero frames.
+Zero-init biases keep pad rows silent, but *trained* supra-threshold biases
+make them fire; ``_accumulate`` subtracts the deterministic zero-frame spike
+profile per pad row so spike-count/energy metrics stay exact (logits were
+always sliced, so correctness never depended on this).
 """
 from __future__ import annotations
 
+import queue as queue_mod
+import threading
 import time
+from collections import deque
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -34,15 +61,19 @@ import jax
 import numpy as np
 
 from repro.config import SNNConfig
+from repro.core.balance import balance_ratio
 from repro.runtime.fault_tolerance import RetryPolicy
 from repro.serving import admission
 from repro.serving.batcher import (DEFAULT_BUCKETS, DynamicBatcher, JitCache,
                                    bucket_for, pad_frames)
+from repro.serving.clock import VirtualClock, WallClock
 from repro.serving.dispatch import LaneDispatcher, LaneFailed
 from repro.serving.metrics import ServingMetrics, energy_per_image
 from repro.serving.request import Request
 
 __all__ = ["EngineConfig", "ServingEngine", "serve_frames"]
+
+SLO_ACTIONS = ("reject", "degrade")
 
 
 @dataclass(frozen=True)
@@ -52,14 +83,28 @@ class EngineConfig:
     max_batch: int = 8                  # per-lane micro-batch cap
     buckets: Tuple[int, ...] = DEFAULT_BUCKETS
     admission: str = "cbws"             # "cbws" | "fifo" (baseline)
+    batch_aware: bool = True            # plan group sizes onto buckets
     max_retries: int = 2                # lane failure retry budget
+    retry_backoff_s: float = 0.0        # sleep between attempts (threaded
+                                        # lanes yield the core; keep 0 for
+                                        # deterministic virtual replay)
     straggler_z: float = 3.0
     schedule_mode: Optional[str] = None  # CBWS kernel schedule (pallas)
     keep_logits: bool = True            # per-request logits on the Request
+    # real concurrency: lanes as worker threads on the wall clock
+    threaded: bool = False
+    # admission-time SLO control (None disables)
+    latency_budget_s: Optional[float] = None
+    slo_action: str = "reject"          # "reject" | "degrade"
+    degrade_timesteps: Optional[int] = None   # default: max(1, T // 2)
+    # prior s-per-unit-workload for the delay predictor; None learns it from
+    # the straggler monitor's measured EWMAs (admit-all until first sample)
+    slo_seconds_per_work: Optional[float] = None
     # test/chaos hooks
     fault_hook: Optional[Callable[[int, int], None]] = None
     # maps (lane, measured wall s) -> virtual service s; tests inject
     # deterministic lane speeds here, default is the wall measurement
+    # (virtual clock only — the threaded engine serves on measured time)
     service_time_fn: Optional[Callable[[int, float], float]] = None
 
 
@@ -67,25 +112,43 @@ class ServingEngine:
     def __init__(self, params: Dict, cfg: SNNConfig, ecfg: EngineConfig):
         if ecfg.admission not in admission.ADMISSION_POLICIES:
             raise ValueError(f"unknown admission policy {ecfg.admission!r}")
+        if ecfg.slo_action not in SLO_ACTIONS:
+            raise ValueError(f"unknown slo_action {ecfg.slo_action!r}; "
+                             f"expected {SLO_ACTIONS}")
+        if ecfg.degrade_timesteps is not None and ecfg.degrade_timesteps < 1:
+            raise ValueError(
+                f"degrade_timesteps must be >= 1, got {ecfg.degrade_timesteps}"
+                " (a zero-timestep network cannot run)")
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
-        schedule = None
+        self._schedule = None
         if ecfg.schedule_mode is not None:
             from repro.core import build_schedule
-            schedule = build_schedule(params, cfg, ecfg.schedule_mode)
-        self.cache = JitCache(params, cfg, schedule=schedule)
+            self._schedule = build_schedule(params, cfg, ecfg.schedule_mode)
+        self.cache = JitCache(params, cfg, schedule=self._schedule)
         self.batcher = DynamicBatcher(ecfg.max_batch, ecfg.buckets)
         self.dispatcher = LaneDispatcher(
-            ecfg.num_lanes, retry=RetryPolicy(max_retries=ecfg.max_retries),
+            ecfg.num_lanes,
+            retry=RetryPolicy(max_retries=ecfg.max_retries,
+                              backoff_s=ecfg.retry_backoff_s),
             straggler_z=ecfg.straggler_z, fault_hook=ecfg.fault_hook)
         self.metrics = ServingMetrics()
         self.completed: List[Request] = []
+        self.rejected: List[Request] = []
         self._chan_w = admission.layer0_channel_weights(params)
         self._next_rid = 0
         self._submitted: List[Request] = []
-        # accumulated actual spike workload per conv layer, (T, Cout)
+        # accumulated actual spike workload per conv layer, (T, Cout),
+        # pad-row contributions masked out
         self._tc_accum: Optional[List[np.ndarray]] = None
+        # per-timesteps zero-frame spike profile (the per-pad-row counts)
+        self._pad_profiles: Dict[int, List[np.ndarray]] = {}
+        self._degrade_t = (ecfg.degrade_timesteps
+                           if ecfg.degrade_timesteps is not None
+                           else max(1, cfg.timesteps // 2))
+        self._lane_caches: Optional[List[JitCache]] = None
+        self._lane_compiles = 0           # threaded per-lane cache compiles
 
     # -- submission ---------------------------------------------------------
     def submit(self, frame: np.ndarray, arrival: float = 0.0) -> int:
@@ -100,39 +163,180 @@ class ServingEngine:
         return req.rid
 
     # -- execution ----------------------------------------------------------
-    def _run_batch(self, frames: Sequence[np.ndarray]):
+    def _eff_work(self, r: Request) -> float:
+        """Predicted work scaled by the (possibly degraded) timestep count —
+        Eq. 5's workload factorizes over T."""
+        t = r.timesteps if r.timesteps is not None else self.cfg.timesteps
+        return r.workload * (t / self.cfg.timesteps)
+
+    def _run_batch(self, frames: Sequence[np.ndarray],
+                   timesteps: Optional[int] = None,
+                   cache: Optional[JitCache] = None):
         """Pad to a bucket, run the jitted forward, host-sync the outputs."""
+        cache = cache if cache is not None else self.cache
         bucket = bucket_for(len(frames), self.ecfg.buckets)
         x = pad_frames(frames, bucket)
-        out = self.cache.run(x, self.ecfg.backend)
+        out = cache.run(x, self.ecfg.backend, timesteps=timesteps)
         jax.block_until_ready(out.logits)
         return out
 
-    def _accumulate(self, out) -> None:
-        tcs = [np.asarray(tc, dtype=np.float64) for tc in out.timestep_counts]
+    def _pad_profile(self, timesteps: Optional[int] = None) -> List[np.ndarray]:
+        """Per-layer (T, Cout) spike counts of ONE all-zero pad row.  Exact:
+        rows are independent under per-sample convolution, every pad row is
+        identical, and spike counts are additive over rows."""
+        t = self.cfg.timesteps if timesteps is None else int(timesteps)
+        prof = self._pad_profiles.get(t)
+        if prof is None:
+            h, w = self.cfg.input_hw
+            zero = np.zeros((1, h, w, self.cfg.input_channels), np.float32)
+            out = self.cache.run(
+                zero, self.ecfg.backend,
+                timesteps=None if t == self.cfg.timesteps else t)
+            jax.block_until_ready(out.logits)
+            prof = [np.asarray(tc, dtype=np.float64)
+                    for tc in out.timestep_counts]
+            self._pad_profiles[t] = prof
+        return prof
+
+    def _accumulate(self, timestep_counts, n_pad: int,
+                    timesteps: Optional[int] = None) -> None:
+        """Fold one micro-batch's (T, Cout) spike counts into the running
+        actual-workload accumulator, subtracting the ``n_pad`` pad rows'
+        zero-frame contribution (nonzero once trained biases fire) and
+        zero-extending degraded-T batches to the full T rows."""
+        tcs = [np.asarray(tc, dtype=np.float64) for tc in timestep_counts]
+        if n_pad > 0:
+            prof = self._pad_profile(timesteps)
+            tcs = [np.maximum(tc - n_pad * p, 0.0)
+                   for tc, p in zip(tcs, prof)]
+        t_full = self.cfg.timesteps
+        if tcs and tcs[0].shape[0] < t_full:
+            tcs = [np.concatenate(
+                [tc, np.zeros((t_full - tc.shape[0],) + tc.shape[1:])])
+                for tc in tcs]
         if self._tc_accum is None:
             self._tc_accum = tcs
         else:
             self._tc_accum = [a + b for a, b in zip(self._tc_accum, tcs)]
 
+    def accumulated_timestep_counts(self) -> Optional[List[np.ndarray]]:
+        """Accumulated per-layer (T, Cout) spike counts over all served
+        frames, pad rows masked out (a copy)."""
+        if self._tc_accum is None:
+            return None
+        return [a.copy() for a in self._tc_accum]
+
+    # -- admission ----------------------------------------------------------
+    def _seconds_per_work(self) -> Optional[float]:
+        if self.ecfg.slo_seconds_per_work is not None:
+            return self.ecfg.slo_seconds_per_work
+        return self.dispatcher.monitor.seconds_per_work()
+
+    def _admit_window(self, window: List[Request], num_idle: int, now: float,
+                      backlog_work: float = 0.0,
+                      ) -> Tuple[List[Tuple[List[Request], Optional[int]]], float]:
+        """SLO-filter one FIFO window, then CBWS/batch-aware-bin it into at
+        most ``num_idle`` micro-batches.
+
+        Returns ([(group, timesteps_or_None)], predicted balance).  Groups
+        are homogeneous in timesteps (degraded requests cannot share an
+        executable with full-T ones) and sorted heaviest-first so the caller
+        can zip them with the fastest-first lane ranking.  Requests that
+        cannot be binned this round (more T-classes than idle lanes, or a
+        class over its lane allocation) are pushed back to the FIFO head.
+        ``backlog_work`` is predicted work already in flight on busy lanes
+        (threaded engine) — it delays everything in this window too.
+        """
+        t_full = self.cfg.timesteps
+        ecfg = self.ecfg
+        if ecfg.latency_budget_s is not None:
+            spw = self._seconds_per_work()
+            if spw is not None:
+                window, rejected, degraded = admission.slo_filter(
+                    window, now=now, budget_s=ecfg.latency_budget_s,
+                    seconds_per_work=spw,
+                    num_lanes=len(self.dispatcher.alive()),
+                    full_timesteps=t_full, action=ecfg.slo_action,
+                    degrade_timesteps=self._degrade_t,
+                    backlog_work=backlog_work)
+                self.metrics.rejected += len(rejected)
+                self.metrics.degraded += degraded
+                self.rejected.extend(rejected)
+        if not window:
+            return [], 1.0
+
+        classes: Dict[int, List[Request]] = {}
+        for r in window:
+            classes.setdefault(
+                r.timesteps if r.timesteps is not None else t_full,
+                []).append(r)
+        # FIFO-earliest class first so a 1-lane round serves the queue head
+        ordered = sorted(classes.items(),
+                         key=lambda kv: min((x.arrival, x.rid)
+                                            for x in kv[1]))
+        leftovers: List[Request] = []
+        if len(ordered) > num_idle:
+            for _, reqs in ordered[num_idle:]:
+                leftovers += reqs
+            ordered = ordered[:num_idle]
+        # proportional lane allocation, at least one lane per class
+        allocs = [1] * len(ordered)
+        lanes_left = num_idle - len(ordered)
+        while lanes_left > 0:
+            j = max(range(len(ordered)),
+                    key=lambda k: len(ordered[k][1]) / allocs[k])
+            allocs[j] += 1
+            lanes_left -= 1
+
+        dispatchable: List[Tuple[List[Request], Optional[int]]] = []
+        for (t_c, reqs), n_c in zip(ordered, allocs):
+            cap = ecfg.max_batch * n_c
+            if len(reqs) > cap:
+                leftovers += reqs[cap:]
+                reqs = reqs[:cap]
+            groups, _, _ = admission.admit(
+                reqs, n_c, ecfg.admission, max_group=ecfg.max_batch,
+                buckets=ecfg.buckets if ecfg.batch_aware else None)
+            dispatchable += [(g, None if t_c == t_full else t_c)
+                             for g in groups if g]
+        if leftovers:
+            self.batcher.push_front(
+                sorted(leftovers, key=lambda r: (r.arrival, r.rid)))
+        predicted = balance_ratio(
+            [sum(self._eff_work(r) for r in g)
+             for g, _ in dispatchable] or [1.0])
+        dispatchable.sort(
+            key=lambda gt: -sum(self._eff_work(r) for r in gt[0]))
+        return dispatchable, predicted
+
+    # -- event loops --------------------------------------------------------
     def run(self) -> Dict[str, float]:
-        """Drain every submitted request; returns the metrics summary."""
+        """Drain every submitted request; returns the metrics summary.
+
+        ``EngineConfig.threaded`` selects the wall-clock worker-thread
+        engine; the default replays deterministically on a virtual clock.
+        """
+        if self.ecfg.threaded:
+            return self._run_threaded()
+        return self._run_virtual()
+
+    def _run_virtual(self) -> Dict[str, float]:
+        clock = VirtualClock()
         for r in sorted(self._submitted, key=lambda r: (r.arrival, r.rid)):
             self.batcher.push(r)
         self._submitted = []
-        t = 0.0
         window_idx = 0
         last_failure: Optional[Exception] = None
         while len(self.batcher):
+            t = clock.now()
             ready = self.dispatcher.ready(t)
-            arrived = (self.batcher.next_arrival() is not None
-                       and self.batcher.next_arrival() <= t)
+            na = self.batcher.next_arrival()
+            arrived = na is not None and na <= t
             if not ready or not arrived:
                 nxt = []
                 nf = self.dispatcher.next_free(t)
                 if nf is not None and arrived:
                     nxt.append(nf)
-                na = self.batcher.next_arrival()
                 if na is not None and na > t:
                     nxt.append(na)
                 if not nxt:
@@ -140,30 +344,31 @@ class ServingEngine:
                         raise RuntimeError(
                             "all serving lanes failed") from last_failure
                     raise RuntimeError("serving engine stalled")
-                t = min(nxt)
+                clock.advance_to(min(nxt))
                 continue
 
             depth = len(self.batcher)
             window = self.batcher.take_window(t, len(ready))
-            lanes, _, predicted = admission.admit(
-                window, len(ready), self.ecfg.admission,
-                max_group=self.ecfg.max_batch)
+            dispatchable, predicted = self._admit_window(window, len(ready), t)
+            if not dispatchable:
+                continue                      # whole window rejected
             # heaviest micro-batch -> measured-fastest lane: CBWS placement
             # re-run over the straggler monitor's latency estimates
             order = self.dispatcher.rank(ready)
-            lanes = sorted(lanes, key=lambda g: -sum(r.workload for r in g))
             norm_times: Dict[int, float] = {}
             lane_wall: List[float] = []
             executed: List[List[Request]] = []
-            for lane, grp in zip(order, lanes):
-                if not grp:
-                    continue
+            for lane, (grp, tsteps) in zip(order, dispatchable):
                 bucket = bucket_for(len(grp), self.ecfg.buckets)
-                if not self.cache.has(bucket, self.ecfg.backend):
+                if not self.cache.has(bucket, self.ecfg.backend,
+                                      timesteps=tsteps):
                     # compile outside the timed region (one-off per bucket)
-                    self._run_batch([grp[0].frame] * min(len(grp), bucket))
-                def exec_grp(grp=grp):
-                    return self._run_batch([r.frame for r in grp])
+                    self._run_batch([grp[0].frame] * min(len(grp), bucket),
+                                    timesteps=tsteps)
+
+                def exec_grp(grp=grp, tsteps=tsteps):
+                    return self._run_batch([r.frame for r in grp],
+                                           timesteps=tsteps)
 
                 def on_retry(attempt, exc, grp=grp):
                     self.metrics.retries += 1
@@ -180,7 +385,8 @@ class ServingEngine:
                 svc = (self.ecfg.service_time_fn(lane, wall)
                        if self.ecfg.service_time_fn else wall)
                 finish = self.dispatcher.commit(lane, t, svc, len(grp))
-                self._accumulate(out)
+                self._accumulate(out.timestep_counts, bucket - len(grp),
+                                 tsteps)
                 logits = np.asarray(out.logits)
                 for j, r in enumerate(grp):
                     r.start, r.finish, r.lane, r.window = t, finish, lane, window_idx
@@ -188,7 +394,7 @@ class ServingEngine:
                         r.logits = logits[j]
                     self.metrics.record_completion(r.arrival, r.finish)
                     self.completed.append(r)
-                work = sum(r.workload for r in grp)
+                work = sum(self._eff_work(r) for r in grp)
                 if work > 0:
                     norm_times[lane] = svc / work
                 lane_wall.append(svc)
@@ -203,10 +409,230 @@ class ServingEngine:
             window_idx += 1
         return self.summary()
 
+    # -- threaded engine ----------------------------------------------------
+    def _lane_worker(self, lane: int, cache: JitCache, clock,
+                     inbox: "queue_mod.Queue",
+                     completions: "queue_mod.Queue") -> None:
+        """One serving lane: pops micro-batches from its inbox, executes them
+        (pad + jitted forward + host sync, all off the scheduler thread)
+        under the retry budget, and reports over the completion queue.  A
+        lane that exhausts its budget reports the failure — its micro-batch
+        is never dropped — and exits."""
+        while True:
+            item = inbox.get()
+            if item is None:
+                return
+            grp, tsteps, widx, t_disp = item
+            counts = {"retries": 0}
+
+            def on_retry(attempt, exc, grp=grp):
+                counts["retries"] += 1
+                for r in grp:
+                    r.retries += 1
+
+            bucket = bucket_for(len(grp), self.ecfg.buckets)
+
+            def exec_grp(grp=grp, bucket=bucket, tsteps=tsteps):
+                x = pad_frames([r.frame for r in grp], bucket)
+                out = cache.run(x, self.ecfg.backend, timesteps=tsteps)
+                jax.block_until_ready(out.logits)
+                return out
+
+            try:
+                out, wall = self.dispatcher.execute(lane, exec_grp,
+                                                    on_retry=on_retry)
+            except LaneFailed as e:
+                completions.put(("failed", lane, grp, e, counts["retries"],
+                                 widx))
+                return
+            except BaseException as e:  # noqa: BLE001 — no request may be lost
+                self.dispatcher.mark_dead(lane)
+                completions.put(("failed", lane, grp, LaneFailed(lane, e),
+                                 counts["retries"], widx))
+                return
+            completions.put((
+                "done", lane, grp, tsteps, widx, t_disp, clock.now(),
+                np.asarray(out.logits),
+                [np.asarray(tc, dtype=np.float64)
+                 for tc in out.timestep_counts],
+                bucket, wall, counts["retries"]))
+
+    def _ensure_lane_caches(self) -> List[JitCache]:
+        """Warm every (bucket, T-variant) executable once on the shared
+        cache, then fork a private cache per lane (idempotent).  Forks share
+        the already-compiled executables — executing compiled XLA programs
+        concurrently is thread-safe, and compiling the identical program
+        num_lanes times would only multiply startup cost — while any
+        post-fork compilation stays lane-private, so worker threads can
+        never race a trace.  All compilation happens here, before the
+        WallClock epoch, so warmup never pollutes latency metrics;
+        benchmarks call this via ``warmup()`` to keep compile time out of
+        their own walls too."""
+        if self._lane_caches is not None:
+            return self._lane_caches
+        ecfg = self.ecfg
+        cap = bucket_for(ecfg.max_batch, ecfg.buckets)
+        warm_sizes = [b for b in ecfg.buckets if b <= cap]
+        h, w = self.cfg.input_hw
+        zero = np.zeros((h, w, self.cfg.input_channels), np.float32)
+        t_variants: List[Optional[int]] = [None]
+        if ecfg.latency_budget_s is not None and ecfg.slo_action == "degrade":
+            t_variants.append(self._degrade_t)
+        for b in warm_sizes:
+            for tv in t_variants:
+                jax.block_until_ready(
+                    self.cache.run(pad_frames([zero], b), ecfg.backend,
+                                   timesteps=tv).logits)
+        for tv in t_variants:
+            self._pad_profile(tv)         # pad-mask profiles, also pre-clock
+        self._lane_caches = [self.cache.fork()
+                             for _ in range(ecfg.num_lanes)]
+        return self._lane_caches
+
+    def _run_threaded(self) -> Dict[str, float]:
+        ecfg = self.ecfg
+        pending = deque(sorted(self._submitted,
+                               key=lambda r: (r.arrival, r.rid)))
+        self._submitted = []
+        caches = self._ensure_lane_caches()
+        clock = WallClock()
+        completions: "queue_mod.Queue" = queue_mod.Queue()
+        inboxes = [queue_mod.Queue() for _ in range(ecfg.num_lanes)]
+        workers = [threading.Thread(
+            target=self._lane_worker,
+            args=(i, caches[i], clock, inboxes[i], completions),
+            name=f"serving-lane-{i}", daemon=True)
+            for i in range(ecfg.num_lanes)]
+        for wkr in workers:
+            wkr.start()
+
+        busy: set = set()
+        inflight_work: Dict[int, float] = {}   # lane -> dispatched eff work
+        window_idx = 0
+        state: Dict[str, Optional[Exception]] = {"last_failure": None}
+        # per-window accounting so round balance is recorded — exactly as in
+        # the virtual loop — over the groups that actually *executed*
+        # (a group whose lane dies re-enters the queue and must not be
+        # double-counted), once the window's last micro-batch resolves
+        rounds: Dict[int, Dict] = {}
+
+        def finish_round(widx: int) -> None:
+            rs = rounds.pop(widx)
+            multi = len(rs["executed"]) >= 2
+            self.metrics.record_round(
+                queue_depth=rs["depth"],
+                predicted=rs["predicted"] if multi else None,
+                measured=(admission.measured_balance(rs["executed"])
+                          if multi else None),
+                lane_wall=rs["lane_wall"])
+
+        def handle(item) -> None:
+            kind, lane = item[0], item[1]
+            busy.discard(lane)
+            inflight_work.pop(lane, None)
+            if kind == "failed":
+                _, _, grp, exc, retries, widx = item
+                state["last_failure"] = exc
+                self.metrics.retries += retries
+                # dead lane: requests keep FIFO priority on survivors
+                self.batcher.push_front(grp)
+            else:
+                (_, _, grp, tsteps, widx, t_disp, t_done, logits, tcs,
+                 bucket, wall, retries) = item
+                self.metrics.retries += retries
+                self.dispatcher.commit(lane, t_disp, wall, len(grp))
+                self._accumulate(tcs, bucket - len(grp), tsteps)
+                for j, r in enumerate(grp):
+                    r.start, r.finish, r.lane, r.window = (t_disp, t_done,
+                                                           lane, widx)
+                    if ecfg.keep_logits:
+                        r.logits = logits[j]
+                    self.metrics.record_completion(r.arrival, r.finish)
+                    self.completed.append(r)
+                work = sum(self._eff_work(r) for r in grp)
+                if work > 0:
+                    self.dispatcher.record_round({lane: wall / work})
+                rounds[widx]["executed"].append(grp)
+                rounds[widx]["lane_wall"].append(wall)
+            rounds[widx]["pending"] -= 1
+            if rounds[widx]["pending"] == 0:
+                finish_round(widx)
+
+        try:
+            while pending or len(self.batcher) or busy:
+                now = clock.now()
+                while pending and pending[0].arrival <= now:
+                    self.batcher.push(pending.popleft())
+                while True:                      # drain completions
+                    try:
+                        handle(completions.get_nowait())
+                    except queue_mod.Empty:
+                        break
+                alive = self.dispatcher.alive()
+                if not alive:
+                    # drain the final failure completion (the worker marks
+                    # its lane dead *before* posting, so the item carrying
+                    # the micro-batch + cause may still be in transit)
+                    while busy:
+                        try:
+                            handle(completions.get(timeout=1.0))
+                        except queue_mod.Empty:
+                            break
+                    raise RuntimeError(
+                        "all serving lanes failed") from state["last_failure"]
+                idle = [l for l in alive if l not in busy]
+                na = self.batcher.next_arrival()
+                if idle and na is not None and na <= now:
+                    depth = len(self.batcher)
+                    window = self.batcher.take_window(now, len(idle))
+                    dispatchable, predicted = self._admit_window(
+                        window, len(idle), now,
+                        backlog_work=sum(inflight_work.values()))
+                    if dispatchable:
+                        order = self.dispatcher.rank(idle)
+                        rounds[window_idx] = {
+                            "depth": depth, "predicted": predicted,
+                            "pending": len(dispatchable), "executed": [],
+                            "lane_wall": []}
+                        for lane, (grp, tsteps) in zip(order, dispatchable):
+                            busy.add(lane)
+                            inflight_work[lane] = sum(self._eff_work(r)
+                                                      for r in grp)
+                            inboxes[lane].put(
+                                (grp, tsteps, window_idx, clock.now()))
+                        window_idx += 1
+                    continue
+                # nothing dispatchable: park until the next event
+                if busy:
+                    timeout = None
+                    if pending:
+                        timeout = max(0.0, pending[0].arrival - clock.now())
+                    try:
+                        handle(completions.get(timeout=timeout))
+                    except queue_mod.Empty:
+                        pass
+                elif pending:
+                    clock.sleep_until(pending[0].arrival)
+                elif len(self.batcher):
+                    continue        # re-queued failures: loop re-dispatches
+                else:
+                    break
+        finally:
+            for ib in inboxes:
+                ib.put(None)
+            for wkr in workers:
+                wkr.join(timeout=5.0)
+            self._lane_compiles = sum(c.compiles for c in caches)
+        return self.summary()
+
     # -- single-shot / throughput modes ------------------------------------
     def warmup(self, sizes: Optional[Sequence[int]] = None) -> None:
         """Compile + warm the bucket executables outside any timed region
-        (benchmarks call this before starting their clocks)."""
+        (benchmarks call this before starting their clocks).  For the
+        threaded engine this also builds every lane's private cache."""
+        if self.ecfg.threaded:
+            self._ensure_lane_caches()
+            return
         h, w = self.cfg.input_hw
         zero = np.zeros((h, w, self.cfg.input_channels), np.float32)
         # include the bucket that max_batch-sized groups pad into
@@ -251,7 +677,7 @@ class ServingEngine:
     # -- reporting ----------------------------------------------------------
     def summary(self) -> Dict[str, float]:
         s = self.metrics.summary()
-        s["compiles"] = self.cache.compiles
+        s["compiles"] = self.cache.compiles + self._lane_compiles
         s["dead_lanes"] = len(self.dispatcher.lanes) - len(self.dispatcher.alive())
         if self._tc_accum is not None and self.metrics.served:
             s.update(energy_per_image(self.cfg, self.params, self._tc_accum,

@@ -32,6 +32,8 @@ class ServingMetrics:
     rounds: int = 0
     served: int = 0
     retries: int = 0
+    rejected: int = 0                 # dropped at admission (SLO over budget)
+    degraded: int = 0                 # served with reduced timesteps (SLO)
     first_arrival: float = float("inf")
     last_finish: float = 0.0
 
@@ -66,6 +68,8 @@ class ServingMetrics:
             "served": self.served,
             "rounds": self.rounds,
             "retries": self.retries,
+            "rejected": self.rejected,
+            "degraded": self.degraded,
             "p50_latency_s": percentile(self.latencies, 50),
             "p99_latency_s": percentile(self.latencies, 99),
             "fps": self.fps(),

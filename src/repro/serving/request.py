@@ -22,13 +22,17 @@ __all__ = ["Request"]
 class Request:
     rid: int
     frame: np.ndarray                 # (H, W, Cin) analog frame in [0, 1]
-    arrival: float                    # virtual arrival time, seconds
+    arrival: float                    # arrival time on the engine clock, s
     workload: float = 0.0             # APRC-predicted relative workload
     events: float = 0.0               # measured input events (T * frame.sum())
 
+    # SLO admission outcome (set by admission.slo_filter)
+    timesteps: Optional[int] = None   # degraded T (None -> cfg.timesteps)
+    rejected: bool = False            # dropped at admission (over budget)
+
     # filled in by the engine at dispatch/completion
-    start: float = -1.0               # virtual dispatch time
-    finish: float = -1.0              # virtual completion time
+    start: float = -1.0               # dispatch time on the engine clock
+    finish: float = -1.0              # completion time on the engine clock
     lane: int = -1                    # lane that served it
     window: int = -1                  # admission-window index (FIFO order)
     retries: int = 0                  # lane-failure retries
@@ -41,3 +45,7 @@ class Request:
     @property
     def done(self) -> bool:
         return self.finish >= 0.0
+
+    @property
+    def degraded(self) -> bool:
+        return self.timesteps is not None

@@ -1,0 +1,169 @@
+"""Property/invariant suite for serving admission (satellite of the
+threaded-engine PR): ``admission.admit`` and ``core.cbws.cbws_partition``
+must hold their contracts on *arbitrary* workloads, not just the curated
+skewed bursts the unit tests use.
+
+Hypothesis-driven where available (tests/_hypothesis_compat.py shim skips
+only the ``@given`` tests when it is not installed); the deterministic unit
+tests below keep the same invariants in tier-1 regardless.
+
+Invariants:
+  * every request is assigned to exactly one micro-batch;
+  * no micro-batch exceeds ``max_batch``;
+  * CBWS admission's predicted balance is never worse than FIFO striping of
+    the same window (the never-worse guarantee is part of admit's contract);
+  * ``cbws_partition``'s group-workload multiset is invariant under
+    permutation of the input;
+  * batch-aware binning lands every micro-batch exactly on a padding bucket
+    whenever a zero-pad size split exists.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.balance import balance_ratio
+from repro.core.cbws import cbws_partition, partition_sums
+from repro.serving import admit, bucket_size_plan
+from repro.serving.admission import measured_balance
+from repro.serving.request import Request
+
+BUCKETS = (1, 2, 4, 8, 16)
+MAX_BATCH = 8
+
+
+def _requests(workloads):
+    return [Request(rid=i, frame=np.zeros((2, 2, 1)), arrival=float(i),
+                    workload=float(w), events=float(w))
+            for i, w in enumerate(workloads)]
+
+
+workloads_st = st.lists(
+    st.floats(min_value=0.0, max_value=1e6,
+              allow_nan=False, allow_infinity=False),
+    min_size=1, max_size=48)
+lanes_st = st.integers(min_value=1, max_value=6)
+
+
+# -- hypothesis properties ---------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(workloads_st, lanes_st)
+def test_admit_assigns_every_request_exactly_once(workloads, lanes):
+    for buckets in (None, BUCKETS):
+        for policy in ("cbws", "fifo"):
+            window = _requests(workloads)[:MAX_BATCH * lanes]
+            groups, part, _ = admit(window, lanes, policy,
+                                    max_group=MAX_BATCH, buckets=buckets)
+            seen = [r.rid for g in groups for r in g]
+            assert sorted(seen) == list(range(len(window)))
+            assert sorted(i for g in part.groups for i in g) \
+                == list(range(len(window)))
+
+
+@settings(max_examples=60, deadline=None)
+@given(workloads_st, lanes_st)
+def test_admit_group_sizes_never_exceed_max_batch(workloads, lanes):
+    for buckets in (None, BUCKETS):
+        window = _requests(workloads)[:MAX_BATCH * lanes]
+        groups, _, _ = admit(window, lanes, "cbws",
+                             max_group=MAX_BATCH, buckets=buckets)
+        assert all(len(g) <= MAX_BATCH for g in groups)
+        assert len(groups) <= lanes
+
+
+@settings(max_examples=60, deadline=None)
+@given(workloads_st, lanes_st)
+def test_cbws_admission_never_worse_than_fifo_striping(workloads, lanes):
+    """The scheduler must not lose to its own baseline: on every window the
+    predicted balance of CBWS admission >= FIFO striping (admit falls back
+    to the stripe when Algorithm 1's heuristic loses on an adversarial
+    order)."""
+    for buckets in (None, BUCKETS):
+        window = _requests(workloads)[:MAX_BATCH * lanes]
+        cbws_g, _, cbws_pred = admit(window, lanes, "cbws",
+                                     max_group=MAX_BATCH, buckets=buckets)
+        fifo_g, _, fifo_pred = admit(window, lanes, "fifo",
+                                     max_group=MAX_BATCH, buckets=buckets)
+        assert cbws_pred >= fifo_pred - 1e-12
+        # the predicted ratios are measured on the same workload signal
+        assert measured_balance(cbws_g) >= measured_balance(fifo_g) - 1e-12
+
+
+@settings(max_examples=60, deadline=None)
+@given(workloads_st, lanes_st, st.integers(min_value=0, max_value=2 ** 31))
+def test_cbws_partition_balance_invariant_under_permutation(workloads, lanes,
+                                                            seed):
+    """Permuting the window must not change the partition's group-workload
+    multiset (Algorithm 1 sorts by workload before dealing, so arrival
+    order is irrelevant to the resulting balance)."""
+    w = np.asarray(workloads, dtype=np.float64)
+    perm = np.random.default_rng(seed).permutation(len(w))
+    base = np.sort(partition_sums(cbws_partition(w, lanes), w))
+    shuf = np.sort(partition_sums(cbws_partition(w[perm], lanes), w[perm]))
+    np.testing.assert_allclose(base, shuf, rtol=1e-12, atol=1e-9)
+    assert balance_ratio(base) == pytest.approx(balance_ratio(shuf),
+                                                rel=1e-12, abs=1e-12)
+
+
+@settings(max_examples=60, deadline=None)
+@given(workloads_st, lanes_st)
+def test_bucket_size_plan_is_exact_and_capped(workloads, lanes):
+    total = min(len(workloads), MAX_BATCH * lanes)
+    sizes = bucket_size_plan(total, lanes, BUCKETS, MAX_BATCH)
+    assert sum(sizes) == total
+    assert len(sizes) <= lanes
+    assert all(1 <= s <= MAX_BATCH for s in sizes)
+
+
+# -- deterministic invariants (tier-1 coverage without hypothesis) ----------
+
+def test_bucket_size_plan_minimizes_padding():
+    # 16 across 4 lanes of max 4: the only zero-pad plan is 4x4
+    assert bucket_size_plan(16, 4, BUCKETS, 4) == [4, 4, 4, 4]
+    # 24 across 4 lanes of max 8: zero-pad plans exist; the most even wins
+    assert bucket_size_plan(24, 4, BUCKETS, 8) == [8, 8, 4, 4]
+    # 10 across 2 lanes of max 8: 8+2 pads nothing, the even 5+5 pads 6
+    assert bucket_size_plan(10, 2, BUCKETS, 8) == [8, 2]
+    # 3 on one lane cannot avoid padding (3 -> bucket 4): stays a single group
+    assert bucket_size_plan(3, 1, BUCKETS, 4) == [3]
+
+
+def test_bucket_size_plan_infeasible_raises():
+    with pytest.raises(ValueError, match="cannot split"):
+        bucket_size_plan(9, 2, (1, 2, 4), 4)
+
+
+def test_batch_aware_admission_wastes_no_pad_rows():
+    """Unconstrained CBWS on this window makes uneven groups that pad badly;
+    batch-aware binning plans sizes onto the buckets first."""
+    from repro.serving.batcher import bucket_for
+    rng = np.random.default_rng(0)
+    window = _requests(rng.lognormal(0.0, 1.5, 24))
+    plain, _, _ = admit(window, 4, "cbws", max_group=8)
+    aware, _, _ = admit(window, 4, "cbws", max_group=8, buckets=BUCKETS)
+    pad = lambda groups: sum(bucket_for(len(g), BUCKETS) - len(g)
+                             for g in groups if g)
+    assert pad(aware) == 0                      # 24 = 8 + 8 + 4 + 4
+    assert pad(aware) <= pad(plain)
+    assert sorted(r.rid for g in aware for r in g) == list(range(24))
+
+
+def test_batch_aware_admission_still_balances_workload():
+    rng = np.random.default_rng(1)
+    window = _requests(rng.lognormal(0.0, 1.5, 24))
+    aware, _, pred = admit(window, 4, "cbws", max_group=8, buckets=BUCKETS)
+    fifo, _, fifo_pred = admit(window, 4, "fifo", max_group=8,
+                               buckets=BUCKETS)
+    assert pred >= fifo_pred
+    assert pred > 0.8                           # near-balanced despite sizes
+
+
+def test_admit_never_worse_guarantee_on_adversarial_order():
+    """A window where the contiguous FIFO split happens to be perfect while
+    raw Algorithm 1's snake-deal is not: admit must keep the stripe."""
+    window = _requests([2.0, 2.0, 2.0, 3.0, 3.0])
+    cbws_g, _, cbws_pred = admit(window, 2, "cbws")
+    _, _, fifo_pred = admit(window, 2, "fifo")
+    assert fifo_pred == 1.0                     # [2,2,2] / [3,3] is exact
+    assert cbws_pred >= fifo_pred

@@ -1,0 +1,320 @@
+"""SLO admission control + pad-row spike-leak regression (satellites of the
+threaded-engine PR).
+
+The SLO tests replay deterministically: virtual clock, injected constant
+service times, and an explicit ``slo_seconds_per_work`` prior — so every
+admit/reject decision is bit-reproducible.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import get_snn
+from repro.core import init_snn, snn_apply
+from repro.serving import EngineConfig, ServingEngine
+from repro.serving.admission import (layer0_channel_weights, predict_workload,
+                                     slo_filter)
+from repro.serving.request import Request
+
+
+def _tiny_cfg():
+    return dataclasses.replace(
+        get_snn("snn-mnist"), input_hw=(8, 8), conv_channels=(8, 8),
+        timesteps=3, num_spe_clusters=4)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = _tiny_cfg()
+    params = init_snn(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _uniform_frames(n, cfg, value=0.5):
+    h, w = cfg.input_hw
+    return np.full((n, h, w, cfg.input_channels), value, np.float32)
+
+
+# -- pad-row spike leakage ---------------------------------------------------
+
+def _trained_like_params(params, bias=1.5):
+    """Supra-threshold conv biases, as a trained net can have: all-zero pad
+    rows now fire every timestep."""
+    return {**params,
+            "conv": [dict(p, b=p["b"] + bias) for p in params["conv"]]}
+
+
+def test_pad_rows_fire_with_trained_params(tiny):
+    """Sanity for the regression below: with supra-threshold biases a zero
+    frame really does produce spikes (the leak exists to be masked)."""
+    cfg, params = tiny
+    params_b = _trained_like_params(params)
+    zero = np.zeros((1, *cfg.input_hw, cfg.input_channels), np.float32)
+    out = snn_apply(params_b, zero, cfg, backend="batched")
+    assert sum(float(t) for t in out.spike_totals) > 0
+
+
+def test_accumulated_spikes_match_unpadded_reference(tiny):
+    """Serving 3 frames pads the micro-batch to bucket 4; with trained
+    (nonzero-bias) params the pad row fires, and ``_accumulate`` must
+    subtract its contribution so the engine's spike workload equals an
+    unpadded forward of exactly those 3 frames."""
+    cfg, params = tiny
+    params_b = _trained_like_params(params)
+    frames = np.clip(np.random.default_rng(2).uniform(
+        0, 1, (3, *cfg.input_hw, cfg.input_channels)), 0, 1).astype(np.float32)
+
+    eng = ServingEngine(params_b, cfg, EngineConfig(num_lanes=1, max_batch=4))
+    for f in frames:
+        eng.submit(f, arrival=0.0)
+    eng.run()
+
+    ref = snn_apply(params_b, frames, cfg, backend="batched")
+    acc = eng.accumulated_timestep_counts()
+    assert acc is not None
+    for masked, want in zip(acc, ref.timestep_counts):
+        np.testing.assert_allclose(masked, np.asarray(want, np.float64),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_energy_metric_unaffected_by_padding(tiny):
+    """Energy/image through the padded engine == through an engine whose
+    bucket set matches the batch exactly (no pad rows at all)."""
+    cfg, params = tiny
+    params_b = _trained_like_params(params)
+    frames = np.clip(np.random.default_rng(4).uniform(
+        0, 1, (3, *cfg.input_hw, cfg.input_channels)), 0, 1).astype(np.float32)
+
+    def run(buckets, max_batch):
+        eng = ServingEngine(params_b, cfg, EngineConfig(
+            num_lanes=1, max_batch=max_batch, buckets=buckets))
+        for f in frames:
+            eng.submit(f, arrival=0.0)
+        return eng.run()
+
+    padded = run((1, 2, 4, 8, 16), 4)        # 3 frames pad into bucket 4
+    exact = run((1, 3), 3)                   # 3 is its own bucket: no pads
+    assert padded["energy_j_per_image"] == pytest.approx(
+        exact["energy_j_per_image"], rel=1e-6)
+
+
+# -- SLO admission control ---------------------------------------------------
+
+def test_slo_filter_rejects_over_budget_requests():
+    reqs = [Request(rid=i, frame=np.zeros((2, 2, 1)), arrival=0.0,
+                    workload=1.0, events=1.0) for i in range(10)]
+    admitted, rejected, degraded = slo_filter(
+        reqs, now=0.0, budget_s=0.5, seconds_per_work=0.2, num_lanes=1,
+        full_timesteps=4, action="reject")
+    # delay of request i (1-indexed cum work) = 0.2 * i; budget admits i <= 2
+    assert [r.rid for r in admitted] == [0, 1]
+    assert [r.rid for r in rejected] == list(range(2, 10))
+    assert all(r.rejected for r in rejected)
+    assert degraded == 0
+
+
+def test_slo_filter_degrade_sheds_work_instead_of_requests():
+    reqs = [Request(rid=i, frame=np.zeros((2, 2, 1)), arrival=0.0,
+                    workload=1.0, events=1.0) for i in range(10)]
+    admitted, rejected, degraded = slo_filter(
+        reqs, now=0.0, budget_s=0.5, seconds_per_work=0.2, num_lanes=1,
+        full_timesteps=4, action="degrade", degrade_timesteps=1)
+    assert not rejected
+    assert len(admitted) == 10 and degraded > 0
+    # degraded requests carry the reduced T; the first two stay full-quality
+    assert [r.timesteps for r in admitted[:2]] == [None, None]
+    assert all(r.timesteps == 1 for r in admitted if r.degraded)
+    # degrading shed 4x work per request, so more fit under the budget than
+    # reject mode admitted at full T
+    assert sum(r.timesteps is None for r in admitted) == 2
+
+
+def test_slo_filter_degrade_never_drops_even_when_undegradable():
+    """Degrade mode's contract is quality loss, not loss of service: a
+    request that cannot be degraded any further (degrade_timesteps at or
+    above its T — e.g. a T=1 network) is kept as-is, never rejected."""
+    reqs = [Request(rid=i, frame=np.zeros((2, 2, 1)), arrival=0.0,
+                    workload=1.0, events=1.0) for i in range(6)]
+    admitted, rejected, degraded = slo_filter(
+        reqs, now=0.0, budget_s=0.0, seconds_per_work=1.0, num_lanes=1,
+        full_timesteps=1, action="degrade", degrade_timesteps=1)
+    assert not rejected and degraded == 0
+    assert [r.rid for r in admitted] == list(range(6))
+    assert all(r.timesteps is None for r in admitted)
+
+
+def test_slo_filter_unknown_action_raises():
+    with pytest.raises(ValueError, match="slo action"):
+        slo_filter([], now=0.0, budget_s=1.0, seconds_per_work=1.0,
+                   num_lanes=1, full_timesteps=4, action="drop")
+
+
+def test_engine_unknown_slo_action_raises(tiny):
+    cfg, params = tiny
+    with pytest.raises(ValueError, match="slo_action"):
+        ServingEngine(params, cfg, EngineConfig(slo_action="drop"))
+
+
+def test_engine_zero_degrade_timesteps_rejected_at_construction(tiny):
+    """A zero-timestep network cannot run; the config must fail fast, not
+    crash mid-serving when the first request degrades."""
+    cfg, params = tiny
+    with pytest.raises(ValueError, match="degrade_timesteps"):
+        ServingEngine(params, cfg, EngineConfig(
+            latency_budget_s=0.01, slo_action="degrade",
+            degrade_timesteps=0))
+
+
+def test_requeued_requests_bypass_slo_rejection(tiny):
+    """A request that was admitted, dispatched, and re-queued by a lane
+    death must be served, never re-rejected — even though its waited time
+    now exceeds the budget (the no-request-lost guarantee outranks the
+    SLO)."""
+    cfg, params = tiny
+
+    def kill_lane0(lane, attempt):
+        if lane == 0:
+            raise RuntimeError("chaos: lane 0 down")
+
+    frames = _uniform_frames(8, cfg)
+    w = predict_workload(frames[0], layer0_channel_weights(params),
+                         cfg.timesteps)
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=2, max_batch=4, max_retries=0, fault_hook=kill_lane0,
+        latency_budget_s=0.01, slo_seconds_per_work=1e-9 / w,
+        slo_action="reject",
+        service_time_fn=lambda lane, wall: 0.05, keep_logits=False))
+    for f in frames:
+        eng.submit(f, arrival=0.0)
+    s = eng.run()
+    # lane 0's first micro-batch burned 0.05s before re-queueing: waited is
+    # over the 0.01s budget, yet nothing may be dropped
+    assert s["dead_lanes"] == 1
+    assert s["rejected"] == 0
+    assert s["served"] == len(frames)
+    assert any(r.retries > 0 for r in eng.completed)
+
+
+def test_engine_rejects_over_budget_and_surfaces_metric(tiny):
+    """Burst over budget: the engine rejects deterministically, rejections
+    surface in ServingMetrics, and every request is accounted for."""
+    cfg, params = tiny
+    frames = _uniform_frames(12, cfg)
+    w = predict_workload(frames[0], layer0_channel_weights(params),
+                         cfg.timesteps)
+    budget = 0.05
+    spw = budget * 2 / (w * 5)        # ~5 requests fit the budget at t=0
+
+    def run():
+        eng = ServingEngine(params, cfg, EngineConfig(
+            num_lanes=2, max_batch=4, latency_budget_s=budget,
+            slo_seconds_per_work=spw, slo_action="reject",
+            service_time_fn=lambda lane, wall: 0.001, keep_logits=False))
+        for f in frames:
+            eng.submit(f, arrival=0.0)
+        return eng, eng.run()
+
+    eng, s = run()
+    assert s["rejected"] > 0
+    assert s["served"] + s["rejected"] == len(frames)
+    assert s["rejected"] == len(eng.rejected)
+    assert all(r.rejected and not r.done for r in eng.rejected)
+    assert max(r.latency for r in eng.completed) <= budget
+    # deterministic replay: identical admit/reject split
+    _, s2 = run()
+    assert (s2["served"], s2["rejected"]) == (s["served"], s["rejected"])
+
+
+def test_engine_degrade_serves_everyone_with_reduced_timesteps(tiny):
+    """Degrade mode sheds timesteps, not requests: everything is served,
+    the over-budget tail at reduced T, and degraded logits bitwise match a
+    reduced-T forward (the degraded executable is real, not a stub)."""
+    cfg, params = tiny
+    frames = _uniform_frames(12, cfg)
+    w = predict_workload(frames[0], layer0_channel_weights(params),
+                         cfg.timesteps)
+    budget = 0.05
+    spw = budget * 2 / (w * 5)
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=2, max_batch=4, latency_budget_s=budget,
+        slo_seconds_per_work=spw, slo_action="degrade", degrade_timesteps=1,
+        service_time_fn=lambda lane, wall: 0.001))
+    for f in frames:
+        eng.submit(f, arrival=0.0)
+    s = eng.run()
+    assert s["served"] == len(frames) and s["rejected"] == 0
+    assert s["degraded"] > 0
+    cfg1 = dataclasses.replace(cfg, timesteps=1)
+    single = jax.jit(lambda p, x: snn_apply(p, x, cfg1, backend="batched"))
+    for r in eng.completed:
+        if r.degraded:
+            assert r.timesteps == 1
+            want = np.asarray(single(params, r.frame[None]).logits[0])
+            np.testing.assert_array_equal(want, r.logits)
+
+
+def test_p99_holds_under_budget_on_quick_load_trace(tiny):
+    """--quick-scale overloaded Poisson trace (3x capacity): without SLO
+    control p99 blows through the budget; with conservatively-priced
+    admission (one batch quantum per lightest request) the served p99 stays
+    under it.  Fully deterministic (virtual clock + injected service)."""
+    cfg, params = tiny
+    cw = layer0_channel_weights(params)
+    n, svc, budget = 48, 0.004, 0.01
+    frames = np.clip(np.random.default_rng(5).uniform(
+        0, 1, (n, *cfg.input_hw, cfg.input_channels)), 0, 1).astype(np.float32)
+    wmin = min(predict_workload(f, cw, cfg.timesteps) for f in frames)
+    spw = 2.0 * svc / wmin
+    capacity = 2 * 4 / svc
+    arrivals = np.cumsum(
+        np.random.default_rng(3).exponential(1.0 / (3.0 * capacity), n))
+
+    def run(budget_s):
+        eng = ServingEngine(params, cfg, EngineConfig(
+            num_lanes=2, max_batch=4, latency_budget_s=budget_s,
+            slo_seconds_per_work=spw, slo_action="reject",
+            service_time_fn=lambda lane, wall: svc, keep_logits=False))
+        for f, a in zip(frames, arrivals):
+            eng.submit(f, arrival=float(a))
+        return eng.run()
+
+    slo = run(budget)
+    unprotected = run(None)
+    assert unprotected["p99_latency_s"] > budget      # overload is real
+    assert slo["p99_latency_s"] <= budget
+    assert slo["rejected"] > 0
+    assert slo["served"] + slo["rejected"] == n
+
+
+def test_no_rate_estimate_admits_everything(tiny):
+    """With a budget but no prior and no service history, the admitter has
+    no delay estimate yet — it must not reject blindly."""
+    cfg, params = tiny
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=2, max_batch=4, latency_budget_s=1e-9,
+        slo_action="reject", keep_logits=False))
+    frames = _uniform_frames(4, cfg)
+    for f in frames:
+        eng.submit(f, arrival=0.0)
+    s = eng.run()
+    assert s["served"] == len(frames)                 # first window admits all
+
+
+def test_threaded_engine_honors_slo(tiny):
+    """SLO admission composes with the threaded engine: an absurdly tight
+    budget with an explicit prior rejects the whole burst tail."""
+    cfg, params = tiny
+    frames = _uniform_frames(10, cfg)
+    w = predict_workload(frames[0], layer0_channel_weights(params),
+                         cfg.timesteps)
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=2, max_batch=4, threaded=True,
+        latency_budget_s=1e-4, slo_seconds_per_work=1.0 / w,
+        slo_action="reject", keep_logits=False))
+    for f in frames:
+        eng.submit(f, arrival=0.0)
+    s = eng.run()
+    assert s["served"] + s["rejected"] == len(frames)
+    assert s["rejected"] > 0

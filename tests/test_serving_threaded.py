@@ -1,0 +1,281 @@
+"""The threaded serving engine: real worker-thread lanes on the wall clock.
+
+Chaos discipline: thread interleavings are nondeterministic, so these tests
+assert *conservation and ordering invariants* (no request lost, none served
+twice, FIFO at window granularity, bitwise-correct logits) rather than exact
+schedules; the bit-exact replay guarantee is asserted on the VirtualClock
+path, which the threaded engine shares its admission/binning code with.
+"""
+import dataclasses
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import get_snn
+from repro.core import init_snn, snn_apply
+from repro.serving import EngineConfig, ServingEngine, VirtualClock, WallClock
+
+
+def _tiny_cfg():
+    return dataclasses.replace(
+        get_snn("snn-mnist"), input_hw=(8, 8), conv_channels=(8, 8),
+        timesteps=3, num_spe_clusters=4)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = _tiny_cfg()
+    params = init_snn(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _skewed_frames(n, cfg, seed=0, sigma=1.2):
+    rng = np.random.default_rng(seed)
+    h, w = cfg.input_hw
+    x = rng.uniform(0, 1, (n, h, w, cfg.input_channels))
+    scale = rng.lognormal(-0.5, sigma, (n, 1, 1, 1))
+    return np.clip(x * scale, 0, 1).astype(np.float32)
+
+
+def _submit_burst(eng, frames, heavy_first=True, gap=0.0):
+    """Skewed burst: heaviest requests first (the adversarial arrival order
+    the FIFO baseline handles worst)."""
+    order = (np.argsort(-frames.sum(axis=(1, 2, 3))) if heavy_first
+             else np.arange(len(frames)))
+    return [eng.submit(frames[i], arrival=gap * k)
+            for k, i in enumerate(order)]
+
+
+def _assert_conserved(eng, rids):
+    """No request lost, none served twice."""
+    done = [r.rid for r in eng.completed]
+    assert len(done) == len(set(done)), "a request was served twice"
+    assert sorted(done) == sorted(rids), "a request was lost"
+    assert all(r.finish >= r.start >= 0 for r in eng.completed)
+
+
+def _assert_fifo_windows(eng):
+    """FIFO preserved at window granularity: among never-retried requests, a
+    later arrival never lands in an earlier admission window (retried
+    micro-batches legitimately re-enter at the head of a later window)."""
+    clean = sorted((r for r in eng.completed if r.retries == 0),
+                   key=lambda r: (r.arrival, r.rid))
+    windows = [r.window for r in clean]
+    assert windows == sorted(windows)
+
+
+# -- clocks ------------------------------------------------------------------
+
+def test_virtual_clock_advances_monotonically():
+    c = VirtualClock()
+    assert c.now() == 0.0 and c.virtual
+    c.advance_to(1.5)
+    c.advance_to(0.5)                    # backward moves are no-ops
+    assert c.now() == 1.5
+    c.sleep_until(2.0)                   # virtual sleeping is advancing
+    assert c.now() == 2.0
+
+
+def test_wall_clock_tracks_real_time():
+    c = WallClock()
+    assert not c.virtual
+    t0 = c.now()
+    c.sleep_until(t0 + 0.02)
+    assert c.now() >= t0 + 0.02
+
+
+# -- threaded engine ---------------------------------------------------------
+
+def test_threaded_serves_all_bitwise_identical_to_unbatched(tiny):
+    """Worker-thread lanes must not perturb any request's result: per-request
+    logits == jitted unbatched snn_apply, bitwise, whatever the
+    nondeterministic window composition was."""
+    cfg, params = tiny
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=2, max_batch=4, threaded=True))
+    frames = _skewed_frames(12, cfg)
+    rids = _submit_burst(eng, frames, gap=0.0005)
+    s = eng.run()
+    assert s["served"] == len(rids)
+    _assert_conserved(eng, rids)
+    _assert_fifo_windows(eng)
+    single = jax.jit(lambda p, x: snn_apply(p, x, cfg, backend="batched"))
+    by_rid = {r.rid: r for r in eng.completed}
+    frames_by_rid = {rid: f for rid, f in
+                     zip(rids, frames[np.argsort(-frames.sum(axis=(1, 2, 3)))])}
+    for rid, r in by_rid.items():
+        want = np.asarray(single(params, frames_by_rid[rid][None]).logits[0])
+        np.testing.assert_array_equal(want, r.logits)
+
+
+def test_threaded_latencies_are_wall_positive(tiny):
+    cfg, params = tiny
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=2, max_batch=4, threaded=True, keep_logits=False))
+    _submit_burst(eng, _skewed_frames(8, cfg), gap=0.001)
+    s = eng.run()
+    assert s["served"] == 8
+    assert s["p50_latency_s"] > 0 and s["p99_latency_s"] >= s["p50_latency_s"]
+    assert s["fps"] > 0
+
+
+def test_threaded_multi_lane_rounds_record_wall_balance(tiny):
+    """Rounds that ran >= 2 micro-batches must record measured wall-time
+    balance samples (not leave the vacuous 1.0 default)."""
+    cfg, params = tiny
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=2, max_batch=4, threaded=True, keep_logits=False))
+    _submit_burst(eng, _skewed_frames(16, cfg))
+    s = eng.run()
+    assert s["served"] == 16
+    assert len(eng.metrics.wall_balances) > 0
+    assert 0 < s["wall_balance"] <= 1.0
+
+
+def test_threaded_lane_caches_share_warm_executables(tiny):
+    """Per-lane caches are forks of one warmed cache: identical programs
+    compile once, not once per lane."""
+    cfg, params = tiny
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=3, max_batch=4, buckets=(2, 4), threaded=True,
+        keep_logits=False))
+    _submit_burst(eng, _skewed_frames(8, cfg))
+    s = eng.run()
+    assert s["served"] == 8
+    # shared cache: buckets 2 and 4 at full T, + the bucket-1 pad profile;
+    # the 3 lane forks add nothing
+    assert s["compiles"] == 3
+
+
+def test_threaded_chaos_lane_killed_mid_flight(tiny):
+    """Kill lane 0 mid-flight (the fault fires on the worker thread, inside
+    the retry loop, while its micro-batch is in flight): the batch drains
+    back through the completion queue, survivors serve everything — no
+    request lost or double-served, FIFO preserved within windows."""
+    cfg, params = tiny
+    calls = {"n": 0}
+    lock = threading.Lock()
+
+    def kill_lane0(lane, attempt):
+        if lane == 0:
+            with lock:
+                calls["n"] += 1
+            raise RuntimeError("chaos: lane 0 down")
+
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=2, max_batch=2, max_retries=1, threaded=True,
+        fault_hook=kill_lane0))
+    frames = _skewed_frames(10, cfg, sigma=1.5)
+    rids = _submit_burst(eng, frames)
+    s = eng.run()
+    assert s["served"] == len(rids)
+    _assert_conserved(eng, rids)
+    _assert_fifo_windows(eng)
+    assert s["dead_lanes"] == 1
+    assert all(r.lane == 1 for r in eng.completed)
+    if calls["n"]:                       # lane 0 got work before it died
+        assert s["retries"] > 0
+        assert calls["n"] == 2           # initial attempt + 1 retry
+
+
+def test_threaded_retry_backoff_absorbs_transient_fault(tiny):
+    """``EngineConfig.retry_backoff_s`` plumbs through to the lanes' retry
+    policy: a once-per-lane transient fault is retried after the backoff
+    and every request still completes."""
+    cfg, params = tiny
+    tripped = set()
+    lock = threading.Lock()
+
+    def flake_once(lane, attempt):
+        with lock:
+            if lane not in tripped:
+                tripped.add(lane)
+                raise RuntimeError("chaos: transient flake")
+
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=2, max_batch=2, max_retries=2, retry_backoff_s=0.005,
+        threaded=True, fault_hook=flake_once, keep_logits=False))
+    assert eng.dispatcher.retry.backoff_s == 0.005
+    rids = _submit_burst(eng, _skewed_frames(6, cfg))
+    s = eng.run()
+    _assert_conserved(eng, rids)
+    assert s["served"] == len(rids)
+    assert s["retries"] > 0 and s["dead_lanes"] == 0
+
+
+def test_threaded_all_lanes_dead_raises(tiny):
+    cfg, params = tiny
+
+    def outage(lane, attempt):
+        raise RuntimeError("chaos: total outage")
+
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=2, max_batch=2, max_retries=0, threaded=True,
+        fault_hook=outage))
+    eng.submit(_skewed_frames(1, cfg)[0], arrival=0.0)
+    with pytest.raises(RuntimeError, match="lanes failed"):
+        eng.run()
+
+
+def test_virtual_replay_is_deterministic_under_chaos(tiny):
+    """The same chaos scenario on the VirtualClock replays bit-identically:
+    identical summaries and identical per-request (lane, window, finish)
+    assignments across runs — the deterministic-replay half of the Clock
+    contract."""
+    cfg, params = tiny
+
+    def run_once():
+        def kill_lane0(lane, attempt):
+            if lane == 0:
+                raise RuntimeError("chaos: lane 0 down")
+
+        eng = ServingEngine(params, cfg, EngineConfig(
+            num_lanes=2, max_batch=2, max_retries=1, keep_logits=False,
+            fault_hook=kill_lane0,
+            service_time_fn=lambda lane, wall: 0.01 * (lane + 1)))
+        frames = _skewed_frames(10, cfg, sigma=1.5)
+        rids = _submit_burst(eng, frames, gap=0.003)
+        s = eng.run()
+        _assert_conserved(eng, rids)
+        trace = [(r.rid, r.lane, r.window, r.start, r.finish)
+                 for r in sorted(eng.completed, key=lambda r: r.rid)]
+        return s, trace
+
+    s1, t1 = run_once()
+    s2, t2 = run_once()
+    assert t1 == t2
+    assert {k: v for k, v in s1.items()} == {k: v for k, v in s2.items()}
+
+
+@pytest.mark.slow
+def test_threaded_soak_random_transient_faults(tiny):
+    """Soak: hundreds of requests, random transient faults on every lane
+    (the retry budget absorbs them), conservation + spot-checked bitwise
+    logits.  Nightly CI runs this with the rest of the slow suite."""
+    cfg, params = tiny
+    rng = np.random.default_rng(7)
+    lock = threading.Lock()
+
+    def flaky(lane, attempt):
+        with lock:
+            roll = rng.random()
+        if roll < 0.25:
+            raise RuntimeError("chaos: transient flake")
+
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=3, max_batch=4, max_retries=6, threaded=True,
+        fault_hook=flaky))
+    frames = _skewed_frames(144, cfg, sigma=1.5)
+    rids = _submit_burst(eng, frames, gap=0.0002)
+    s = eng.run()
+    _assert_conserved(eng, rids)
+    _assert_fifo_windows(eng)
+    assert s["served"] == len(rids)
+    single = jax.jit(lambda p, x: snn_apply(p, x, cfg, backend="batched"))
+    order = np.argsort(-frames.sum(axis=(1, 2, 3)))
+    frames_by_rid = {rid: frames[i] for rid, i in zip(rids, order)}
+    for r in eng.completed[:: max(1, len(eng.completed) // 12)]:
+        want = np.asarray(single(params, frames_by_rid[r.rid][None]).logits[0])
+        np.testing.assert_array_equal(want, r.logits)
