@@ -15,11 +15,16 @@ Three sections, each a ``name,us_per_call,derived`` row family:
                        vs the single-thread virtual-clock engine draining
                        the same skewed burst — real concurrency, measured
                        end to end (compiles excluded via pre-epoch warmup)
+  serve/forever/*      live submission (Session.serve_forever + per-request
+                       futures, requests submitted WHILE the engine runs)
+                       vs the same burst pre-submitted and drained by
+                       run() — the live path must not tax throughput/p99
 
-``--quick`` shrinks the workload and writes ``BENCH_serving.json`` (same
-name -> {us_per_call, derived} shape as BENCH_kernels.json) so every PR
-leaves a serving-trajectory data point alongside the kernel one
-(scripts/smoke.sh runs this).
+Engines are constructed exclusively through the ``repro.api`` facade
+(``ServeSpec`` -> ``Session``); ``--quick`` shrinks the workload and writes
+``BENCH_serving.json`` (same name -> {us_per_call, derived} shape as
+BENCH_kernels.json) so every PR leaves a serving-trajectory data point
+alongside the kernel one (scripts/smoke.sh runs this).
 """
 from __future__ import annotations
 
@@ -58,10 +63,12 @@ def _skewed_frames(n: int, cfg, sigma: float = 1.2, seed: int = 0):
 
 
 def _engine(params, cfg, policy, lanes, max_batch, fault_hook=None):
-    from repro.serving import EngineConfig, ServingEngine
-    return ServingEngine(params, cfg, EngineConfig(
-        backend="batched", num_lanes=lanes, max_batch=max_batch,
-        admission=policy, keep_logits=False, fault_hook=fault_hook))
+    from repro import api
+    spec = api.ServeSpec(backend="batched", num_lanes=lanes,
+                         max_batch=max_batch, admission=policy,
+                         keep_logits=False)
+    return api.Session(cfg, spec, params=params).engine(
+        fault_hook=fault_hook)
 
 
 def admission_rows(params, cfg, quick: bool):
@@ -101,12 +108,14 @@ def admission_rows(params, cfg, quick: bool):
 
 def load_rows(params, cfg, quick: bool):
     """(b) open-loop Poisson sweep: latency/FPS/queue depth/energy."""
-    from repro.serving import serve_frames
+    from repro import api
     lanes, max_batch = 2, 8
     n = 32 if quick else 128
     # capacity from a measured full-batch service time
     warm = _skewed_frames(max_batch, cfg, seed=3)
-    svc = serve_frames(params, cfg, warm, steps=2)["seconds"] / 2
+    sess = api.Session(cfg, api.ServeSpec(backend="batched", num_lanes=1),
+                       params=params)
+    svc = sess.serve(warm, steps=2)["seconds"] / 2
     capacity = lanes * max_batch / svc            # frames/s, all lanes busy
     rows = []
     for rho in ((0.5, 0.9) if quick else (0.3, 0.6, 0.9, 1.2)):
@@ -140,7 +149,6 @@ def throughput_rows(params, cfg, quick: bool):
     Interleaved pairs + median-of-ratios (the bench_kernels timing
     discipline) to cancel shared-CPU drift."""
     from repro.core import snn_apply
-    from repro.serving import EngineConfig, ServingEngine
 
     batch, steps, pairs = (8, 8, 5) if quick else (8, 16, 9)
     frames = _skewed_frames(batch, cfg, seed=7)
@@ -154,8 +162,10 @@ def throughput_rows(params, cfg, quick: bool):
             jax.block_until_ready(fwd(params, frames).logits)
         return time.perf_counter() - t0
 
-    eng = ServingEngine(params, cfg, EngineConfig(
-        backend="batched", num_lanes=1, max_batch=batch, keep_logits=False))
+    from repro import api
+    eng = api.Session(cfg, api.ServeSpec(
+        backend="batched", num_lanes=1, max_batch=batch,
+        keep_logits=False), params=params).engine()
     eng.infer_pipelined(frames, 1)                           # compile + warm
     t_sync, t_eng, ratios = [], [], []
     for _ in range(pairs):
@@ -186,16 +196,17 @@ def threaded_rows(params, cfg, quick: bool):
     warmup() for both engines).  Interleaved pairs + median-of-ratios (the
     bench_kernels timing discipline) to cancel shared-CPU drift.  Meant to
     run under THREADED_XLA_FLAGS (see ``threaded_rows_subprocess``)."""
-    from repro.serving import EngineConfig, ServingEngine
+    from repro import api
 
     lanes, max_batch = 2, 8
     n, pairs = (32, 5) if quick else (96, 7)
     frames = _skewed_frames(n, cfg, seed=11)
     order = np.argsort(-frames.sum(axis=(1, 2, 3)))   # skewed burst: heavy 1st
     buckets = (max_batch,)        # every micro-batch lands on one bucket
+    sess = api.Session(cfg, params=params)
 
     def build(threaded):
-        eng = ServingEngine(params, cfg, EngineConfig(
+        eng = sess.engine(api.ServeSpec(
             backend="batched", num_lanes=lanes, max_batch=max_batch,
             buckets=buckets, threaded=threaded, keep_logits=False))
         for i in order:
@@ -235,6 +246,59 @@ def threaded_rows(params, cfg, quick: bool):
     ]
 
 
+def forever_rows(params, cfg, quick: bool):
+    """(e) live submission (serve_forever + per-request futures) vs the same
+    heavy-first skewed burst pre-submitted and drained by run(), identical
+    ServeSpec.  Both walls exclude compilation (serve_forever warms every
+    lane cache before its clock epoch; the trace engine warms explicitly).
+    A future's logits are spot-checked bitwise against the single-shot
+    path.  Meant to run under THREADED_XLA_FLAGS with the threaded
+    section."""
+    from repro import api
+
+    lanes, max_batch = 2, 8
+    n = 32 if quick else 96
+    frames = _skewed_frames(n, cfg, seed=13)
+    order = np.argsort(-frames.sum(axis=(1, 2, 3)))
+    spec = api.ServeSpec(backend="batched", num_lanes=lanes,
+                         max_batch=max_batch, buckets=(max_batch,),
+                         threaded=True, keep_logits=False)
+    sess = api.Session(cfg, spec, params=params)
+
+    # pre-submitted trace: the whole burst is queued before run() starts
+    eng = sess.engine()
+    for i in order:
+        eng.submit(frames[i], arrival=0.0)
+    eng.warmup()
+    t0 = time.perf_counter()
+    s1 = eng.run()
+    w1 = time.perf_counter() - t0
+
+    # live: the engine is already running when requests are submitted
+    live = sess.serve_forever()               # compiles before the epoch
+    t0 = time.perf_counter()
+    handles = [live.submit(frames[i]) for i in order]
+    results = [h.result(timeout=300.0) for h in handles]
+    w2 = time.perf_counter() - t0
+    s2 = live.shutdown()
+    want = np.asarray(sess.infer(frames[order[0]][None]).logits[0])
+    parity = bool(np.array_equal(want, results[0]))
+    return [
+        {"name": "serve/forever/presubmitted",
+         "us_per_call": w1 * 1e6,
+         "derived": (f"wall_fps={n / w1:.1f};"
+                     f"p99_ms={s1['p99_latency_s']*1e3:.1f};"
+                     f"served={s1['served']:.0f};lanes={lanes};n={n}")},
+        {"name": "serve/forever/live",
+         "us_per_call": w2 * 1e6,
+         "derived": (f"wall_fps={n / w2:.1f};"
+                     f"p99_ms={s2['p99_latency_s']*1e3:.1f};"
+                     f"served={s2['served']:.0f};lanes={lanes};n={n};"
+                     f"live_vs_presubmitted={w1 / w2:.3f}x;"
+                     f"logits_parity={parity}")},
+    ]
+
+
 def threaded_rows_subprocess(quick: bool):
     """Run the threaded section in its own interpreter with XLA pinned to
     one intra-op thread (flags are frozen at first use, and this process's
@@ -261,7 +325,10 @@ def run(quick: bool = True, section: str = "all"):
     cfg = get_snn("snn-mnist")
     params = init_snn(jax.random.PRNGKey(0), cfg)
     if section == "threaded":
-        return threaded_rows(params, cfg, quick)
+        # the whole wall-clock concurrency family (threaded + live
+        # serve_forever) runs under the pinned-XLA subprocess flags
+        return (threaded_rows(params, cfg, quick)
+                + forever_rows(params, cfg, quick))
     rows = []
     rows += admission_rows(params, cfg, quick)
     rows += load_rows(params, cfg, quick)

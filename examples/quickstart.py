@@ -1,67 +1,82 @@
-"""Quickstart: train a ~100M-param qwen-family model on synthetic tokens for
-a few hundred steps with the full production stack — sharded step function,
-data pipeline with prefetch, async checkpointing, fault-tolerant loop.
+"""Quickstart: the whole Skydiver stack through the ``repro.api`` facade.
 
-    PYTHONPATH=src python examples/quickstart.py --steps 300
+Train the paper's classification SNN with surrogate gradients on the
+time-batched hot path, evaluate it, serve a batch single-shot, then go
+*live*: ``Session.serve_forever()`` accepts submissions while the
+worker-thread engine runs and returns a future per request.
+
+    PYTHONPATH=src python examples/quickstart.py --steps 150
+
+Everything is spec-driven — one ``TrainSpec`` and one ``ServeSpec`` carry
+backend / timesteps / surrogate / lane configuration end to end; no
+``backend=`` kwarg threading anywhere (docs/api.md).
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.checkpoint.checkpointer import Checkpointer
-from repro.config import get_arch, reduced
-from repro.data.pipeline import Prefetcher
-from repro.data.synthetic import token_batches
-from repro.models import lm
-from repro.runtime.fault_tolerance import LoopConfig, ResilientLoop
+from repro import api
+from repro.data.synthetic import mnist_like
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=200)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=256)
-    ap.add_argument("--ckpt-dir", default="/tmp/repro_quickstart")
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--timesteps", type=int, default=4)
+    ap.add_argument("--backend", default="batched",
+                    help="execution backend to train AND serve through")
+    ap.add_argument("--lanes", type=int, default=2)
     args = ap.parse_args()
 
-    # ~100M params: qwen family at width 512, 8 layers
-    cfg = reduced(get_arch("qwen2.5-3b"), d_model=512, d_ff=2048,
-                  vocab_size=32768)
-    cfg = dataclasses.replace(
-        cfg, num_layers=8, stages=((8, cfg.stage_list()[0][1]),))
-    n_params = cfg.param_count()
-    print(f"arch={cfg.name} params={n_params/1e6:.1f}M")
-
-    key = jax.random.PRNGKey(0)
-    state = lm.init_train_state(key, cfg)
-    step_fn = jax.jit(lm.make_train_step(cfg, peak_lr=3e-4, warmup=20,
-                                         total_steps=args.steps))
-
-    batches = Prefetcher(token_batches(cfg.vocab_size, args.batch, args.seq))
-    ckpt = Checkpointer(args.ckpt_dir, keep=2)
+    # --- train (surrogate-gradient SGD on the deployed dataflow) -----------
+    train_spec = api.TrainSpec(backend=args.backend, lr=1e-3,
+                               timesteps=args.timesteps)
+    sess = api.Session("snn-mnist", train_spec)
+    print(f"training snn-mnist via {train_spec}")
     losses = []
-
-    def on_metrics(step, m):
-        losses.append(float(m["loss"]))
-        if step % 20 == 0 or step <= 3:
-            print(f"step {step:4d} loss {losses[-1]:.4f} "
-                  f"lr {float(m['lr']):.2e} gnorm {float(m['grad_norm']):.2f}")
-
-    loop = ResilientLoop(step_fn, ckpt, LoopConfig(
-        checkpoint_every=50, max_steps=args.steps))
     t0 = time.time()
-    state = loop.run(state, batches, on_metrics=on_metrics)
-    dt = time.time() - t0
-    tok_s = args.steps * args.batch * args.seq / dt
-    print(f"\ndone: {args.steps} steps in {dt:.1f}s ({tok_s:.0f} tok/s on CPU)")
-    print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} "
-          f"(resumed_from={loop.stats.resumed_from})")
+    for i in range(args.steps):
+        x, y = mnist_like(args.batch, seed=i)
+        losses.append(sess.train_step(x, y))
+        if i % 25 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss {losses[-1]:.4f}")
+    xte, yte = mnist_like(256, seed=10_000)
+    acc = sess.evaluate(xte, yte)
+    print(f"trained {args.steps} steps in {time.time()-t0:.1f}s, "
+          f"held-out acc {acc*100:.2f}%")
     assert losses[-1] < losses[0], "training must reduce loss"
+
+    # --- single-shot serving (same session, same params) -------------------
+    frames = xte[:8]
+    s = sess.serve(frames, steps=4)
+    print(f"single-shot: {s['fps']:.1f} FPS "
+          f"({s['spikes_per_frame']:.0f} spikes/frame)")
+
+    # --- live serving: submit while the engine runs ------------------------
+    # one padding bucket (8) so the live micro-batches and the single-shot
+    # check below share the exact same executable (bit-identical logits)
+    serve_spec = api.ServeSpec(backend=args.backend,
+                               num_lanes=args.lanes, max_batch=8,
+                               buckets=(8,))
+    with sess.serve_forever(serve_spec) as live:
+        handles = [live.submit(f) for f in xte[:24]]
+        logits = [h.result(timeout=60.0) for h in handles]
+    summ = live.summary()
+    print(f"live: served {summ['served']:.0f} requests on {args.lanes} lanes "
+          f"(p50 {summ['p50_latency_s']*1e3:.1f}ms, "
+          f"p99 {summ['p99_latency_s']*1e3:.1f}ms, {summ['fps']:.1f} FPS)")
+
+    # futures resolve bit-identically to the single-shot path
+    want = np.asarray(sess.infer(xte[:8]).logits)
+    for i in range(8):
+        assert np.array_equal(want[i], logits[i]), "live != single-shot logits"
+    preds = np.argmax(np.stack(logits), axis=-1)
+    print(f"live accuracy on the submitted slice: "
+          f"{(preds == yte[:24]).mean()*100:.1f}%")
 
 
 if __name__ == "__main__":

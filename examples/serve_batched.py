@@ -17,21 +17,21 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.config import get_arch, get_snn, reduced
+from repro.config import get_arch, reduced
 from repro.models import transformer
 
 
 def serve_snn_threaded(args) -> None:
     """A/B the worker-thread engine against the single-thread virtual-clock
     engine on the same skewed burst (same code path benchmarks/serve_load.py
-    times; here sized for a quick demo)."""
+    times; here sized for a quick demo).  Specs only: one ``ServeSpec`` per
+    mode, executed by one shared ``Session``."""
     import numpy as np
 
-    from repro.core import init_snn
-    from repro.serving import EngineConfig, ServingEngine
+    from repro import api
 
-    cfg = get_snn(args.snn)
-    params = init_snn(jax.random.PRNGKey(0), cfg)
+    sess = api.Session(args.snn)
+    cfg = sess.cfg
     rng = np.random.default_rng(0)
     n = 4 * args.batch
     frames = np.clip(
@@ -39,10 +39,11 @@ def serve_snn_threaded(args) -> None:
         * rng.lognormal(-0.5, 1.2, (n, 1, 1, 1)), 0, 1).astype(np.float32)
     walls = {}
     for threaded in (False, True):
-        eng = ServingEngine(params, cfg, EngineConfig(
+        spec = api.ServeSpec(
             backend=args.backend, num_lanes=args.lanes,
             max_batch=args.batch, buckets=(args.batch,),
-            threaded=threaded, keep_logits=False))
+            threaded=threaded, keep_logits=False)
+        eng = sess.engine(spec)
         eng.warmup()
         for f in frames:
             eng.submit(f, arrival=0.0)
@@ -57,20 +58,21 @@ def serve_snn_threaded(args) -> None:
 
 def serve_snn_batched(args) -> None:
     """Serve SNN frames: A/B the seed scan vs the time-batched pipeline,
-    both through the serving engine's single-shot path (repro.serving)."""
+    both through ``Session.serve`` (the engine's single-shot path)."""
     import numpy as np
 
-    from repro.core import init_snn
-    from repro.serving import serve_frames
+    from repro import api
 
-    cfg = get_snn(args.snn)
-    params = init_snn(jax.random.PRNGKey(0), cfg)
+    sess = api.Session(args.snn)
+    cfg = sess.cfg
     frames = np.asarray(jax.random.uniform(
         jax.random.PRNGKey(1),
         (args.batch, *cfg.input_hw, cfg.input_channels)))
     results = {}
     for backend in ("ref", args.backend):
-        s = serve_frames(params, cfg, frames, backend=backend, steps=4)
+        spec_sess = api.Session(cfg, api.ServeSpec(backend=backend),
+                                params=sess.params)
+        s = spec_sess.serve(frames, steps=4)
         results[backend] = s["seconds"] / 4
         print(f"{backend:8s}: {results[backend]*1e3:6.1f} ms/batch "
               f"({s['fps']:.1f} FPS)")

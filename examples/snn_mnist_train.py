@@ -5,25 +5,21 @@ APRC magnitudes -> CBWS schedule -> cycle model -> Table-I-style row.
     PYTHONPATH=src python examples/snn_mnist_train.py --steps 300
     PYTHONPATH=src python examples/snn_mnist_train.py --backend batched
 
-``--backend`` selects the execution order that is trained (see
-core.snn_model.SNN_BACKENDS): the time-batched backends carry the same
-surrogate gradient as the seed scan and reach the same accuracy band.
+Training runs through the ``repro.api`` facade: the flags build one
+``TrainSpec`` (``--backend`` selects the execution order that is trained,
+see core.snn_model.SNN_BACKENDS — the time-batched backends carry the same
+surrogate gradient as the seed scan and reach the same accuracy band) and a
+``Session`` owns the params the Skydiver pipeline then analyzes.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.config import get_snn
-from repro.core import (SNN_BACKENDS, SURROGATE_KINDS, accuracy, aprc,
-                        build_schedule, init_snn, make_train_step,
-                        measure_balance, snn_apply)
-from repro.core.cbws import naive_partition
+from repro import api
+from repro.core import SNN_BACKENDS, SURROGATE_KINDS, aprc
 from repro.data.synthetic import mnist_like
 from repro.perfmodel import XC7Z045, simulate_network
 
@@ -41,33 +37,31 @@ def main():
                     help="surrogate-gradient kind for the spike backward")
     args = ap.parse_args()
 
-    cfg = dataclasses.replace(get_snn("snn-mnist"), timesteps=args.timesteps)
-    key = jax.random.PRNGKey(0)
-    params = init_snn(key, cfg)
+    sess = api.Session("snn-mnist", api.TrainSpec(
+        backend=args.backend, surrogate_kind=args.surrogate, lr=args.lr,
+        timesteps=args.timesteps))
+    cfg = sess.cfg
 
-    step = jax.jit(make_train_step(cfg, backend=args.backend, lr=args.lr,
-                                   surrogate_kind=args.surrogate))
-
-    mom = jax.tree.map(jnp.zeros_like, params)
     t0 = time.time()
     for i in range(args.steps):
         x, y = mnist_like(args.batch, seed=i)
-        params, mom, loss = step(params, mom, jnp.asarray(x), jnp.asarray(y))
+        loss = sess.train_step(x, y)
         if i % 25 == 0 or i == args.steps - 1:
-            print(f"step {i:4d} loss {float(loss):.4f}")
+            print(f"step {i:4d} loss {loss:.4f}")
     print(f"trained {args.steps} steps in {time.time()-t0:.1f}s "
           f"(backend={args.backend}, surrogate={args.surrogate})")
 
     # test accuracy (the paper reports 98.5% on real MNIST @ T=8)
     xte, yte = mnist_like(512, seed=10_000)
-    acc = accuracy(params, cfg, jnp.asarray(xte), jnp.asarray(yte),
-                   backend=args.backend)
+    acc = sess.evaluate(xte, yte)
     print(f"accuracy on held-out synthetic digits: {acc*100:.2f}% "
           f"(paper: 98.5% on MNIST)")
 
     # --- Skydiver pipeline on the trained net ---
+    from repro.core import build_schedule
+    params = sess.params
     b, h, w, c = xte[:64].shape
-    out = snn_apply(params, jnp.asarray(xte[:64]), cfg)
+    out = sess.infer(xte[:64])
     per_layer = [np.full((cfg.timesteps, c), float(h * w) / c)]
     for l in range(len(cfg.conv_channels) - 1):
         per_layer.append(np.asarray(out.timestep_counts[l]) / 64)

@@ -1,0 +1,46 @@
+"""``repro.api`` — the typed public facade over the Skydiver stack.
+
+One import gives everything an entry point needs:
+
+  specs     ``ExecutionSpec`` / ``TrainSpec`` / ``ServeSpec`` — frozen,
+            validated-at-construction records carrying backend, timesteps,
+            surrogate, kernel schedule, lane/bucket/admission and SLO knobs,
+            with lossless ``to_dict``/``from_dict`` (CLI + config files)
+  Session   owns params + jit caches, resolves a spec once; verbs:
+            ``infer`` / ``serve`` / ``engine`` / ``serve_forever`` /
+            ``train_step`` / ``evaluate``
+  LiveServer / RequestHandle / SLORejected
+            live serving: submissions while the engine runs, per-request
+            future handles, SLO rejection surfaced as an exception
+
+The layers underneath (``core.snn_model``, ``core.snn_train``,
+``kernels.ops``, ``serving.engine``) stay importable but are driven through
+specs here; the old kwarg-threaded helpers are deprecation shims onto this
+facade.  See docs/api.md.
+"""
+from repro.api.session import LiveServer, Session
+from repro.api.specs import (SCHEDULE_MODES, ExecutionSpec, ServeSpec,
+                             TrainSpec, spec_from_dict)
+from repro.serving.futures import RequestHandle, SLORejected
+
+__all__ = [
+    "SCHEDULE_MODES", "ExecutionSpec", "TrainSpec", "ServeSpec",
+    "spec_from_dict", "resolve_schedule",
+    "Session", "LiveServer",
+    "RequestHandle", "SLORejected",
+]
+
+
+def resolve_schedule(flag: str, backend: str):
+    """Map a CLI ``--schedule`` value onto a spec ``schedule_mode``.
+
+    ``"auto"`` picks the kernel-level APRC+CBWS schedule exactly when the
+    backend has kernel lanes to schedule (``pallas``) and no schedule
+    otherwise — the historical implicit behavior, now opt-in and spelled
+    out.  Any explicit mode passes through verbatim so the spec's
+    validation rejects invalid combos loudly (e.g. ``--schedule aprc+cbws
+    --backend batched``).
+    """
+    if flag == "auto":
+        return "aprc+cbws" if backend == "pallas" else None
+    return flag

@@ -1,0 +1,237 @@
+"""Typed execution specs — the facade's validated configuration records.
+
+One frozen dataclass per way of running a Skydiver model:
+
+  ``ExecutionSpec``  how a forward pass executes (backend, timesteps,
+                     surrogate, kernel-level CBWS schedule)
+  ``TrainSpec``      ExecutionSpec + optimizer knobs (surrogate-gradient
+                     SGD/momentum, see core.snn_train)
+  ``ServeSpec``      ExecutionSpec + the serving engine's lane/bucket/
+                     admission/SLO knobs (see serving.engine)
+
+Every spec validates at construction — an unknown backend / surrogate /
+schedule / admission name raises immediately and the error names the valid
+set, so a typo in a config file dies at parse time, not three layers down
+inside a jit trace.  ``to_dict``/``from_dict`` round-trip losslessly
+(including through JSON: tuples become lists and come back), which is what
+the CLI entry points and config files build on; ``spec_from_dict``
+dispatches on the embedded ``kind`` tag.
+
+Invalid *combinations* are rejected here too: a kernel-level CBWS
+``schedule_mode`` only exists on the ``pallas`` backend (the schedule
+permutes weights for the fused kernel's lane slices), so requesting it with
+``ref``/``batched`` is a loud error rather than a silent no-op.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+__all__ = ["SCHEDULE_MODES", "ExecutionSpec", "TrainSpec", "ServeSpec",
+           "spec_from_dict"]
+
+#: Kernel-level CBWS schedule modes (core.scheduler.build_schedule), plus
+#: None = "no schedule".  "none" is accepted as a spelled-out synonym so
+#: config files never need a JSON null.
+SCHEDULE_MODES = ("none", "cbws", "aprc+cbws")
+
+_SLO_ACTIONS = ("reject", "degrade")
+
+
+def _check_choice(name: str, value, valid) -> None:
+    if value not in valid:
+        raise ValueError(
+            f"unknown {name} {value!r}; expected one of {tuple(valid)}")
+
+
+@dataclass(frozen=True)
+class ExecutionSpec:
+    """How one forward pass of a Skydiver model executes.
+
+    ``timesteps=None`` means the model config's default T.  ``schedule_mode``
+    selects the kernel-level CBWS channel schedule and therefore requires
+    ``backend="pallas"`` (the schedule physically permutes conv weights into
+    the fused kernel's lane slices — the XLA backends have no lanes to
+    schedule).
+    """
+
+    KIND = "execution"
+
+    backend: str = "batched"
+    timesteps: Optional[int] = None
+    surrogate_kind: str = "fast_sigmoid"
+    surrogate_alpha: float = 10.0
+    schedule_mode: Optional[str] = None
+
+    def __post_init__(self):
+        from repro.core.snn_model import SNN_BACKENDS
+        from repro.core.surrogate import SURROGATE_KINDS
+        _check_choice("backend", self.backend, SNN_BACKENDS)
+        _check_choice("surrogate_kind", self.surrogate_kind, SURROGATE_KINDS)
+        if self.schedule_mode is not None:
+            _check_choice("schedule_mode", self.schedule_mode, SCHEDULE_MODES)
+        if self.resolved_schedule() is not None and self.backend != "pallas":
+            raise ValueError(
+                f"schedule_mode={self.schedule_mode!r} requires "
+                f"backend='pallas' (the CBWS schedule permutes weights into "
+                f"the fused kernel's lane slices; backend "
+                f"{self.backend!r} has no kernel lanes) — drop the schedule "
+                f"or switch the backend")
+        if self.timesteps is not None and self.timesteps < 1:
+            raise ValueError(
+                f"timesteps must be >= 1 or None (config default), "
+                f"got {self.timesteps}")
+        if self.surrogate_alpha <= 0:
+            raise ValueError(
+                f"surrogate_alpha must be > 0, got {self.surrogate_alpha}")
+
+    # -- derived -------------------------------------------------------------
+    def resolved_schedule(self) -> Optional[str]:
+        """The effective schedule mode: "none" normalizes to None."""
+        return None if self.schedule_mode in (None, "none") else self.schedule_mode
+
+    def execution_fields(self) -> Dict[str, Any]:
+        """The ExecutionSpec subset of this spec (sub-specs inherit it)."""
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(ExecutionSpec)}
+
+    # -- (de)serialization ---------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-ready dict (tuples listified) tagged with the spec kind."""
+        d = {"kind": type(self).KIND}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            d[f.name] = list(v) if isinstance(v, tuple) else v
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ExecutionSpec":
+        """Inverse of ``to_dict``.  Unknown keys are an error naming the
+        valid field set (a config-file typo must not silently vanish)."""
+        d = dict(d)
+        kind = d.pop("kind", cls.KIND)
+        if kind != cls.KIND:
+            raise ValueError(
+                f"spec dict has kind={kind!r} but {cls.__name__} expects "
+                f"{cls.KIND!r} (use spec_from_dict to dispatch on kind)")
+        fields = {f.name: f for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - set(fields))
+        if unknown:
+            raise ValueError(
+                f"unknown {cls.__name__} field(s) {unknown}; valid fields: "
+                f"{sorted(fields)}")
+        for name, v in d.items():
+            if isinstance(v, list):
+                d[name] = tuple(v)
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class TrainSpec(ExecutionSpec):
+    """ExecutionSpec + the surrogate-gradient SGD/momentum knobs that
+    ``core.snn_train.make_train_step`` consumes.  A kernel schedule is a
+    deployment-time weight permutation and has no training semantics, so
+    ``schedule_mode`` is rejected here."""
+
+    KIND = "train"
+
+    lr: float = 1e-3
+    momentum: float = 0.9
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.resolved_schedule() is not None:
+            raise ValueError(
+                "TrainSpec does not accept a schedule_mode: the CBWS kernel "
+                "schedule permutes deployed weights and is a serving-time "
+                "concept — train without it, then serve with a ServeSpec")
+        if self.lr <= 0:
+            raise ValueError(f"lr must be > 0, got {self.lr}")
+        if not 0.0 <= self.momentum < 1.0:
+            raise ValueError(
+                f"momentum must be in [0, 1), got {self.momentum}")
+
+
+@dataclass(frozen=True)
+class ServeSpec(ExecutionSpec):
+    """ExecutionSpec + the continuous-batching engine's configuration
+    (lanes, padding buckets, admission policy, retries, threading, SLO) —
+    the typed replacement for hand-building ``serving.EngineConfig``."""
+
+    KIND = "serve"
+
+    num_lanes: int = 2
+    max_batch: int = 8
+    buckets: Optional[Tuple[int, ...]] = None   # None -> DEFAULT_BUCKETS
+    admission: str = "cbws"
+    batch_aware: bool = True
+    max_retries: int = 2
+    retry_backoff_s: float = 0.0
+    straggler_z: float = 3.0
+    keep_logits: bool = True
+    threaded: bool = False
+    # admission-time SLO control (None disables)
+    latency_budget_s: Optional[float] = None
+    slo_action: str = "reject"
+    degrade_timesteps: Optional[int] = None
+    slo_seconds_per_work: Optional[float] = None
+    slo_batch_quantum_s: Optional[float] = None
+
+    def __post_init__(self):
+        super().__post_init__()
+        from repro.serving.admission import ADMISSION_POLICIES
+        _check_choice("admission policy", self.admission, ADMISSION_POLICIES)
+        _check_choice("slo_action", self.slo_action, _SLO_ACTIONS)
+        if self.num_lanes < 1:
+            raise ValueError(f"num_lanes must be >= 1, got {self.num_lanes}")
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.buckets is not None:
+            if not self.buckets or any(b < 1 for b in self.buckets):
+                raise ValueError(f"buckets must be positive, got {self.buckets}")
+            if self.max_batch > max(self.buckets):
+                raise ValueError(
+                    f"max_batch={self.max_batch} exceeds largest bucket "
+                    f"{max(self.buckets)}")
+        if self.degrade_timesteps is not None and self.degrade_timesteps < 1:
+            raise ValueError(
+                f"degrade_timesteps must be >= 1, got {self.degrade_timesteps}")
+
+    def to_engine_config(self, **overrides):
+        """Build the serving engine's internal ``EngineConfig`` — the one
+        place the spec crosses into the engine layer (``overrides`` carries
+        engine-internal test hooks like fault_hook/service_time_fn)."""
+        from repro.serving.batcher import DEFAULT_BUCKETS
+        from repro.serving.engine import EngineConfig
+        buckets = self.buckets if self.buckets is not None else DEFAULT_BUCKETS
+        kw = dict(
+            backend=self.backend, num_lanes=self.num_lanes,
+            max_batch=self.max_batch, buckets=tuple(buckets),
+            admission=self.admission, batch_aware=self.batch_aware,
+            max_retries=self.max_retries,
+            retry_backoff_s=self.retry_backoff_s,
+            straggler_z=self.straggler_z,
+            schedule_mode=self.resolved_schedule(),
+            keep_logits=self.keep_logits, threaded=self.threaded,
+            latency_budget_s=self.latency_budget_s,
+            slo_action=self.slo_action,
+            degrade_timesteps=self.degrade_timesteps,
+            slo_seconds_per_work=self.slo_seconds_per_work,
+            slo_batch_quantum_s=self.slo_batch_quantum_s,
+        )
+        kw.update(overrides)
+        return EngineConfig(**kw)
+
+
+_KINDS = {cls.KIND: cls for cls in (ExecutionSpec, TrainSpec, ServeSpec)}
+
+
+def spec_from_dict(d: Dict[str, Any]):
+    """Rebuild any spec from its ``to_dict`` form, dispatching on ``kind``."""
+    kind = d.get("kind", ExecutionSpec.KIND)
+    cls = _KINDS.get(kind)
+    if cls is None:
+        raise ValueError(
+            f"unknown spec kind {kind!r}; expected one of {sorted(_KINDS)}")
+    return cls.from_dict(d)

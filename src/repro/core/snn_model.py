@@ -93,7 +93,8 @@ def init_snn(key: jax.Array, cfg: SNNConfig) -> Dict:
 def snn_apply(params: Dict, frames: jax.Array, cfg: SNNConfig,
               *, surrogate_alpha: float = 10.0,
               surrogate_kind: str = "fast_sigmoid", backend: str = "ref",
-              schedule: Optional[Sequence] = None) -> SNNOutputs:
+              schedule: Optional[Sequence] = None,
+              spec: Optional[object] = None) -> SNNOutputs:
     """frames: (B, H, W, Cin) analog input in [0,1] (direct coding) or a
     pre-encoded spike train (T, B, H, W, Cin).
 
@@ -103,7 +104,35 @@ def snn_apply(params: Dict, frames: jax.Array, cfg: SNNConfig,
     ``core.scheduler.build_schedule`` result, built outside jit) routes the
     pallas backend through CBWS-permuted weights; outputs are reported in
     canonical channel order regardless.
+
+    ``spec`` (a ``repro.api.ExecutionSpec``, duck-typed so core never
+    imports the facade) carries backend/surrogate in one validated record
+    and overrides the individual kwargs — the facade's single resolution
+    point; the loose kwargs remain for the layers beneath it.  Spec fields
+    this function cannot apply are loud errors, never silent drops:
+    ``spec.timesteps`` must already be resolved into ``cfg`` (Session does
+    this), and a ``spec.schedule_mode`` needs the built ``schedule``
+    object passed alongside (or go through ``Session``/the engine, which
+    build it).
     """
+    if spec is not None:
+        t_spec = getattr(spec, "timesteps", None)
+        if t_spec is not None and t_spec != cfg.timesteps:
+            raise ValueError(
+                f"spec.timesteps={t_spec} conflicts with "
+                f"cfg.timesteps={cfg.timesteps}: resolve the spec's T into "
+                f"the config first (repro.api.Session does this) — "
+                f"snn_apply will not silently pick one")
+        mode = getattr(spec, "resolved_schedule", lambda: None)()
+        if mode is not None and schedule is None:
+            raise ValueError(
+                f"spec.schedule_mode={mode!r} but no built schedule was "
+                f"passed: snn_apply takes the core.scheduler.build_schedule "
+                f"result via schedule= (repro.api.Session/the serving "
+                f"engine build it) — the mode alone cannot be applied here")
+        backend = spec.backend
+        surrogate_alpha = spec.surrogate_alpha
+        surrogate_kind = spec.surrogate_kind
     if backend in ("batched", "pallas"):
         return _apply_time_batched(
             params, frames, cfg, surrogate_alpha=surrogate_alpha,

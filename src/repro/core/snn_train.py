@@ -1,11 +1,12 @@
 """Shared surrogate-gradient training step for the paper's SNNs.
 
-One builder used by ``examples/snn_mnist_train.py``, the production
-launcher (``python -m repro.launch.train --snn snn-mnist --backend
-batched``) and the ``train_step`` rows of ``benchmarks/bench_kernels.py``
-— so every entry point trains through the same loss/step function and the
-``backend`` switch (``core.snn_model.SNN_BACKENDS``) selects the execution
-order that is actually deployed:
+One builder used by the ``repro.api`` facade (``Session.train_step``), the
+production launcher (``python -m repro.launch.train --snn snn-mnist
+--backend batched``) and the ``train_step`` rows of
+``benchmarks/bench_kernels.py`` — so every entry point trains through the
+same loss/step function and the backend switch
+(``core.snn_model.SNN_BACKENDS``) selects the execution order that is
+actually deployed:
 
   * ``"ref"``      — seed timestep-outer scan (the original training path)
   * ``"batched"``  — time-batched layer pipeline (the serving hot path)
@@ -14,10 +15,15 @@ order that is actually deployed:
 The paper trains offline and deploys the balanced accelerator; FireFly v2
 (arXiv 2309.16158) argues the deployed dataflow should be the trained one
 — training on the time-batched backends closes that gap here.
+
+Configuration arrives as a ``repro.api.TrainSpec`` (``spec=``, duck-typed
+so core never imports the facade).  The legacy loose kwargs
+(``backend=``/``surrogate_*``/``lr=``) still work but are deprecation
+shims: the first explicit use warns once per process.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,11 +33,56 @@ from repro.core.snn_model import snn_apply
 
 __all__ = ["make_loss_fn", "make_train_step", "accuracy"]
 
+_UNSET = object()                     # legacy-kwarg sentinel (shim detection)
 
-def make_loss_fn(cfg: SNNConfig, *, backend: str = "ref",
-                 surrogate_alpha: float = 10.0,
-                 surrogate_kind: str = "fast_sigmoid") -> Callable:
-    """Cross-entropy on the readout logits of the selected backend."""
+
+def _resolve(spec, legacy: Dict, defaults: Dict, what: str,
+             cfg: SNNConfig) -> Dict:
+    """Merge a TrainSpec-like ``spec`` with explicitly-passed legacy kwargs.
+
+    The spec wins field-by-field; any explicit legacy kwarg without a spec
+    is the old signature and warns once (the facade's deprecation shim).
+    Spec fields this layer cannot apply are loud errors, not silent drops:
+    ``spec.timesteps`` must already be resolved into ``cfg`` (Session does
+    this) and a kernel schedule has no training semantics.
+    """
+    explicit = {k: v for k, v in legacy.items() if v is not _UNSET}
+    if spec is not None:
+        clash = sorted(set(explicit) & set(defaults))
+        if clash:
+            raise ValueError(
+                f"{what}: pass configuration through spec= OR the legacy "
+                f"kwargs, not both (got spec and {clash})")
+        t_spec = getattr(spec, "timesteps", None)
+        if t_spec is not None and t_spec != cfg.timesteps:
+            raise ValueError(
+                f"{what}: spec.timesteps={t_spec} conflicts with "
+                f"cfg.timesteps={cfg.timesteps}; resolve the spec's T into "
+                f"the config first (repro.api.Session does this)")
+        if getattr(spec, "resolved_schedule", lambda: None)() is not None:
+            raise ValueError(
+                f"{what}: spec carries a kernel schedule_mode, which has "
+                f"no training semantics (TrainSpec rejects it; pass an "
+                f"ExecutionSpec without one)")
+        out = dict(defaults)
+        for k in defaults:
+            if hasattr(spec, k):
+                out[k] = getattr(spec, k)
+        return out
+    if explicit:
+        from repro.api._compat import warn_deprecated_once
+        warn_deprecated_once(
+            what,
+            f"{what}(..., {', '.join(sorted(explicit))}=...) is deprecated; "
+            f"pass a repro.api.TrainSpec via spec= (or use "
+            f"repro.api.Session.train_step)")
+    out = dict(defaults)
+    out.update(explicit)
+    return out
+
+
+def _build_loss_fn(cfg: SNNConfig, backend: str, surrogate_alpha: float,
+                   surrogate_kind: str) -> Callable:
     def loss_fn(params: Dict, x: jax.Array, y: jax.Array) -> jax.Array:
         out = snn_apply(params, x, cfg, backend=backend,
                         surrogate_alpha=surrogate_alpha,
@@ -43,24 +94,44 @@ def make_loss_fn(cfg: SNNConfig, *, backend: str = "ref",
     return loss_fn
 
 
-def make_train_step(cfg: SNNConfig, *, backend: str = "ref", lr: float = 1e-3,
-                    momentum: float = 0.9, surrogate_alpha: float = 10.0,
-                    surrogate_kind: str = "fast_sigmoid") -> Callable:
+def make_loss_fn(cfg: SNNConfig, *, backend=_UNSET, surrogate_alpha=_UNSET,
+                 surrogate_kind=_UNSET, spec: Optional[object] = None,
+                 ) -> Callable:
+    """Cross-entropy on the readout logits of the selected backend."""
+    r = _resolve(spec, dict(backend=backend, surrogate_alpha=surrogate_alpha,
+                            surrogate_kind=surrogate_kind),
+                 dict(backend="ref", surrogate_alpha=10.0,
+                      surrogate_kind="fast_sigmoid"),
+                 "core.snn_train.make_loss_fn", cfg)
+    return _build_loss_fn(cfg, r["backend"], r["surrogate_alpha"],
+                          r["surrogate_kind"])
+
+
+def make_train_step(cfg: SNNConfig, *, backend=_UNSET, lr=_UNSET,
+                    momentum=_UNSET, surrogate_alpha=_UNSET,
+                    surrogate_kind=_UNSET, spec: Optional[object] = None,
+                    ) -> Callable:
     """SGD+momentum step: ``(params, mom, x, y) -> (params, mom, loss)``.
 
     Jit-friendly (wrap with ``jax.jit`` at the call site); gradients flow
     through the chosen backend's surrogate path — batched/pallas train to
     the same accuracy band as the ref scan (tests/test_snn_backends.py).
     """
-    loss_fn = make_loss_fn(cfg, backend=backend,
-                           surrogate_alpha=surrogate_alpha,
-                           surrogate_kind=surrogate_kind)
+    r = _resolve(spec, dict(backend=backend, lr=lr, momentum=momentum,
+                            surrogate_alpha=surrogate_alpha,
+                            surrogate_kind=surrogate_kind),
+                 dict(backend="ref", lr=1e-3, momentum=0.9,
+                      surrogate_alpha=10.0, surrogate_kind="fast_sigmoid"),
+                 "core.snn_train.make_train_step", cfg)
+    loss_fn = _build_loss_fn(cfg, r["backend"], r["surrogate_alpha"],
+                             r["surrogate_kind"])
+    lr_v, mom_v = r["lr"], r["momentum"]
 
     def step(params: Dict, mom: Dict, x: jax.Array, y: jax.Array
              ) -> Tuple[Dict, Dict, jax.Array]:
         loss, g = jax.value_and_grad(loss_fn)(params, x, y)
-        mom = jax.tree.map(lambda m, gg: momentum * m + gg, mom, g)
-        params = jax.tree.map(lambda w, m: w - lr * m, params, mom)
+        mom = jax.tree.map(lambda m, gg: mom_v * m + gg, mom, g)
+        params = jax.tree.map(lambda w, m: w - lr_v * m, params, mom)
         return params, mom, loss
 
     return step

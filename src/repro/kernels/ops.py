@@ -126,7 +126,7 @@ def spiking_conv_lif(
     *, v_th: float = 1.0, aprc: bool = True, block_rows: int = 8,
     num_groups: int = 4, interpret: Optional[bool] = None,
     surrogate_alpha: float = 10.0, surrogate_kind: str = "fast_sigmoid",
-    bwd: Optional[str] = None,
+    bwd: Optional[str] = None, spec: Optional[object] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Fused conv+LIF over a whole spike train (see kernels.spiking_conv_lif).
 
@@ -138,7 +138,36 @@ def spiking_conv_lif(
     (``surrogate_kind`` in core.surrogate.SURROGATE_KINDS, scaled by
     ``surrogate_alpha``) through reverse-time BPTT — the same gradient the
     ``backend="ref"`` scan computes.
+
+    ``spec`` (a ``repro.api.ExecutionSpec``, duck-typed) overrides the
+    surrogate kwargs — the facade threads one validated record all the way
+    into the kernel dispatch instead of re-plumbing loose kwargs per layer.
+    Spec fields this op cannot apply are loud errors, never silent drops:
+    it IS the pallas kernel (``spec.backend`` must be "pallas"), T comes
+    from the spike train's leading axis, and a schedule is applied by
+    permuting the weights upstream (core.scheduler), not here.
     """
+    if spec is not None:
+        spec_backend = getattr(spec, "backend", None)
+        if spec_backend is not None and spec_backend != "pallas":
+            raise ValueError(
+                f"spec.backend={spec_backend!r} cannot be applied by "
+                f"ops.spiking_conv_lif — this op IS the pallas kernel; "
+                f"route backend selection through snn_apply/Session")
+        t_spec = getattr(spec, "timesteps", None)
+        if t_spec is not None and t_spec != spikes.shape[0]:
+            raise ValueError(
+                f"spec.timesteps={t_spec} conflicts with the spike train's "
+                f"T={spikes.shape[0]} — the kernel runs the train it is "
+                f"given; resolve T upstream (repro.api.Session does this)")
+        if getattr(spec, "resolved_schedule", lambda: None)() is not None:
+            raise ValueError(
+                "spec.schedule_mode cannot be applied by ops.spiking_conv_lif"
+                " — the CBWS schedule permutes weights upstream "
+                "(core.scheduler.permute_conv_params); pass pre-permuted "
+                "weights or go through snn_apply with schedule=")
+        surrogate_alpha = getattr(spec, "surrogate_alpha", surrogate_alpha)
+        surrogate_kind = getattr(spec, "surrogate_kind", surrogate_kind)
     if interpret is None:
         interpret = default_interpret()
     if bwd is None:

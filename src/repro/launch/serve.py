@@ -9,17 +9,20 @@ SNN frame inference through the selectable kernel backend.
         --engine --lanes 2 --batch 8
     PYTHONPATH=src python -m repro.launch.serve --snn snn-mnist \
         --engine --threaded --lanes 2 --slo-ms 50 --slo-action degrade
+    PYTHONPATH=src python -m repro.launch.serve --snn snn-mnist \
+        --forever --lanes 2      # live submission + per-request futures
 
 Production path: the same prefill/decode step functions are lowered with the
 `serve`/`serve_ep2d` profiles on the pod mesh (see launch/cells.py); here
-they run reduced on CPU.  The SNN path serves the paper's networks with the
-time-batched layer pipeline ("batched"), the fused Pallas kernels
-("pallas"), or the seed scan ("ref") — see core.snn_model.  Both SNN modes
-go through ``repro.serving``: the default is the engine's single-shot path
-(fixed batch, per-step sync); ``--engine`` runs the full continuous-batching
-loop (FIFO windows, CBWS-balanced micro-batch lanes, straggler-aware
-placement) on a synthetic Poisson arrival trace, ``--threaded`` promotes the
-lanes to real worker threads on the wall clock, and ``--slo-ms`` adds
+they run reduced on CPU.  The SNN path runs entirely through the
+``repro.api`` facade (docs/api.md): the CLI flags build one validated
+``ServeSpec`` (backend / ``--schedule`` kernel schedule / lanes / SLO) and a
+``Session`` executes it.  The default is the single-shot path (fixed batch,
+per-step sync); ``--engine`` replays a synthetic Poisson trace through the
+full continuous-batching loop (FIFO windows, CBWS-balanced micro-batch
+lanes, straggler-aware placement), ``--threaded`` promotes the lanes to
+real worker threads on the wall clock, ``--forever`` demos live submission
+(``Session.serve_forever()`` + per-request futures), and ``--slo-ms`` adds
 admission-time latency-budget control (reject or degrade, ``--slo-action``)
 — see docs/serving.md.
 """
@@ -32,29 +35,48 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import get_arch, get_snn, reduced
+from repro.config import get_arch, reduced
 from repro.models import transformer
 
 
 def serve_snn(args) -> None:
-    from repro.core import init_snn
-    from repro.serving import EngineConfig, ServingEngine, serve_frames
+    from repro import api
 
-    cfg = get_snn(args.snn)
-    params = init_snn(jax.random.PRNGKey(0), cfg)
-    schedule_mode = "aprc+cbws" if args.backend == "pallas" else None
+    spec = api.ServeSpec(
+        backend=args.backend,
+        schedule_mode=api.resolve_schedule(args.schedule, args.backend),
+        num_lanes=args.lanes, max_batch=args.batch,
+        threaded=args.threaded,
+        latency_budget_s=(args.slo_ms / 1e3 if args.slo_ms else None),
+        slo_action=args.slo_action)
+    sess = api.Session(args.snn, spec)
+    cfg = sess.cfg
     frames = np.asarray(jax.random.uniform(
         jax.random.PRNGKey(1),
         (args.batch, *cfg.input_hw, cfg.input_channels)))
 
+    if args.forever:
+        # live serving: submissions while the engine runs, per-request
+        # futures (Session.serve_forever on the threaded engine)
+        n = args.steps * args.batch
+        live = sess.serve_forever()
+        handles = [live.submit(frames[i % args.batch]) for i in range(n)]
+        # exception() instead of result(): with --slo-ms an over-budget
+        # submission resolves to SLORejected, which is an outcome to count
+        # here, not a crash
+        outcomes = [h.exception(timeout=60.0) for h in handles]
+        s = live.shutdown()
+        print(f"engine[forever] served {s['served']:.0f} frames live "
+              f"({s['fps']:.1f} FPS, backend={args.backend}, "
+              f"lanes={args.lanes}, p50={s['p50_latency_s']*1e3:.1f}ms, "
+              f"p99={s['p99_latency_s']*1e3:.1f}ms, "
+              f"futures_resolved={sum(e is None for e in outcomes)}, "
+              f"futures_rejected={sum(e is not None for e in outcomes)})")
+        return
+
     if args.engine:
         # continuous-batching engine on a synthetic open-loop arrival trace
-        eng = ServingEngine(params, cfg, EngineConfig(
-            backend=args.backend, num_lanes=args.lanes,
-            max_batch=args.batch, schedule_mode=schedule_mode,
-            threaded=args.threaded,
-            latency_budget_s=(args.slo_ms / 1e3 if args.slo_ms else None),
-            slo_action=args.slo_action))
+        eng = sess.engine()
         rng = np.random.default_rng(0)
         n = args.steps * args.batch
         gaps = rng.exponential(1e-3, n)
@@ -71,8 +93,7 @@ def serve_snn(args) -> None:
               f"rejected={s['rejected']:.0f}, degraded={s['degraded']:.0f})")
         return
 
-    s = serve_frames(params, cfg, frames, backend=args.backend,
-                     steps=args.steps, schedule_mode=schedule_mode)
+    s = sess.serve(frames, steps=args.steps)
     print(f"served {s['frames']} frames in {s['seconds']:.2f}s "
           f"({s['fps']:.1f} FPS, backend={args.backend}, "
           f"T={cfg.timesteps}, total_spikes/frame={s['spikes_per_frame']:.0f})")
@@ -86,11 +107,21 @@ def main():
     ap.add_argument("--backend", default="batched",
                     choices=("ref", "batched", "pallas"),
                     help="SNN execution backend (see core.snn_model)")
+    ap.add_argument("--schedule", default="auto",
+                    choices=("auto", "none", "cbws", "aprc+cbws"),
+                    help="kernel-level CBWS channel schedule (pallas "
+                         "backend only; 'auto' = aprc+cbws on pallas, none "
+                         "otherwise — an explicit mode on a non-pallas "
+                         "backend is a loud ServeSpec error)")
     ap.add_argument("--steps", type=int, default=8,
                     help="SNN serving iterations")
     ap.add_argument("--engine", action="store_true",
                     help="serve through the continuous-batching engine "
                          "(repro.serving) on a synthetic Poisson trace")
+    ap.add_argument("--forever", action="store_true",
+                    help="live serving demo: Session.serve_forever() with "
+                         "submissions while the engine runs (implies "
+                         "threaded lanes)")
     ap.add_argument("--lanes", type=int, default=2,
                     help="engine micro-batch lanes (with --engine)")
     ap.add_argument("--threaded", action="store_true",

@@ -11,9 +11,11 @@ production mesh — the step function, shardings, checkpointing and the
 fault-tolerant loop are identical code paths (launch/cells.py builds them).
 
 The ``--snn`` path trains the paper's spiking networks with surrogate
-gradients through the selectable execution backend (``--backend
-ref|batched|pallas``, see core.snn_model) — the same hot path the serving
-launcher deploys, so the trained dataflow is the deployed one.
+gradients through the ``repro.api`` facade: the CLI flags build one
+validated ``TrainSpec`` (backend / surrogate / lr / timesteps) and a
+``Session`` owns the params and the jitted step — the same hot path the
+serving launcher deploys, so the trained dataflow is the deployed one
+(docs/api.md).
 """
 from __future__ import annotations
 
@@ -21,10 +23,9 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.config import get_arch, get_snn, reduced
+from repro.config import get_arch, reduced
 from repro.data.pipeline import Prefetcher
 from repro.data.synthetic import token_batches
 from repro.models import lm
@@ -34,29 +35,22 @@ from repro.sharding.context import ShardingCtx, make_rules, use_sharding
 
 
 def train_snn(args) -> None:
-    import dataclasses
-
-    from repro.core import accuracy, init_snn, make_train_step
+    from repro import api
     from repro.data.synthetic import mnist_like
 
-    cfg = get_snn(args.snn)
-    if args.timesteps:
-        cfg = dataclasses.replace(cfg, timesteps=args.timesteps)
-    params = init_snn(jax.random.PRNGKey(0), cfg)
-    step = jax.jit(make_train_step(cfg, backend=args.backend, lr=args.lr,
-                                   surrogate_kind=args.surrogate))
-    mom = jax.tree.map(jnp.zeros_like, params)
+    spec = api.TrainSpec(
+        backend=args.backend, surrogate_kind=args.surrogate, lr=args.lr,
+        timesteps=args.timesteps or None)
+    sess = api.Session(args.snn, spec)
     t0 = time.perf_counter()
     for i in range(args.steps):
         x, y = mnist_like(args.batch, seed=i)
-        params, mom, loss = step(params, mom, jnp.asarray(x), jnp.asarray(y))
+        loss = sess.train_step(x, y)
         if i % 10 == 0 or i == args.steps - 1:
-            print(f"step {i:5d} loss {float(loss):.4f} "
-                  f"backend={args.backend}")
+            print(f"step {i:5d} loss {loss:.4f} backend={args.backend}")
     dt = time.perf_counter() - t0
     xte, yte = mnist_like(256, seed=10_000)
-    acc = accuracy(params, cfg, jnp.asarray(xte), jnp.asarray(yte),
-                   backend=args.backend)
+    acc = sess.evaluate(xte, yte)
     print(f"finished {args.steps} SNN steps in {dt:.1f}s "
           f"(backend={args.backend}, held-out acc {acc*100:.2f}%)")
 

@@ -25,6 +25,7 @@ from repro.serving.batcher import (DEFAULT_BUCKETS, DynamicBatcher, JitCache,
 from repro.serving.clock import Clock, VirtualClock, WallClock
 from repro.serving.dispatch import LaneDispatcher, LaneFailed
 from repro.serving.engine import EngineConfig, ServingEngine, serve_frames
+from repro.serving.futures import RequestHandle, SLORejected
 from repro.serving.metrics import ServingMetrics, energy_per_image
 from repro.serving.request import Request
 
@@ -34,6 +35,7 @@ __all__ = [
     "Clock", "VirtualClock", "WallClock",
     "LaneDispatcher", "LaneFailed",
     "EngineConfig", "ServingEngine", "serve_frames",
+    "RequestHandle", "SLORejected",
     "ServingMetrics", "energy_per_image",
     "Request",
 ]

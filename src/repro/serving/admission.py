@@ -254,15 +254,22 @@ def slo_filter(window: Sequence[Request], *, now: float, budget_s: float,
                action: str = "reject",
                degrade_timesteps: Optional[int] = None,
                backlog_work: float = 0.0,
+               batch_quantum_s: float = 0.0,
                ) -> Tuple[List[Request], List[Request], int]:
     """Admission-time SLO control over one FIFO window.
 
     Each request's predicted latency = time already waited + predicted queue
-    delay, where the delay prices the cumulative predicted work of every
-    admitted request up to and including it — on top of ``backlog_work``
-    already in flight on busy lanes — spread over the lanes, at the
-    measured ``seconds_per_work`` rate (the straggler monitor's fleet-mean
-    work-normalized service time).
+    delay, where the delay prices ``batch_quantum_s`` (the measured fixed
+    per-micro-batch cost: dispatch + padding + launch overhead, paid once
+    per batch regardless of its work) plus the cumulative predicted work of
+    every admitted request up to and including it — on top of
+    ``backlog_work`` already in flight on busy lanes — spread over the
+    lanes, at the *marginal* ``seconds_per_work`` rate.  Splitting the
+    quantum out matters under tight budgets: the quantum-free model folded
+    the fixed cost into the rate, so a window of n requests was priced for
+    ~n quanta instead of one and the admitter rejected work that would have
+    met its budget (ServingEngine._delay_model fits both terms from
+    measured micro-batches).
 
     A request that already burned a failed execution (``r.retries > 0``,
     i.e. its lane died and the micro-batch was re-queued) was admitted once
@@ -300,7 +307,8 @@ def slo_filter(window: Sequence[Request], *, now: float, budget_s: float,
             cum_work += eff
             continue
         waited = max(0.0, now - r.arrival)
-        delay = (cum_work + eff) * seconds_per_work / lanes
+        delay = (batch_quantum_s
+                 + (cum_work + eff) * seconds_per_work / lanes)
         if waited + delay <= budget_s:
             admitted.append(r)
             cum_work += eff

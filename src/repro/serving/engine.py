@@ -28,12 +28,25 @@ whose predicted latency exceeds the budget (``admission.slo_filter``).
   submit()          frames + arrival times -> FIFO queue, with the request's
                     APRC-predicted workload attached at admission
   run()             drain the queue (virtual or threaded, see above)
+  serve_forever()   live mode (threaded only): start the scheduler in the
+                    background and accept ``submit_live()`` while running —
+                    each live submission returns a future-style
+                    ``RequestHandle`` (serving.futures) that resolves with
+                    the request's logits, fails with ``SLORejected`` at
+                    admission, or fails with the engine error if all lanes
+                    die.  ``shutdown()`` refuses new submissions, drains the
+                    queue and every in-flight micro-batch, joins the
+                    scheduler, and returns the metrics summary.
   infer()           single-shot mode: one batch through the same jit cache —
                     the shared code path behind launch/serve.py and
                     examples/serve_batched.py
   infer_pipelined() throughput mode: N batches dispatched without per-batch
                     host sync (the continuous-batching win over the old
                     synchronous loop, which blocked on every batch)
+
+The public way to construct and drive this engine is the ``repro.api``
+facade (``ServeSpec`` -> ``Session.engine()`` / ``Session.serve_forever()``);
+``EngineConfig`` is the internal record a ``ServeSpec`` lowers onto.
 
 Lane failures (injected via ``EngineConfig.fault_hook`` or real) burn the
 retry budget in ``runtime.fault_tolerance``; a dead lane's micro-batch is
@@ -68,6 +81,7 @@ from repro.serving.batcher import (DEFAULT_BUCKETS, DynamicBatcher, JitCache,
                                    bucket_for, pad_frames)
 from repro.serving.clock import VirtualClock, WallClock
 from repro.serving.dispatch import LaneDispatcher, LaneFailed
+from repro.serving.futures import RequestHandle, SLORejected
 from repro.serving.metrics import ServingMetrics, energy_per_image
 from repro.serving.request import Request
 
@@ -100,6 +114,13 @@ class EngineConfig:
     # prior s-per-unit-workload for the delay predictor; None learns it from
     # the straggler monitor's measured EWMAs (admit-all until first sample)
     slo_seconds_per_work: Optional[float] = None
+    # per-batch time quantum (intercept) of the delay model: dispatch + pad
+    # + launch overhead that every micro-batch pays regardless of its work.
+    # None learns it by fitting svc = quantum + rate * work over measured
+    # micro-batches; splitting the quantum out of the rate un-inflates the
+    # marginal seconds-per-work, so tight budgets admit more (the historical
+    # quantum-free model priced the fixed cost once per *request*)
+    slo_batch_quantum_s: Optional[float] = None
     # test/chaos hooks
     fault_hook: Optional[Callable[[int, int], None]] = None
     # maps (lane, measured wall s) -> virtual service s; tests inject
@@ -149,18 +170,136 @@ class ServingEngine:
                            else max(1, cfg.timesteps // 2))
         self._lane_caches: Optional[List[JitCache]] = None
         self._lane_compiles = 0           # threaded per-lane cache compiles
+        # measured (predicted work, service s) per micro-batch — the delay
+        # model's fit set (quantum + marginal rate, see _delay_model)
+        self._svc_samples: deque = deque(maxlen=256)
+        # live serving (serve_forever) state
+        self._futures: Dict[int, RequestHandle] = {}
+        self._futures_lock = threading.Lock()
+        self._rid_lock = threading.Lock()
+        self._submit_lock = threading.Lock()
+        self._completions: Optional["queue_mod.Queue"] = None
+        self._stop: Optional[threading.Event] = None
+        self._live_clock: Optional[WallClock] = None
+        self._live_thread: Optional[threading.Thread] = None
+        self._live_error: Optional[BaseException] = None
+        self._live_summary: Optional[Dict[str, float]] = None
 
     # -- submission ---------------------------------------------------------
-    def submit(self, frame: np.ndarray, arrival: float = 0.0) -> int:
+    def _make_request(self, frame: np.ndarray, arrival: float) -> Request:
         frame = np.asarray(frame, dtype=np.float32)
-        req = Request(
-            rid=self._next_rid, frame=frame, arrival=float(arrival),
+        with self._rid_lock:
+            rid = self._next_rid
+            self._next_rid += 1
+        return Request(
+            rid=rid, frame=frame, arrival=float(arrival),
             workload=admission.predict_workload(frame, self._chan_w,
                                                 self.cfg.timesteps),
             events=float(self.cfg.timesteps) * float(frame.sum()))
-        self._next_rid += 1
+
+    def submit(self, frame: np.ndarray, arrival: float = 0.0) -> int:
+        if self._live_thread is not None:
+            # the trace list is snapshotted once when the scheduler starts —
+            # appending now would silently black-hole the request
+            raise RuntimeError(
+                "engine is live (serve_forever running): use submit_live() "
+                "— trace submit() is only read when run()/serve_forever() "
+                "starts")
+        req = self._make_request(frame, arrival)
         self._submitted.append(req)
         return req.rid
+
+    def submit_live(self, frame: np.ndarray) -> RequestHandle:
+        """Submit one frame to a *running* engine (``serve_forever``).
+
+        Returns a future-style ``RequestHandle``: ``result(timeout)`` blocks
+        for the logits, raises ``SLORejected`` if admission dropped the
+        request, or re-raises the engine failure if serving died.  Arrival
+        is stamped off the live wall clock; thread-safe (any client thread
+        may call this concurrently).
+        """
+        if self._live_thread is None or self._stop is None:
+            raise RuntimeError(
+                "engine is not live — call serve_forever() first "
+                "(run() drains a pre-submitted trace instead)")
+        if self._live_error is not None:
+            raise RuntimeError("live serving died") from self._live_error
+        with self._submit_lock:
+            # the stop check and the queue push are atomic w.r.t. shutdown()
+            # and the scheduler's death path: a request admitted here is
+            # guaranteed to be drained or failed, never silently dropped
+            if self._live_error is not None:
+                raise RuntimeError(
+                    "live serving died") from self._live_error
+            if self._stop.is_set():
+                raise RuntimeError(
+                    "engine is shutting down; no new submissions")
+            req = self._make_request(frame, self._live_clock.now())
+            handle = RequestHandle(req)
+            with self._futures_lock:
+                self._futures[req.rid] = handle
+            self.batcher.push(req)
+        self._completions.put(("wake",))      # unpark the scheduler
+        return handle
+
+    def update_params(self, params: Dict) -> None:
+        """Swap the served params in place (same pytree structure).
+
+        Compiled executables are params-*independent* — every cache passes
+        params as a traced jit argument — so no recompilation is needed;
+        only the params-derived caches (zero-frame pad profiles, channel
+        weights for APRC admission) must refresh.  The one exception is a
+        CBWS kernel schedule (``schedule_mode``): the permutation is baked
+        into the executables as constants and is itself derived from the
+        params, so scheduled engines rebuild it AND drop their compiled
+        entries (they recompile on next use with the fresh schedule).  Not
+        allowed on a live engine: in-flight micro-batches would mix
+        parameter versions.
+        """
+        if self._live_thread is not None:
+            raise RuntimeError(
+                "cannot update params while serve_forever is running")
+        caches = [self.cache] + (self._lane_caches or [])
+        if self.ecfg.schedule_mode is not None:
+            from repro.core import build_schedule
+            self._schedule = build_schedule(params, self.cfg,
+                                            self.ecfg.schedule_mode)
+            for c in caches:
+                c.schedule = self._schedule
+                c._fns.clear()            # old schedule is baked in
+        self.params = params
+        for c in caches:
+            c.params = params
+        self._pad_profiles.clear()
+        self._chan_w = admission.layer0_channel_weights(params)
+
+    # -- future resolution ---------------------------------------------------
+    def _pop_handle(self, rid: int) -> Optional[RequestHandle]:
+        with self._futures_lock:
+            return self._futures.pop(rid, None)
+
+    def _finish_request(self, r: Request, logits_row: np.ndarray) -> None:
+        """A request completed: record it and resolve its live handle (if
+        any) — each handle resolves exactly once (conservation)."""
+        self.completed.append(r)
+        h = self._pop_handle(r.rid)
+        if h is not None:
+            h._resolve(np.array(logits_row, copy=True))
+
+    def _fail_rejected(self, rejected: Sequence[Request]) -> None:
+        for r in rejected:
+            h = self._pop_handle(r.rid)
+            if h is not None:
+                h._fail(SLORejected(r))
+
+    def _fail_outstanding(self, exc: BaseException) -> None:
+        """Engine-fatal: every unresolved live handle fails with the cause
+        (clients blocked in result() must not hang forever)."""
+        with self._futures_lock:
+            handles = list(self._futures.values())
+            self._futures.clear()
+        for h in handles:
+            h._fail(exc)
 
     # -- execution ----------------------------------------------------------
     def _eff_work(self, r: Request) -> float:
@@ -227,10 +366,42 @@ class ServingEngine:
         return [a.copy() for a in self._tc_accum]
 
     # -- admission ----------------------------------------------------------
-    def _seconds_per_work(self) -> Optional[float]:
-        if self.ecfg.slo_seconds_per_work is not None:
-            return self.ecfg.slo_seconds_per_work
-        return self.dispatcher.monitor.seconds_per_work()
+    def _fit_delay_model(self) -> Optional[Tuple[float, float]]:
+        """Least-squares fit ``svc = quantum + rate * work`` over the
+        recorded micro-batch samples; returns (quantum, rate) or None when
+        the samples can't identify a positive marginal rate (fewer than two
+        distinct workloads)."""
+        if len(self._svc_samples) < 2:
+            return None
+        w = np.asarray([s[0] for s in self._svc_samples], dtype=np.float64)
+        t = np.asarray([s[1] for s in self._svc_samples], dtype=np.float64)
+        if float(np.ptp(w)) <= 0.0:
+            return None
+        rate, quantum = np.polyfit(w, t, 1)
+        if rate <= 0.0:
+            return None
+        return (max(float(quantum), 0.0), float(rate))
+
+    def _delay_model(self) -> Optional[Tuple[float, float]]:
+        """(per-batch quantum s, marginal seconds-per-work) for the SLO
+        delay predictor.  Explicit EngineConfig priors win; otherwise the
+        fitted model (the intercept is the fixed dispatch/pad/launch cost a
+        micro-batch pays regardless of its work); with too few samples fall
+        back to the straggler monitor's mean rate at quantum 0 — the
+        historical conservative pricing.  None = no estimate yet
+        (admit everything rather than reject blindly)."""
+        ecfg = self.ecfg
+        quantum = ecfg.slo_batch_quantum_s
+        if ecfg.slo_seconds_per_work is not None:
+            return (quantum if quantum is not None else 0.0,
+                    ecfg.slo_seconds_per_work)
+        fit = self._fit_delay_model()
+        if fit is not None:
+            return (quantum if quantum is not None else fit[0], fit[1])
+        spw = self.dispatcher.monitor.seconds_per_work()
+        if spw is None:
+            return None
+        return (quantum if quantum is not None else 0.0, spw)
 
     def _admit_window(self, window: List[Request], num_idle: int, now: float,
                       backlog_work: float = 0.0,
@@ -250,11 +421,12 @@ class ServingEngine:
         t_full = self.cfg.timesteps
         ecfg = self.ecfg
         if ecfg.latency_budget_s is not None:
-            spw = self._seconds_per_work()
-            if spw is not None:
+            model = self._delay_model()
+            if model is not None:
+                quantum, spw = model
                 window, rejected, degraded = admission.slo_filter(
                     window, now=now, budget_s=ecfg.latency_budget_s,
-                    seconds_per_work=spw,
+                    seconds_per_work=spw, batch_quantum_s=quantum,
                     num_lanes=len(self.dispatcher.alive()),
                     full_timesteps=t_full, action=ecfg.slo_action,
                     degrade_timesteps=self._degrade_t,
@@ -262,6 +434,7 @@ class ServingEngine:
                 self.metrics.rejected += len(rejected)
                 self.metrics.degraded += degraded
                 self.rejected.extend(rejected)
+                self._fail_rejected(rejected)
         if not window:
             return [], 1.0
 
@@ -393,10 +566,11 @@ class ServingEngine:
                     if self.ecfg.keep_logits:
                         r.logits = logits[j]
                     self.metrics.record_completion(r.arrival, r.finish)
-                    self.completed.append(r)
+                    self._finish_request(r, logits[j])
                 work = sum(self._eff_work(r) for r in grp)
                 if work > 0:
                     norm_times[lane] = svc / work
+                    self._svc_samples.append((work, svc))
                 lane_wall.append(svc)
                 executed.append(grp)
             multi = len(executed) >= 2      # 1-lane rounds: balance is vacuous
@@ -489,14 +663,21 @@ class ServingEngine:
                              for _ in range(ecfg.num_lanes)]
         return self._lane_caches
 
-    def _run_threaded(self) -> Dict[str, float]:
+    def _run_threaded(self, live: bool = False) -> Dict[str, float]:
         ecfg = self.ecfg
         pending = deque(sorted(self._submitted,
                                key=lambda r: (r.arrival, r.rid)))
         self._submitted = []
         caches = self._ensure_lane_caches()
-        clock = WallClock()
-        completions: "queue_mod.Queue" = queue_mod.Queue()
+        if live:
+            # serve_forever() built the clock and completion queue *before*
+            # starting this scheduler thread, so submit_live() can never
+            # race their creation
+            clock = self._live_clock
+            completions = self._completions
+        else:
+            clock = WallClock()
+            completions = queue_mod.Queue()
         inboxes = [queue_mod.Queue() for _ in range(ecfg.num_lanes)]
         workers = [threading.Thread(
             target=self._lane_worker,
@@ -527,6 +708,8 @@ class ServingEngine:
                 lane_wall=rs["lane_wall"])
 
         def handle(item) -> None:
+            if item[0] == "wake":         # live submit()/shutdown() unpark
+                return
             kind, lane = item[0], item[1]
             busy.discard(lane)
             inflight_work.pop(lane, None)
@@ -548,10 +731,11 @@ class ServingEngine:
                     if ecfg.keep_logits:
                         r.logits = logits[j]
                     self.metrics.record_completion(r.arrival, r.finish)
-                    self.completed.append(r)
+                    self._finish_request(r, logits[j])
                 work = sum(self._eff_work(r) for r in grp)
                 if work > 0:
                     self.dispatcher.record_round({lane: wall / work})
+                    self._svc_samples.append((work, wall))
                 rounds[widx]["executed"].append(grp)
                 rounds[widx]["lane_wall"].append(wall)
             rounds[widx]["pending"] -= 1
@@ -559,7 +743,11 @@ class ServingEngine:
                 finish_round(widx)
 
         try:
-            while pending or len(self.batcher) or busy:
+            while True:
+                live_running = live and not self._stop.is_set()
+                if not (pending or len(self.batcher) or busy
+                        or live_running):
+                    break
                 now = clock.now()
                 while pending and pending[0].arrival <= now:
                     self.batcher.push(pending.popleft())
@@ -612,9 +800,27 @@ class ServingEngine:
                     except queue_mod.Empty:
                         pass
                 elif pending:
-                    clock.sleep_until(pending[0].arrival)
+                    if live:
+                        # interruptible wait: submit_live()/shutdown() wake
+                        # sentinels must not be deaf until the next replayed
+                        # arrival lands
+                        try:
+                            handle(completions.get(timeout=max(
+                                0.0, pending[0].arrival - clock.now())))
+                        except queue_mod.Empty:
+                            pass
+                    else:
+                        clock.sleep_until(pending[0].arrival)
                 elif len(self.batcher):
                     continue        # re-queued failures: loop re-dispatches
+                elif live_running:
+                    # idle live engine: park on the completion queue —
+                    # submit_live()/shutdown() post a wake sentinel, so this
+                    # never busy-waits (the timeout is only a safety net)
+                    try:
+                        handle(completions.get(timeout=0.5))
+                    except queue_mod.Empty:
+                        pass
                 else:
                     break
         finally:
@@ -624,6 +830,79 @@ class ServingEngine:
                 wkr.join(timeout=5.0)
             self._lane_compiles = sum(c.compiles for c in caches)
         return self.summary()
+
+    # -- live serving (serve_forever) ---------------------------------------
+    def serve_forever(self) -> "ServingEngine":
+        """Start live serving: the threaded scheduler runs in the background
+        and ``submit_live()`` is accepted *while it runs* (the batcher and
+        dispatcher already lock).  Returns immediately; every compile
+        happens here, before the live clock epoch, so first-request latency
+        is a serve, not a trace.
+
+        Pre-``submit()``-ed requests (if any) replay their arrival offsets
+        against the live epoch.  Call ``shutdown()`` to stop: it refuses new
+        submissions, drains the queue and all in-flight micro-batches, and
+        returns the metrics summary.
+        """
+        if not self.ecfg.threaded:
+            raise ValueError(
+                "serve_forever() requires EngineConfig.threaded=True — live "
+                "submission runs on worker-thread lanes; the virtual clock "
+                "replays pre-submitted traces only (use run())")
+        if self._live_thread is not None:
+            raise RuntimeError("serve_forever() is already running")
+        self._ensure_lane_caches()        # all compilation before the epoch
+        self._stop = threading.Event()
+        self._live_error = None
+        self._live_summary = None
+        self._completions = queue_mod.Queue()
+        self._live_clock = WallClock()
+
+        def _scheduler():
+            try:
+                self._live_summary = self._run_threaded(live=True)
+            except BaseException as e:  # noqa: BLE001 — surfaced by shutdown
+                # close submissions BEFORE failing outstanding handles, under
+                # the submit lock: a racing submit_live() either registered
+                # its handle first (it gets failed here) or observes the
+                # stop/error and raises — no handle can slip in after the
+                # sweep and hang its client forever
+                with self._submit_lock:
+                    self._live_error = e
+                    self._stop.set()
+                self._fail_outstanding(e)
+
+        self._live_thread = threading.Thread(
+            target=_scheduler, name="serving-scheduler", daemon=True)
+        self._live_thread.start()
+        return self
+
+    @property
+    def live(self) -> bool:
+        """True while serve_forever() is accepting submissions."""
+        return (self._live_thread is not None and self._stop is not None
+                and not self._stop.is_set() and self._live_error is None)
+
+    def shutdown(self, timeout: Optional[float] = None) -> Dict[str, float]:
+        """Stop a live engine cleanly: no new submissions, every queued
+        request and in-flight micro-batch drains (futures resolve), the
+        scheduler and lane workers join.  Returns the metrics summary;
+        re-raises the engine failure if serving died (after failing every
+        outstanding handle, so no client hangs)."""
+        if self._live_thread is None:
+            raise RuntimeError("engine is not live (serve_forever not running)")
+        with self._submit_lock:
+            self._stop.set()
+        self._completions.put(("wake",))
+        self._live_thread.join(timeout)
+        still_running = self._live_thread.is_alive()
+        if still_running:
+            raise RuntimeError(
+                f"live scheduler did not drain within {timeout}s")
+        self._live_thread = None
+        if self._live_error is not None:
+            raise self._live_error
+        return self._live_summary
 
     # -- single-shot / throughput modes ------------------------------------
     def warmup(self, sizes: Optional[Sequence[int]] = None) -> None:
@@ -688,31 +967,19 @@ class ServingEngine:
 def serve_frames(params: Dict, cfg: SNNConfig, frames: np.ndarray, *,
                  backend: str = "batched", steps: int = 1,
                  schedule_mode: Optional[str] = None) -> Dict[str, float]:
-    """Single-shot serving helper — the one code path the CLI entry points
-    (launch/serve.py, examples/serve_batched.py) share.
+    """DEPRECATED single-shot serving helper — use the ``repro.api`` facade:
+    ``Session(cfg, ServeSpec(backend=...), params=params).serve(frames)``.
 
-    Runs ``steps`` iterations of one fixed batch through the engine's jit
-    cache (per-batch host sync, matching the historical synchronous loop's
-    semantics) and returns timing + spike stats.
+    Thin shim kept for old call sites; warns once per process and delegates
+    to ``Session.serve`` (identical semantics: ``steps`` iterations of one
+    fixed batch through the bucketed jit cache, per-step host sync).
     """
-    buckets = DEFAULT_BUCKETS
-    if frames.shape[0] > max(buckets):
-        buckets = buckets + (int(frames.shape[0]),)
-    eng = ServingEngine(params, cfg, EngineConfig(
-        backend=backend, num_lanes=1, buckets=buckets,
-        max_batch=bucket_for(frames.shape[0], buckets),
-        schedule_mode=schedule_mode))
-    out = eng.infer(frames)                                   # compile + warm
-    t0 = time.perf_counter()
-    for _ in range(steps):
-        out = eng.infer(frames)
-    dt = time.perf_counter() - t0
-    done = steps * frames.shape[0]
-    return {
-        "frames": done,
-        "seconds": dt,
-        "fps": done / dt if dt > 0 else 0.0,
-        "spikes_per_frame": sum(float(t) for t in out.spike_totals)
-        / frames.shape[0],
-        "outputs": out,
-    }
+    from repro.api import ServeSpec, Session
+    from repro.api._compat import warn_deprecated_once
+    warn_deprecated_once(
+        "serve_frames",
+        "repro.serving.serve_frames is deprecated; build a repro.api.Session"
+        " with a ServeSpec and call Session.serve(frames, steps=...)")
+    spec = ServeSpec(backend=backend, schedule_mode=schedule_mode,
+                     num_lanes=1)
+    return Session(cfg, spec, params=params).serve(frames, steps=steps)

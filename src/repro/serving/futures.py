@@ -1,0 +1,82 @@
+"""Per-request completion handles for live serving (``serve_forever``).
+
+``submit()`` on a live engine returns a ``RequestHandle`` — a minimal
+future: ``result(timeout)`` blocks for the request's logits, ``done()``
+polls, ``exception()`` surfaces the failure.  Exactly one of resolve/fail
+ever fires per handle (the engine's no-request-lost / no-double-serve
+conservation guarantee, chaos-tested): a request whose lane dies mid-flight
+re-queues and resolves later on a survivor; a request the SLO admitter
+drops fails with ``SLORejected``; an engine-fatal error (all lanes dead)
+fails every outstanding handle with the cause.
+
+``concurrent.futures.Future`` isn't reused because its cancel/running state
+machine doesn't match serving semantics (a dispatched micro-batch cannot be
+cancelled, only drained), and the whole contract here is three methods.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["SLORejected", "RequestHandle"]
+
+
+class SLORejected(RuntimeError):
+    """The SLO admitter dropped this request (predicted latency over the
+    engine's ``latency_budget_s``).  Carries the request record so clients
+    can inspect arrival/workload or resubmit."""
+
+    def __init__(self, request):
+        super().__init__(
+            f"request {request.rid} rejected at admission: predicted latency "
+            f"exceeds the engine's SLO budget")
+        self.request = request
+
+
+class RequestHandle:
+    """Future-style handle for one live-submitted request."""
+
+    def __init__(self, request):
+        self.request = request
+        self._event = threading.Event()
+        self._logits: Optional[np.ndarray] = None
+        self._exc: Optional[BaseException] = None
+
+    # -- engine side (called exactly once) -----------------------------------
+    def _resolve(self, logits: np.ndarray) -> None:
+        self._logits = logits
+        self._event.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        self._exc = exc
+        self._event.set()
+
+    # -- client side ---------------------------------------------------------
+    @property
+    def rid(self) -> int:
+        return self.request.rid
+
+    def done(self) -> bool:
+        """True once the request completed, was rejected, or failed."""
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        """Block for the request's logits.  Raises ``SLORejected`` if the
+        admitter dropped it, the engine's failure if serving died, or
+        ``TimeoutError`` if ``timeout`` elapses first."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"request {self.request.rid} not done within {timeout}s")
+        if self._exc is not None:
+            raise self._exc
+        return self._logits
+
+    def exception(self, timeout: Optional[float] = None
+                  ) -> Optional[BaseException]:
+        """The failure (``SLORejected`` / engine error) or None on success."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"request {self.request.rid} not done within {timeout}s")
+        return self._exc

@@ -1,0 +1,479 @@
+"""The ``repro.api`` facade: spec validation, dict round-trips, Session
+verbs, and live serving (``serve_forever`` + per-request futures).
+
+Live-serving tests follow the threaded chaos discipline
+(tests/test_serving_threaded.py): interleavings are nondeterministic, so
+they assert conservation invariants (every future resolves exactly once,
+nothing lost or double-served, bitwise logits parity vs the single-shot
+path) rather than exact schedules.
+"""
+import dataclasses
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.config import get_snn
+from repro.core import init_snn
+
+
+def _tiny_cfg():
+    return dataclasses.replace(
+        get_snn("snn-mnist"), input_hw=(8, 8), conv_channels=(8, 8),
+        timesteps=3, num_spe_clusters=4)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = _tiny_cfg()
+    params = init_snn(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _frames(n, cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    h, w = cfg.input_hw
+    return np.clip(
+        rng.uniform(0, 1, (n, h, w, cfg.input_channels))
+        * rng.lognormal(-0.5, 1.2, (n, 1, 1, 1)), 0, 1).astype(np.float32)
+
+
+# -- spec validation ----------------------------------------------------------
+
+def test_unknown_backend_names_valid_set():
+    with pytest.raises(ValueError) as e:
+        api.ExecutionSpec(backend="tensorrt")
+    for b in ("ref", "batched", "pallas"):
+        assert b in str(e.value)
+
+
+def test_unknown_surrogate_names_valid_set():
+    with pytest.raises(ValueError) as e:
+        api.ExecutionSpec(surrogate_kind="step")
+    for k in ("fast_sigmoid", "triangle", "arctan"):
+        assert k in str(e.value)
+
+
+def test_unknown_schedule_names_valid_set():
+    with pytest.raises(ValueError) as e:
+        api.ExecutionSpec(backend="pallas", schedule_mode="greedy")
+    for m in api.SCHEDULE_MODES:
+        assert m in str(e.value)
+
+
+def test_schedule_on_non_pallas_backend_is_loud():
+    with pytest.raises(ValueError, match="pallas"):
+        api.ExecutionSpec(backend="batched", schedule_mode="aprc+cbws")
+    # "none" and None are fine on any backend
+    assert api.ExecutionSpec(backend="batched", schedule_mode="none")
+    assert api.ServeSpec(backend="ref").resolved_schedule() is None
+
+
+def test_resolve_schedule_auto():
+    assert api.resolve_schedule("auto", "pallas") == "aprc+cbws"
+    assert api.resolve_schedule("auto", "batched") is None
+    assert api.resolve_schedule("cbws", "pallas") == "cbws"
+    with pytest.raises(ValueError, match="pallas"):
+        api.ServeSpec(backend="batched",
+                      schedule_mode=api.resolve_schedule("aprc+cbws",
+                                                         "batched"))
+
+
+def test_spec_bounds_validation():
+    with pytest.raises(ValueError, match="timesteps"):
+        api.ExecutionSpec(timesteps=0)
+    with pytest.raises(ValueError, match="lr"):
+        api.TrainSpec(lr=0.0)
+    with pytest.raises(ValueError, match="momentum"):
+        api.TrainSpec(momentum=1.0)
+    with pytest.raises(ValueError, match="num_lanes"):
+        api.ServeSpec(num_lanes=0)
+    with pytest.raises(ValueError, match="bucket"):
+        api.ServeSpec(max_batch=9, buckets=(2, 4))
+    with pytest.raises(ValueError, match="admission"):
+        api.ServeSpec(admission="lifo")
+    with pytest.raises(ValueError, match="slo_action"):
+        api.ServeSpec(slo_action="drop")
+    with pytest.raises(ValueError, match="schedule_mode"):
+        api.TrainSpec(backend="pallas", schedule_mode="aprc+cbws")
+
+
+def test_spec_dict_round_trip():
+    for spec in (
+        api.ExecutionSpec(backend="pallas", schedule_mode="cbws",
+                          timesteps=5, surrogate_kind="arctan",
+                          surrogate_alpha=4.0),
+        api.TrainSpec(backend="batched", lr=3e-4, momentum=0.8),
+        api.ServeSpec(backend="batched", num_lanes=3, max_batch=4,
+                      buckets=(1, 2, 4), admission="fifo", threaded=True,
+                      latency_budget_s=0.05, slo_action="degrade",
+                      degrade_timesteps=2, slo_batch_quantum_s=0.001),
+    ):
+        d = spec.to_dict()
+        assert d["kind"] == type(spec).KIND
+        assert api.spec_from_dict(d) == spec
+        # JSON-compatible: tuples listified on the way out
+        import json
+        assert api.spec_from_dict(json.loads(json.dumps(d))) == spec
+
+
+def test_from_dict_unknown_key_and_kind_are_loud():
+    with pytest.raises(ValueError, match="lanes_count"):
+        api.ServeSpec.from_dict({"lanes_count": 4})
+    with pytest.raises(ValueError, match="kind"):
+        api.TrainSpec.from_dict({"kind": "serve"})
+    with pytest.raises(ValueError, match="spec kind"):
+        api.spec_from_dict({"kind": "deploy"})
+
+
+def test_spec_fields_a_callee_cannot_apply_are_loud(tiny):
+    """A spec field the called layer cannot honor is an error, never a
+    silent drop: snn_apply/make_train_step reject a spec whose timesteps
+    disagree with the config (Session resolves T into the config), and
+    snn_apply rejects a schedule_mode without the built schedule."""
+    cfg, params = tiny                       # cfg.timesteps == 3
+    from repro.core import snn_apply
+    from repro.core.snn_train import make_loss_fn, make_train_step
+    x = _frames(2, cfg)
+    with pytest.raises(ValueError, match="timesteps"):
+        snn_apply(params, x, cfg,
+                  spec=api.ExecutionSpec(backend="batched", timesteps=8))
+    with pytest.raises(ValueError, match="timesteps"):
+        make_train_step(cfg, spec=api.TrainSpec(backend="batched",
+                                                timesteps=8))
+    with pytest.raises(ValueError, match="timesteps"):
+        make_loss_fn(cfg, spec=api.TrainSpec(timesteps=8))
+    with pytest.raises(ValueError, match="schedule"):
+        snn_apply(params, x, cfg, spec=api.ExecutionSpec(
+            backend="pallas", schedule_mode="aprc+cbws"))
+    # matching timesteps pass through fine
+    out = snn_apply(params, x, cfg,
+                    spec=api.ExecutionSpec(backend="batched",
+                                           timesteps=cfg.timesteps))
+    assert out.logits.shape == (2, 10)
+
+
+# -- Session verbs ------------------------------------------------------------
+
+def test_session_train_then_infer_then_serve(tiny):
+    cfg, _ = tiny
+    sess = api.Session(cfg, api.TrainSpec(backend="batched", lr=1e-2))
+    x = _frames(8, cfg)
+    y = np.arange(8) % 10
+    l0 = sess.train_step(x, y)
+    l1 = sess.train_step(x, y)
+    assert np.isfinite(l0) and np.isfinite(l1)
+    assert 0.0 <= sess.evaluate(x, y) <= 1.0
+    out = sess.infer(x[:3])
+    assert out.logits.shape == (3, 10)
+    s = sess.serve(x[:3], steps=2)
+    assert s["frames"] == 6 and s["fps"] > 0
+
+
+def test_session_infer_matches_raw_snn_apply(tiny):
+    cfg, params = tiny
+    from repro.core import snn_apply
+    sess = api.Session(cfg, api.ExecutionSpec(backend="batched"),
+                       params=params)
+    x = _frames(4, cfg, seed=3)
+    want = np.asarray(
+        jax.jit(lambda p, xx: snn_apply(p, xx, cfg,
+                                        backend="batched").logits)(params, x))
+    np.testing.assert_array_equal(want, np.asarray(sess.infer(x).logits))
+
+
+def test_session_engine_runs_a_trace_spec_only(tiny):
+    cfg, params = tiny
+    spec = api.ServeSpec(backend="batched", num_lanes=2, max_batch=4,
+                         keep_logits=False)
+    eng = api.Session(cfg, spec, params=params).engine()
+    for f in _frames(8, cfg, seed=5):
+        eng.submit(f, arrival=0.0)
+    s = eng.run()
+    assert s["served"] == 8
+
+
+def test_session_rejects_non_spec_config(tiny):
+    cfg, params = tiny
+    with pytest.raises(TypeError, match="ExecutionSpec"):
+        api.Session(cfg, {"backend": "batched"}, params=params)
+
+
+# -- serve_forever: live submission + futures ---------------------------------
+
+def test_serve_forever_futures_match_single_shot(tiny):
+    """Futures resolve with logits bit-identical to the single-shot serve
+    path on the same trace; every request served exactly once.  One padding
+    bucket pins live micro-batches and single-shot inference to the same
+    executable — bit-identity within one executable is the contract
+    (different-bucket HLO may differ in float accumulation order)."""
+    cfg, params = tiny
+    sess = api.Session(
+        cfg, api.ServeSpec(backend="batched", num_lanes=2, max_batch=4,
+                           buckets=(4,)),
+        params=params)
+    frames = _frames(12, cfg, seed=7)
+    with sess.serve_forever() as live:
+        assert live.running
+        handles = [live.submit(f) for f in frames]
+        logits = [h.result(timeout=60.0) for h in handles]
+    summ = live.summary()
+    assert summ["served"] == len(frames)
+    assert all(h.done() and h.exception() is None for h in handles)
+    rids = [h.rid for h in handles]
+    done = [r.rid for r in live.engine.completed]
+    assert sorted(done) == sorted(rids) and len(set(done)) == len(done)
+    for f, got in zip(frames, logits):
+        want = np.asarray(sess.infer(f[None]).logits[0])
+        np.testing.assert_array_equal(want, got)
+
+
+def test_serve_forever_submissions_while_running(tiny):
+    """The headline capability: submissions land while earlier requests are
+    being served (not a pre-submitted trace), and each wave resolves."""
+    cfg, params = tiny
+    sess = api.Session(
+        cfg, api.ServeSpec(backend="batched", num_lanes=2, max_batch=2),
+        params=params)
+    frames = _frames(9, cfg, seed=9)
+    with sess.serve_forever() as live:
+        first = [live.submit(f) for f in frames[:3]]
+        _ = [h.result(timeout=60.0) for h in first]     # engine mid-flight
+        second = [live.submit(f) for f in frames[3:]]
+        _ = [h.result(timeout=60.0) for h in second]
+    assert live.summary()["served"] == len(frames)
+
+
+def test_serve_forever_slo_reject_raises_on_future(tiny):
+    """An SLO-rejected request's future raises SLORejected (and exposes it
+    via exception()); admitted + rejected covers every submission."""
+    cfg, params = tiny
+    from repro.serving.admission import (layer0_channel_weights,
+                                         predict_workload)
+    frames = _frames(10, cfg, seed=11)
+    w = min(predict_workload(f, layer0_channel_weights(params),
+                             cfg.timesteps) for f in frames)
+    sess = api.Session(cfg, api.ServeSpec(
+        backend="batched", num_lanes=2, max_batch=4,
+        latency_budget_s=1e-4, slo_seconds_per_work=1.0 / w,
+        slo_action="reject"), params=params)
+    with sess.serve_forever() as live:
+        handles = [live.submit(f) for f in frames]
+        outcomes = [h.exception(timeout=60.0) for h in handles]
+    summ = live.summary()
+    n_rej = sum(isinstance(e, api.SLORejected) for e in outcomes)
+    n_ok = sum(e is None for e in outcomes)
+    assert n_rej + n_ok == len(frames)
+    assert n_rej > 0, "absurd budget must reject part of the burst"
+    assert summ["served"] == n_ok and summ["rejected"] == n_rej
+    for h, e in zip(handles, outcomes):
+        if e is not None:
+            with pytest.raises(api.SLORejected):
+                h.result()
+            assert e.request.rid == h.rid
+
+
+def test_serve_forever_shutdown_drains_inflight(tiny):
+    """shutdown() must drain queued + in-flight micro-batches: futures
+    submitted immediately before shutdown still resolve."""
+    cfg, params = tiny
+    sess = api.Session(
+        cfg, api.ServeSpec(backend="batched", num_lanes=2, max_batch=2),
+        params=params)
+    live = sess.serve_forever()
+    handles = [live.submit(f) for f in _frames(10, cfg, seed=13)]
+    summ = live.shutdown(timeout=120.0)       # no result() calls before this
+    assert summ["served"] == len(handles)
+    assert all(h.done() for h in handles)
+    assert all(h.exception() is None for h in handles)
+    with pytest.raises(RuntimeError, match="not live|shutting down"):
+        live.submit(_frames(1, cfg)[0])
+
+
+def test_serve_forever_survives_mid_run_lane_kill(tiny):
+    """Chaos: lane 0 dies mid-run; its in-flight micro-batch drains back and
+    the survivor serves everything — no future lost, none resolved twice."""
+    cfg, params = tiny
+
+    def kill_lane0(lane, attempt):
+        if lane == 0:
+            raise RuntimeError("chaos: lane 0 down")
+
+    sess = api.Session(cfg, api.ServeSpec(
+        backend="batched", num_lanes=2, max_batch=2, buckets=(2,)),
+        params=params)
+    eng = sess.engine(api.ServeSpec(
+        backend="batched", num_lanes=2, max_batch=2, buckets=(2,),
+        max_retries=0, threaded=True), fault_hook=kill_lane0)
+    live = api.LiveServer(eng.serve_forever())
+    frames = _frames(10, cfg, seed=15)
+    handles = [live.submit(f) for f in frames]
+    logits = [h.result(timeout=120.0) for h in handles]
+    summ = live.shutdown(timeout=120.0)
+    assert summ["served"] == len(frames)
+    assert summ["dead_lanes"] == 1
+    done = [r.rid for r in eng.completed]
+    assert sorted(done) == sorted(h.rid for h in handles)
+    assert len(set(done)) == len(done), "a request was double-served"
+    assert all(r.lane == 1 for r in eng.completed)
+    for f, got in zip(frames, logits):
+        want = np.asarray(sess.infer(f[None]).logits[0])
+        np.testing.assert_array_equal(want, got)
+
+
+def test_serve_forever_all_lanes_dead_fails_futures(tiny):
+    """Engine-fatal: every outstanding future fails with the cause instead
+    of hanging, and shutdown() re-raises it."""
+    cfg, params = tiny
+
+    def outage(lane, attempt):
+        raise RuntimeError("chaos: total outage")
+
+    sess = api.Session(cfg, api.ServeSpec(
+        backend="batched", num_lanes=2, max_batch=2), params=params)
+    eng = sess.engine(api.ServeSpec(
+        backend="batched", num_lanes=2, max_batch=2, max_retries=0,
+        threaded=True), fault_hook=outage)
+    eng.serve_forever()
+    handles = [eng.submit_live(f) for f in _frames(4, cfg, seed=17)]
+    excs = [h.exception(timeout=120.0) for h in handles]
+    assert all(isinstance(e, RuntimeError) for e in excs)
+    with pytest.raises(RuntimeError, match="lanes failed"):
+        eng.shutdown(timeout=120.0)
+
+
+def test_serve_forever_requires_threaded_engine(tiny):
+    cfg, params = tiny
+    eng = api.Session(cfg, api.ServeSpec(backend="batched"),
+                      params=params).engine()     # threaded=False
+    with pytest.raises(ValueError, match="threaded"):
+        eng.serve_forever()
+    # Session.serve_forever forces threaded on instead
+    live = api.Session(cfg, api.ServeSpec(backend="batched"),
+                       params=params).serve_forever()
+    assert live.running
+    live.shutdown(timeout=60.0)
+
+
+def test_trace_submit_rejected_while_live(tiny):
+    """submit() on a live engine would silently black-hole the request (the
+    trace list is snapshotted at scheduler start) — it must raise instead."""
+    cfg, params = tiny
+    sess = api.Session(cfg, api.ServeSpec(backend="batched", num_lanes=1,
+                                          max_batch=2), params=params)
+    with sess.serve_forever() as live:
+        with pytest.raises(RuntimeError, match="submit_live"):
+            live.engine.submit(_frames(1, cfg)[0], arrival=0.0)
+        live.submit(_frames(1, cfg)[0]).result(timeout=60.0)
+    assert live.summary()["served"] == 1
+
+
+def test_live_submission_not_blocked_by_future_presubmitted_arrival(tiny):
+    """A pre-submitted request with a far-future arrival must not deafen
+    the scheduler: a live submission resolves promptly instead of waiting
+    out the replayed arrival gap."""
+    cfg, params = tiny
+    sess = api.Session(cfg, api.ServeSpec(backend="batched", num_lanes=1,
+                                          max_batch=2), params=params)
+    eng = sess.engine(api.ServeSpec(backend="batched", num_lanes=1,
+                                    max_batch=2, threaded=True))
+    eng.submit(_frames(1, cfg)[0], arrival=3.0)     # replays 3s after epoch
+    live = api.LiveServer(eng.serve_forever())
+    h = live.submit(_frames(1, cfg, seed=21)[0])
+    # without interruptible parking this would sleep out the full 3s gap
+    h.result(timeout=2.0)
+    summ = live.shutdown(timeout=120.0)             # drains the replay too
+    assert summ["served"] == 2
+
+
+def test_train_step_refreshes_engines_without_recompiling(tiny):
+    """Interleaved train/infer must not recompile: params are a traced jit
+    argument, so update_params swaps them into the cached engines in place
+    and inference tracks the new weights at zero compile cost."""
+    cfg, _ = tiny
+    from repro.core import snn_apply
+    sess = api.Session(cfg, api.TrainSpec(backend="batched", lr=1e-2))
+    x = _frames(4, cfg)
+    y = np.arange(4) % 10
+    sess.infer(x)                                   # builds + compiles
+    eng = sess._engines[4]
+    compiles = eng.cache.compiles
+    sess.train_step(x, y)
+    got = np.asarray(sess.infer(x).logits)
+    assert sess._engines[4] is eng and eng.cache.compiles == compiles
+    want = np.asarray(jax.jit(
+        lambda p, xx: snn_apply(p, xx, cfg, backend="batched").logits)(
+            sess.params, x))
+    np.testing.assert_array_equal(want, got)
+
+
+def test_train_step_on_scheduled_serve_spec_session(tiny):
+    """A session built from a pallas ServeSpec carrying a kernel schedule
+    can still train: the derived TrainSpec strips the serving-only
+    schedule_mode (same as evaluate) instead of crashing."""
+    cfg, params = tiny
+    sess = api.Session(cfg, api.ServeSpec(
+        backend="pallas", schedule_mode="aprc+cbws"), params=params)
+    x = _frames(2, cfg)
+    y = np.arange(2) % 10
+    assert np.isfinite(sess.train_step(x, y))
+    assert 0.0 <= sess.evaluate(x, y) <= 1.0
+
+
+def test_ops_spec_fields_the_kernel_cannot_apply_are_loud(tiny):
+    """ops.spiking_conv_lif mirrors the facade contract: spec fields it
+    cannot apply (backend, mismatched T, schedule) raise instead of being
+    silently dropped."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    spikes = jnp.zeros((3, 1, 4, 4, 2))
+    v0 = jnp.zeros((1, 6, 6, 4))
+    w = jnp.zeros((3, 3, 2, 4))
+    b = jnp.zeros((4,))
+    with pytest.raises(ValueError, match="pallas kernel"):
+        ops.spiking_conv_lif(spikes, v0, w, b,
+                             spec=api.ExecutionSpec(backend="batched"))
+    with pytest.raises(ValueError, match="timesteps"):
+        ops.spiking_conv_lif(spikes, v0, w, b, spec=api.ExecutionSpec(
+            backend="pallas", timesteps=8))
+    with pytest.raises(ValueError, match="schedule"):
+        ops.spiking_conv_lif(spikes, v0, w, b, spec=api.ExecutionSpec(
+            backend="pallas", schedule_mode="aprc+cbws"))
+
+
+def test_submit_live_requires_running_engine(tiny):
+    cfg, params = tiny
+    eng = api.Session(cfg, api.ServeSpec(
+        backend="batched", threaded=True), params=params).engine()
+    with pytest.raises(RuntimeError, match="serve_forever"):
+        eng.submit_live(_frames(1, cfg)[0])
+
+
+def test_serve_forever_concurrent_submitters(tiny):
+    """Thread-safe submission: several client threads submit concurrently;
+    conservation holds and every future resolves."""
+    cfg, params = tiny
+    sess = api.Session(cfg, api.ServeSpec(
+        backend="batched", num_lanes=2, max_batch=4), params=params)
+    frames = _frames(16, cfg, seed=19)
+    handles, lock = [], threading.Lock()
+    with sess.serve_forever() as live:
+        def client(chunk):
+            for f in chunk:
+                h = live.submit(f)
+                with lock:
+                    handles.append(h)
+        threads = [threading.Thread(target=client, args=(frames[i::4],))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for h in handles:
+            h.result(timeout=120.0)
+    assert live.summary()["served"] == len(frames)
+    rids = sorted(h.rid for h in handles)
+    assert rids == sorted(set(rids)) and len(rids) == len(frames)

@@ -1,0 +1,108 @@
+"""Public-API surface contract for the ``repro.api`` facade (CI tier-1).
+
+Asserts the facade imports cleanly (everything in ``__all__`` resolves),
+the spec vocabulary stays coherent with the layers underneath, and the
+deprecation shims on the old kwarg-threaded signatures keep working while
+warning exactly once per process.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro.api._compat import reset_deprecation_warnings
+
+
+def test_api_all_imports_cleanly():
+    assert api.__all__, "repro.api.__all__ must enumerate the facade"
+    missing = [name for name in api.__all__ if not hasattr(api, name)]
+    assert not missing, f"__all__ names missing from repro.api: {missing}"
+    # the core trio is present and constructible with defaults
+    assert api.ExecutionSpec() and api.TrainSpec() and api.ServeSpec()
+
+
+def test_spec_vocabulary_matches_lower_layers():
+    from repro.core.snn_model import SNN_BACKENDS
+    from repro.core.surrogate import SURROGATE_KINDS
+    for b in SNN_BACKENDS:
+        assert api.ExecutionSpec(backend=b)
+    for k in SURROGATE_KINDS:
+        assert api.ExecutionSpec(surrogate_kind=k)
+    for m in api.SCHEDULE_MODES:
+        spec = api.ExecutionSpec(backend="pallas", schedule_mode=m)
+        assert spec.resolved_schedule() in (None, "cbws", "aprc+cbws")
+
+
+@pytest.fixture()
+def fresh_shim_registry():
+    reset_deprecation_warnings()
+    yield
+    reset_deprecation_warnings()
+
+
+def _tiny():
+    import dataclasses
+
+    import jax
+
+    from repro.config import get_snn
+    from repro.core import init_snn
+    cfg = dataclasses.replace(
+        get_snn("snn-mnist"), input_hw=(8, 8), conv_channels=(8, 8),
+        timesteps=2, num_spe_clusters=4)
+    return cfg, init_snn(jax.random.PRNGKey(0), cfg)
+
+
+def test_serve_frames_shim_warns_exactly_once(fresh_shim_registry):
+    from repro.serving import serve_frames
+    cfg, params = _tiny()
+    frames = np.full((2, 8, 8, 1), 0.5, np.float32)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        s1 = serve_frames(params, cfg, frames, backend="batched", steps=1)
+        s2 = serve_frames(params, cfg, frames, backend="batched", steps=1)
+    deps = [w for w in rec if issubclass(w.category, DeprecationWarning)
+            and "serve_frames" in str(w.message)]
+    assert len(deps) == 1, "shim must warn exactly once per process"
+    # the shim still serves (old call sites keep working)
+    assert s1["frames"] == 2 and np.isfinite(s2["fps"])
+    np.testing.assert_array_equal(np.asarray(s1["outputs"].logits),
+                                  np.asarray(s2["outputs"].logits))
+
+
+def test_make_train_step_legacy_kwargs_warn_once_and_match_spec(
+        fresh_shim_registry):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.snn_train import make_train_step
+    cfg, params = _tiny()
+    x = np.full((4, 8, 8, 1), 0.5, np.float32)
+    y = np.zeros(4, np.int64)
+    mom = jax.tree.map(jnp.zeros_like, params)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        legacy = make_train_step(cfg, backend="batched", lr=1e-2)
+        make_train_step(cfg, backend="batched")       # second legacy call
+    deps = [w for w in rec if issubclass(w.category, DeprecationWarning)
+            and "make_train_step" in str(w.message)]
+    assert len(deps) == 1
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        specced = make_train_step(
+            cfg, spec=api.TrainSpec(backend="batched", lr=1e-2))
+    assert not [w for w in rec
+                if issubclass(w.category, DeprecationWarning)], \
+        "spec-driven calls must not warn"
+    _, _, l1 = legacy(params, mom, jnp.asarray(x), jnp.asarray(y))
+    _, _, l2 = specced(params, mom, jnp.asarray(x), jnp.asarray(y))
+    assert float(l1) == float(l2)
+
+
+def test_make_train_step_rejects_spec_plus_legacy_kwargs():
+    from repro.core.snn_train import make_train_step
+    cfg, _ = _tiny()
+    with pytest.raises(ValueError, match="not both"):
+        make_train_step(cfg, backend="batched",
+                        spec=api.TrainSpec(backend="ref"))
