@@ -19,6 +19,12 @@ Three sections, each a ``name,us_per_call,derived`` row family:
                        futures, requests submitted WHILE the engine runs)
                        vs the same burst pre-submitted and drained by
                        run() — the live path must not tax throughput/p99
+  serve/faults/*       supervised recovery under seeded chaos
+                       (runtime.faults): the same burst fault-free vs under
+                       a FaultPlan that crashes every lane once mid-epoch
+                       plus a submit storm, restart_budget=2 — restarts,
+                       time-to-recovery, and post-recovery FPS vs the
+                       fault-free baseline
 
 Engines are constructed exclusively through the ``repro.api`` facade
 (``ServeSpec`` -> ``Session``); ``--quick`` shrinks the workload and writes
@@ -28,6 +34,7 @@ alongside the kernel one (scripts/smoke.sh runs this).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import statistics
@@ -299,6 +306,110 @@ def forever_rows(params, cfg, quick: bool):
     ]
 
 
+def faults_rows(params, cfg, quick: bool):
+    """(f) supervised recovery under seeded chaos: the same skewed burst
+    drained fault-free, then under a ``FaultPlan`` that crashes every lane
+    once mid-epoch and adds a submit storm (``restart_budget=2``).  Derived
+    fields surface the recovery story: restarts taken, mean death-to-service
+    recovery time, and the FPS of the post-recovery tail (completions
+    dispatched after the last restart) against the fault-free baseline —
+    the acceptance bar is that tail within ~10% of fault-free.  The plan
+    seed is echoed so a regression replays bit-identically.  Meant to run
+    under THREADED_XLA_FLAGS with the threaded section."""
+    from repro import api
+
+    lanes, max_batch = 2, 8
+    n, pairs = (32, 3) if quick else (96, 5)
+    frames = _skewed_frames(n, cfg, seed=17)
+    # crashes land on each lane's first/second execution so the restarted
+    # fleet still has most of the burst ahead of it (the post-recovery tail
+    # must span several micro-batches on both lanes to measure a rate)
+    plan = api.FaultPlan(seed=2026, crashes=((0, 0), (1, 1)),
+                         storms=((0.0, 8),))
+    base = api.ServeSpec(backend="batched", num_lanes=lanes,
+                         max_batch=max_batch, buckets=(max_batch,),
+                         threaded=True, keep_logits=False)
+    chaos = dataclasses.replace(base, restart_budget=2,
+                                restart_backoff_s=0.005, fault_plan=plan)
+    sess = api.Session(cfg, base, params=params)
+
+    def run_once(spec):
+        eng = sess.engine(spec)
+        for f in frames:
+            eng.submit(f, arrival=0.0)
+        if spec.fault_plan is not None:
+            # storms are driver-level: the plan's burst rides on the trace
+            for a in spec.fault_plan.storm_arrivals():
+                eng.submit(frames[0], arrival=float(a))
+        eng.warmup()
+        t0 = time.perf_counter()
+        s = eng.run()
+        return eng, s, time.perf_counter() - t0
+
+    def fleet_rate(reqs):
+        """Frames/s at full fleet utilization: lanes x bucket over the
+        *median* micro-batch service time.  Every micro-batch here is the
+        same bucket shape, so medians compare directly; makespan- or
+        busy-time rates would instead be skewed by how much the two runs'
+        batches happened to overlap (a solo batch runs measurably faster
+        than two contending ones) and by end-of-run drain."""
+        svc = [r.finish - r.start
+               for _, r in {(r.lane, r.start): r for r in reqs}.items()]
+        if not svc:
+            return 0.0
+        return lanes * max_batch / statistics.median(svc)
+
+    def tail_rate(eng):
+        """Post-recovery tail: requests whose micro-batch was dispatched
+        after the last lane restart — the restarted fleet's service rate
+        (a cold restart cache would show up here as a recompile stall)."""
+        if not eng.metrics.restart_times:
+            return 0.0
+        t_up = max(eng.metrics.restart_times)
+        return fleet_rate([r for r in eng.completed if r.start >= t_up])
+
+    # interleaved pairs + median-of-ratios (the bench_kernels timing
+    # discipline): baseline and post-recovery rates drift together under
+    # shared-CPU noise, the ratio is what the acceptance bar reads
+    walls0, walls1, bases, posts, ratios = [], [], [], [], []
+    recov, restarts, watermark, served1 = [], 0.0, 0.0, 0.0
+    for _ in range(pairs):
+        eng0, s0, w0 = run_once(base)
+        eng1, s1, w1 = run_once(chaos)
+        b, p = fleet_rate(eng0.completed), tail_rate(eng1)
+        walls0.append(w0)
+        walls1.append(w1)
+        bases.append(b)
+        posts.append(p)
+        ratios.append(p / max(b, 1e-9))
+        recov.append(s1["mean_recovery_s"])
+        restarts, watermark = s1["restarts"], s1["queue_watermark"]
+        served1 = s1["served"]
+    w0 = statistics.median(walls0)
+    w1 = statistics.median(walls1)
+    base_fps = statistics.median(bases)
+    post_fps = statistics.median(posts)
+    ratio = statistics.median(ratios)
+    s0_served = n
+    return [
+        {"name": "serve/faults/baseline",
+         "us_per_call": w0 * 1e6,
+         "derived": (f"wall_fps={n / w0:.1f};fleet_fps={base_fps:.1f};"
+                     f"served={s0_served};lanes={lanes};n={n}")},
+        {"name": "serve/faults/crash_storm",
+         "us_per_call": w1 * 1e6,
+         "derived": (f"wall_fps={served1 / w1:.1f};"
+                     f"served={served1:.0f};"
+                     f"restarts={restarts:.0f};"
+                     f"mean_recovery_ms={statistics.median(recov)*1e3:.1f};"
+                     f"queue_watermark={watermark:.0f};"
+                     f"post_recovery_fleet_fps={post_fps:.1f};"
+                     f"post_recovery_over_baseline={ratio:.3f}x;"
+                     f"recovered_within_10pct={ratio >= 0.9};"
+                     f"plan_seed={plan.seed}")},
+    ]
+
+
 def threaded_rows_subprocess(quick: bool):
     """Run the threaded section in its own interpreter with XLA pinned to
     one intra-op thread (flags are frozen at first use, and this process's
@@ -326,9 +437,11 @@ def run(quick: bool = True, section: str = "all"):
     params = init_snn(jax.random.PRNGKey(0), cfg)
     if section == "threaded":
         # the whole wall-clock concurrency family (threaded + live
-        # serve_forever) runs under the pinned-XLA subprocess flags
+        # serve_forever + chaos recovery) runs under the pinned-XLA
+        # subprocess flags
         return (threaded_rows(params, cfg, quick)
-                + forever_rows(params, cfg, quick))
+                + forever_rows(params, cfg, quick)
+                + faults_rows(params, cfg, quick))
     rows = []
     rows += admission_rows(params, cfg, quick)
     rows += load_rows(params, cfg, quick)

@@ -9,9 +9,15 @@ One import gives everything an entry point needs:
   Session   owns params + jit caches, resolves a spec once; verbs:
             ``infer`` / ``serve`` / ``engine`` / ``serve_forever`` /
             ``train_step`` / ``evaluate``
-  LiveServer / RequestHandle / SLORejected
+  LiveServer / RequestHandle
             live serving: submissions while the engine runs, per-request
-            future handles, SLO rejection surfaced as an exception
+            future handles with deadlines and cancellation
+  SLORejected / DeadlineExceeded / Cancelled / QueueFull / ShutdownTimeout
+            the typed request fates: SLO rejection, deadline expiry, client
+            cancel, bounded-queue backpressure (raised at submit), and the
+            shutdown-timeout drain failure
+  FaultPlan the seeded deterministic chaos scenario record
+            (``runtime.faults``) a ``ServeSpec.fault_plan`` pins
 
 The layers underneath (``core.snn_model``, ``core.snn_train``,
 ``kernels.ops``, ``serving.engine``) stay importable but are driven through
@@ -21,13 +27,17 @@ facade.  See docs/api.md.
 from repro.api.session import LiveServer, Session
 from repro.api.specs import (SCHEDULE_MODES, ExecutionSpec, ServeSpec,
                              TrainSpec, spec_from_dict)
-from repro.serving.futures import RequestHandle, SLORejected
+from repro.runtime.faults import FaultPlan
+from repro.serving.futures import (Cancelled, DeadlineExceeded, QueueFull,
+                                   RequestHandle, ShutdownTimeout,
+                                   SLORejected)
 
 __all__ = [
     "SCHEDULE_MODES", "ExecutionSpec", "TrainSpec", "ServeSpec",
     "spec_from_dict", "resolve_schedule",
     "Session", "LiveServer",
-    "RequestHandle", "SLORejected",
+    "RequestHandle", "SLORejected", "DeadlineExceeded", "Cancelled",
+    "QueueFull", "ShutdownTimeout", "FaultPlan",
 ]
 
 

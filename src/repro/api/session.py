@@ -210,10 +210,13 @@ class LiveServer:
         self._engine = engine
         self._summary: Optional[Dict[str, float]] = None
 
-    def submit(self, frame: np.ndarray):
+    def submit(self, frame: np.ndarray, deadline_s: Optional[float] = None):
         """Submit one frame; returns a ``RequestHandle`` future
-        (``result(timeout)`` / ``done()`` / ``exception()``)."""
-        return self._engine.submit_live(frame)
+        (``result(timeout)`` / ``done()`` / ``exception()`` / ``cancel()``).
+        ``deadline_s`` is the request's latency contract (seconds after
+        arrival; defaults to the spec's ``default_deadline_s``).  Raises
+        ``QueueFull`` fail-fast when the spec's ``max_queue`` is hit."""
+        return self._engine.submit_live(frame, deadline_s=deadline_s)
 
     @property
     def running(self) -> bool:

@@ -177,9 +177,20 @@ class ServeSpec(ExecutionSpec):
     degrade_timesteps: Optional[int] = None
     slo_seconds_per_work: Optional[float] = None
     slo_batch_quantum_s: Optional[float] = None
+    # robustness: bounded-queue backpressure, per-request deadlines, and
+    # supervised lane restart (see serving.engine / serving.supervisor)
+    max_queue: Optional[int] = None
+    default_deadline_s: Optional[float] = None
+    restart_budget: int = 0
+    restart_backoff_s: float = 0.05
+    hang_timeout_s: Optional[float] = None
+    # deterministic seeded chaos (runtime.faults.FaultPlan); serialized as a
+    # nested dict so spec files can pin a replayable scenario
+    fault_plan: Optional[Any] = None
 
     def __post_init__(self):
         super().__post_init__()
+        from repro.runtime.faults import FaultPlan
         from repro.serving.admission import ADMISSION_POLICIES
         _check_choice("admission policy", self.admission, ADMISSION_POLICIES)
         _check_choice("slo_action", self.slo_action, _SLO_ACTIONS)
@@ -197,6 +208,46 @@ class ServeSpec(ExecutionSpec):
         if self.degrade_timesteps is not None and self.degrade_timesteps < 1:
             raise ValueError(
                 f"degrade_timesteps must be >= 1, got {self.degrade_timesteps}")
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(
+                f"max_queue must be >= 1 (or None for unbounded), "
+                f"got {self.max_queue}")
+        if self.default_deadline_s is not None and self.default_deadline_s <= 0:
+            raise ValueError(
+                f"default_deadline_s must be positive, "
+                f"got {self.default_deadline_s}")
+        if self.restart_budget < 0:
+            raise ValueError(
+                f"restart_budget must be >= 0, got {self.restart_budget}")
+        if self.restart_backoff_s < 0:
+            raise ValueError(
+                f"restart_backoff_s must be >= 0, got {self.restart_backoff_s}")
+        if self.hang_timeout_s is not None and self.hang_timeout_s <= 0:
+            raise ValueError(
+                f"hang_timeout_s must be positive, got {self.hang_timeout_s}")
+        if self.fault_plan is not None \
+                and not isinstance(self.fault_plan, FaultPlan):
+            raise ValueError(
+                f"fault_plan must be a runtime.faults.FaultPlan (or None), "
+                f"got {type(self.fault_plan).__name__} — dict forms go "
+                f"through ServeSpec.from_dict")
+
+    # -- (de)serialization: fault_plan is a nested dataclass the generic
+    # tuple<->list walk can't handle ------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        d = super().to_dict()
+        if self.fault_plan is not None:
+            d["fault_plan"] = self.fault_plan.to_dict()
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ServeSpec":
+        from repro.runtime.faults import FaultPlan
+        d = dict(d)
+        fp = d.get("fault_plan")
+        if isinstance(fp, dict):
+            d["fault_plan"] = FaultPlan.from_dict(fp)
+        return super().from_dict(d)
 
     def to_engine_config(self, **overrides):
         """Build the serving engine's internal ``EngineConfig`` — the one
@@ -219,6 +270,12 @@ class ServeSpec(ExecutionSpec):
             degrade_timesteps=self.degrade_timesteps,
             slo_seconds_per_work=self.slo_seconds_per_work,
             slo_batch_quantum_s=self.slo_batch_quantum_s,
+            max_queue=self.max_queue,
+            default_deadline_s=self.default_deadline_s,
+            restart_budget=self.restart_budget,
+            restart_backoff_s=self.restart_backoff_s,
+            hang_timeout_s=self.hang_timeout_s,
+            fault_plan=self.fault_plan,
         )
         kw.update(overrides)
         return EngineConfig(**kw)

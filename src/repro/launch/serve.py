@@ -39,16 +39,46 @@ from repro.config import get_arch, reduced
 from repro.models import transformer
 
 
+def _load_spec_file(path: str):
+    """Parse a ``--spec-file`` JSON document into a validated spec via
+    ``spec_from_dict`` (the ``kind`` tag dispatches; unknown fields and
+    invalid values die loudly at parse time, not inside a jit trace)."""
+    import json
+
+    from repro import api
+    with open(path) as f:
+        d = json.load(f)
+    return api.spec_from_dict(d)
+
+
 def serve_snn(args) -> None:
+    import dataclasses as _dc
+
     from repro import api
 
-    spec = api.ServeSpec(
-        backend=args.backend,
-        schedule_mode=api.resolve_schedule(args.schedule, args.backend),
-        num_lanes=args.lanes, max_batch=args.batch,
-        threaded=args.threaded,
-        latency_budget_s=(args.slo_ms / 1e3 if args.slo_ms else None),
-        slo_action=args.slo_action)
+    if args.spec_file:
+        spec = _load_spec_file(args.spec_file)
+        if not isinstance(spec, api.ServeSpec):
+            raise SystemExit(
+                f"--spec-file {args.spec_file} holds a "
+                f"{type(spec).__name__} (kind={spec.KIND!r}); serving needs "
+                f"a ServeSpec (kind='serve')")
+    else:
+        spec = api.ServeSpec(
+            backend=args.backend,
+            schedule_mode=api.resolve_schedule(args.schedule, args.backend),
+            num_lanes=args.lanes, max_batch=args.batch,
+            threaded=args.threaded,
+            latency_budget_s=(args.slo_ms / 1e3 if args.slo_ms else None),
+            slo_action=args.slo_action)
+    # robustness knobs layer onto either spec source (explicit flags win)
+    overrides = {}
+    if args.max_queue is not None:
+        overrides["max_queue"] = args.max_queue
+    if args.deadline_ms is not None:
+        overrides["default_deadline_s"] = args.deadline_ms / 1e3
+    if overrides:
+        spec = _dc.replace(spec, **overrides)
     sess = api.Session(args.snn, spec)
     cfg = sess.cfg
     frames = np.asarray(jax.random.uniform(
@@ -67,11 +97,14 @@ def serve_snn(args) -> None:
         outcomes = [h.exception(timeout=60.0) for h in handles]
         s = live.shutdown()
         print(f"engine[forever] served {s['served']:.0f} frames live "
-              f"({s['fps']:.1f} FPS, backend={args.backend}, "
-              f"lanes={args.lanes}, p50={s['p50_latency_s']*1e3:.1f}ms, "
+              f"({s['fps']:.1f} FPS, backend={spec.backend}, "
+              f"lanes={spec.num_lanes}, p50={s['p50_latency_s']*1e3:.1f}ms, "
               f"p99={s['p99_latency_s']*1e3:.1f}ms, "
               f"futures_resolved={sum(e is None for e in outcomes)}, "
-              f"futures_rejected={sum(e is not None for e in outcomes)})")
+              f"futures_rejected={sum(e is not None for e in outcomes)}, "
+              f"deadline_missed={s['deadline_missed']:.0f}, "
+              f"queue_full={s['queue_full']:.0f}, "
+              f"restarts={s['restarts']:.0f})")
         return
 
     if args.engine:
@@ -83,10 +116,10 @@ def serve_snn(args) -> None:
         for i, arr in enumerate(np.cumsum(gaps)):
             eng.submit(frames[i % args.batch], arrival=float(arr))
         s = eng.run()
-        mode = "threaded" if args.threaded else "virtual"
+        mode = "threaded" if spec.threaded else "virtual"
         print(f"engine[{mode}] served {s['served']:.0f} frames in "
               f"{s['rounds']:.0f} rounds ({s['fps']:.1f} FPS, "
-              f"backend={args.backend}, lanes={args.lanes}, "
+              f"backend={spec.backend}, lanes={spec.num_lanes}, "
               f"p50={s['p50_latency_s']*1e3:.1f}ms, "
               f"p99={s['p99_latency_s']*1e3:.1f}ms, "
               f"balance={s['request_balance']:.3f}, "
@@ -95,7 +128,7 @@ def serve_snn(args) -> None:
 
     s = sess.serve(frames, steps=args.steps)
     print(f"served {s['frames']} frames in {s['seconds']:.2f}s "
-          f"({s['fps']:.1f} FPS, backend={args.backend}, "
+          f"({s['fps']:.1f} FPS, backend={spec.backend}, "
           f"T={cfg.timesteps}, total_spikes/frame={s['spikes_per_frame']:.0f})")
 
 
@@ -133,6 +166,16 @@ def main():
     ap.add_argument("--slo-action", default="reject",
                     choices=("reject", "degrade"),
                     help="what to do with over-budget requests")
+    ap.add_argument("--spec-file", default=None,
+                    help="JSON ServeSpec (api.spec_from_dict; kind='serve') "
+                         "— replaces the per-flag spec; --max-queue/"
+                         "--deadline-ms still layer on top")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded-queue backpressure: live submissions "
+                         "beyond this depth fail fast with QueueFull")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="default per-request deadline in ms; requests "
+                         "expired in queue fail with DeadlineExceeded")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new", type=int, default=32)

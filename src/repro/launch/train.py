@@ -35,24 +35,35 @@ from repro.sharding.context import ShardingCtx, make_rules, use_sharding
 
 
 def train_snn(args) -> None:
+    import json
+
     from repro import api
     from repro.data.synthetic import mnist_like
 
-    spec = api.TrainSpec(
-        backend=args.backend, surrogate_kind=args.surrogate, lr=args.lr,
-        timesteps=args.timesteps or None)
+    if args.spec_file:
+        with open(args.spec_file) as f:
+            spec = api.spec_from_dict(json.load(f))
+        if not isinstance(spec, api.TrainSpec):
+            raise SystemExit(
+                f"--spec-file {args.spec_file} holds a "
+                f"{type(spec).__name__} (kind={spec.KIND!r}); training "
+                f"needs a TrainSpec (kind='train')")
+    else:
+        spec = api.TrainSpec(
+            backend=args.backend, surrogate_kind=args.surrogate, lr=args.lr,
+            timesteps=args.timesteps or None)
     sess = api.Session(args.snn, spec)
     t0 = time.perf_counter()
     for i in range(args.steps):
         x, y = mnist_like(args.batch, seed=i)
         loss = sess.train_step(x, y)
         if i % 10 == 0 or i == args.steps - 1:
-            print(f"step {i:5d} loss {loss:.4f} backend={args.backend}")
+            print(f"step {i:5d} loss {loss:.4f} backend={spec.backend}")
     dt = time.perf_counter() - t0
     xte, yte = mnist_like(256, seed=10_000)
     acc = sess.evaluate(xte, yte)
     print(f"finished {args.steps} SNN steps in {dt:.1f}s "
-          f"(backend={args.backend}, held-out acc {acc*100:.2f}%)")
+          f"(backend={spec.backend}, held-out acc {acc*100:.2f}%)")
 
 
 def main():
@@ -71,6 +82,9 @@ def main():
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--timesteps", type=int, default=0,
                     help="override SNN timesteps (0 = config default)")
+    ap.add_argument("--spec-file", default=None,
+                    help="JSON TrainSpec (api.spec_from_dict; kind='train') "
+                         "— replaces the per-flag SNN spec")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)

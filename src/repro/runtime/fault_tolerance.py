@@ -30,13 +30,28 @@ class RetryPolicy:
     """Bounded-retry budget for a single work unit (the serving-lane
     analogue of ResilientLoop's per-step failure budget).
 
-    ``backoff_s`` sleeps between attempts — real concurrent lanes retrying
-    against a flapping device want to yield the core to their sibling
-    threads rather than hot-loop.  The default 0.0 keeps the deterministic
-    virtual-clock engine sleep-free.
+    ``backoff_s`` is the *base* delay between attempts — real concurrent
+    lanes retrying against a flapping device want to yield the core to
+    their sibling threads rather than hot-loop.  The default 0.0 keeps the
+    deterministic virtual-clock engine sleep-free.  Successive attempts
+    back off exponentially (``backoff_delay``): attempt ``a`` waits
+    ``backoff_s * 2**a`` seconds, capped at ``max_backoff_s`` so an
+    exhausted budget never stretches into an unbounded stall.  The same
+    schedule prices supervised lane *restarts* (serving.supervisor): the
+    k-th restart of a repeatedly-dying lane waits ``backoff_delay(k)``.
     """
     max_retries: int = 2
     backoff_s: float = 0.0
+    max_backoff_s: float = 2.0
+
+    def backoff_delay(self, attempt: int) -> float:
+        """Delay before re-attempting after failure number ``attempt``
+        (0-based).  Deterministic, monotone non-decreasing in ``attempt``,
+        capped at ``max_backoff_s`` (property-tested)."""
+        if self.backoff_s <= 0.0:
+            return 0.0
+        return float(min(self.backoff_s * (2.0 ** max(0, int(attempt))),
+                         self.max_backoff_s))
 
 
 def call_with_retry(fn: Callable[..., Any], *args: Any,
@@ -64,7 +79,7 @@ def call_with_retry(fn: Callable[..., Any], *args: Any,
             if on_failure is not None:
                 on_failure(attempt, e)
             if policy.backoff_s > 0 and attempt < policy.max_retries:
-                time.sleep(policy.backoff_s)
+                time.sleep(policy.backoff_delay(attempt))
     raise RuntimeError(
         f"retry budget ({policy.max_retries}) exhausted") from last
 

@@ -25,17 +25,21 @@ from repro.serving.batcher import (DEFAULT_BUCKETS, DynamicBatcher, JitCache,
 from repro.serving.clock import Clock, VirtualClock, WallClock
 from repro.serving.dispatch import LaneDispatcher, LaneFailed
 from repro.serving.engine import EngineConfig, ServingEngine, serve_frames
-from repro.serving.futures import RequestHandle, SLORejected
+from repro.serving.futures import (Cancelled, DeadlineExceeded, QueueFull,
+                                   RequestHandle, ShutdownTimeout,
+                                   SLORejected)
 from repro.serving.metrics import ServingMetrics, energy_per_image
 from repro.serving.request import Request
+from repro.serving.supervisor import LaneSupervisor
 
 __all__ = [
     "admit", "bucket_size_plan", "predict_workload", "slo_filter",
     "DEFAULT_BUCKETS", "DynamicBatcher", "JitCache", "bucket_for",
     "Clock", "VirtualClock", "WallClock",
-    "LaneDispatcher", "LaneFailed",
+    "LaneDispatcher", "LaneFailed", "LaneSupervisor",
     "EngineConfig", "ServingEngine", "serve_frames",
-    "RequestHandle", "SLORejected",
+    "RequestHandle", "SLORejected", "DeadlineExceeded", "Cancelled",
+    "QueueFull", "ShutdownTimeout",
     "ServingMetrics", "energy_per_image",
     "Request",
 ]

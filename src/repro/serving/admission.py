@@ -249,7 +249,8 @@ def measured_balance(lanes: Sequence[Sequence[Request]]) -> float:
 
 # -- SLO admission control ---------------------------------------------------
 
-def slo_filter(window: Sequence[Request], *, now: float, budget_s: float,
+def slo_filter(window: Sequence[Request], *, now: float,
+               budget_s: Optional[float],
                seconds_per_work: float, num_lanes: int, full_timesteps: int,
                action: str = "reject",
                degrade_timesteps: Optional[int] = None,
@@ -271,13 +272,25 @@ def slo_filter(window: Sequence[Request], *, now: float, budget_s: float,
     met its budget (ServingEngine._delay_model fits both terms from
     measured micro-batches).
 
+    Each request's *limit* is the tighter of the engine-wide ``budget_s``
+    (None = unbounded) and its own ``deadline_s`` — a per-request deadline
+    prices exactly like a personal SLO budget, so ``degrade`` can fire on a
+    per-request basis even on an engine with no global budget.  When the
+    deadline is the binding constraint, the dropped request is flagged
+    ``deadline_missed`` (the engine fails its handle with
+    ``DeadlineExceeded`` rather than ``SLORejected`` and counts it
+    separately).
+
     A request that already burned a failed execution (``r.retries > 0``,
     i.e. its lane died and the micro-batch was re-queued) was admitted once
     and is never re-litigated: re-queued work is served, not re-rejected —
     the engine's no-request-lost guarantee depends on this.  It still
     counts toward the cumulative work pricing everyone behind it.
+    (Deadline *expiry* is different — the queue sweep drops an expired
+    request whether or not it was re-queued; a lane failure does not extend
+    a client's deadline.)
 
-    A request over ``budget_s``:
+    A request over its limit:
 
       * ``action="reject"``  — dropped (``r.rejected = True``);
       * ``action="degrade"`` — served with ``degrade_timesteps`` instead of
@@ -299,9 +312,13 @@ def slo_filter(window: Sequence[Request], *, now: float, budget_s: float,
     degraded = 0
     cum_work = float(backlog_work)
     lanes = max(1, int(num_lanes))
+    engine_budget = float("inf") if budget_s is None else float(budget_s)
     for r in window:
         t_r = r.timesteps if r.timesteps is not None else full_timesteps
         eff = r.workload * (t_r / full_timesteps)
+        limit = engine_budget
+        if r.deadline_s is not None:
+            limit = min(limit, float(r.deadline_s))
         if r.retries > 0:             # re-queued after a lane death: always
             admitted.append(r)        # served (admitted once already)
             cum_work += eff
@@ -309,10 +326,12 @@ def slo_filter(window: Sequence[Request], *, now: float, budget_s: float,
         waited = max(0.0, now - r.arrival)
         delay = (batch_quantum_s
                  + (cum_work + eff) * seconds_per_work / lanes)
-        if waited + delay <= budget_s:
+        if waited + delay <= limit:
             admitted.append(r)
             cum_work += eff
             continue
+        deadline_bound = (r.deadline_s is not None
+                          and waited + delay > float(r.deadline_s))
         if action == "degrade":
             if degrade_timesteps is not None and degrade_timesteps < t_r:
                 r.timesteps = int(degrade_timesteps)
@@ -323,5 +342,7 @@ def slo_filter(window: Sequence[Request], *, now: float, budget_s: float,
             admitted.append(r)        # degrade mode never drops a request
         else:
             r.rejected = True
+            if deadline_bound:
+                r.deadline_missed = True
             rejected.append(r)
     return admitted, rejected, degraded

@@ -168,6 +168,34 @@ class DynamicBatcher:
         with self._lock:
             return self._queue[0].arrival if self._queue else None
 
+    def earliest_deadline(self) -> Optional[float]:
+        """Earliest absolute expiry among queued requests (None when no
+        queued request carries a deadline) — the scheduler parks no longer
+        than this so an expiring request fails *at* its deadline instead of
+        at the next unrelated event."""
+        with self._lock:
+            ds = [r.expires_at for r in self._queue
+                  if r.deadline_s is not None]
+        return min(ds) if ds else None
+
+    def sweep(self, now: float) -> List[Request]:
+        """Drop cancelled and deadline-expired requests from the queue (in
+        FIFO order) and return them — the scheduler fails their handles
+        (expired) or simply discards them (cancelled handles were already
+        failed by ``cancel()``).  Requests re-queued after a lane death are
+        swept like any other: their deadline is a client contract that a
+        lane failure does not extend."""
+        dropped: List[Request] = []
+        with self._lock:
+            kept: Deque[Request] = deque()
+            for r in self._queue:
+                if r.cancelled or r.expired(now):
+                    dropped.append(r)
+                else:
+                    kept.append(r)
+            self._queue = kept
+        return dropped
+
     def take_window(self, t: float, num_lanes: int) -> List[Request]:
         """FIFO prefix of arrived requests, at most max_batch per lane."""
         cap = self.max_batch * max(1, int(num_lanes))

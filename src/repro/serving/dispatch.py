@@ -86,6 +86,16 @@ class LaneDispatcher:
         with self._lock:
             self.lanes[lane].alive = False
 
+    def revive(self, lane: int, t: float = 0.0) -> None:
+        """Return a supervisor-restarted lane to service.  Served/busy
+        counters survive the restart (they describe the lane's lifetime);
+        ``free_at`` resets to ``t`` so the virtual-time model doesn't bill
+        the new worker for the dead one's phantom backlog."""
+        with self._lock:
+            l = self.lanes[lane]
+            l.alive = True
+            l.free_at = float(t)
+
     def rank(self, lanes: Sequence[int]) -> List[int]:
         """``lanes`` reordered fastest-first by the monitor's measured EWMAs
         — this is where measured per-lane latency re-enters the CBWS

@@ -48,12 +48,22 @@ The public way to construct and drive this engine is the ``repro.api``
 facade (``ServeSpec`` -> ``Session.engine()`` / ``Session.serve_forever()``);
 ``EngineConfig`` is the internal record a ``ServeSpec`` lowers onto.
 
-Lane failures (injected via ``EngineConfig.fault_hook`` or real) burn the
-retry budget in ``runtime.fault_tolerance``; a dead lane's micro-batch is
-re-queued at the FIFO head and served by the survivors — in the threaded
-engine the kill lands mid-flight on the worker thread and the batch drains
-back through the completion queue, so no request is ever lost or served
-twice (tests/test_serving_threaded.py chaos-tests this).
+Lane failures (injected via ``EngineConfig.fault_hook`` / a seeded
+``EngineConfig.fault_plan``, or real) burn the retry budget in
+``runtime.fault_tolerance``; a dead lane's micro-batch is re-queued at the
+FIFO head and served by the survivors — in the threaded engine the kill
+lands mid-flight on the worker thread and the batch drains back through the
+completion queue, so no request is ever lost or served twice
+(tests/test_serving_threaded.py and tests/test_serving_faults.py chaos-test
+this).  With ``EngineConfig.restart_budget > 0`` the threaded engine's
+scheduler additionally *supervises* its lanes (``serving.supervisor``): a
+dead lane is restarted with a fresh warmed cache fork after an exponential
+capped backoff, up to the budget, and only then stays dead; hung workers
+(``hang_timeout_s``) are escalated to deaths via heartbeats.  Requests can
+carry deadlines (failed with ``DeadlineExceeded`` when they expire in queue
+or price unmeetable), live handles can be cancelled, and the live queue can
+be bounded (``max_queue`` -> ``QueueFull`` at submit) — every outcome
+resolves each request exactly once.
 
 Padding correctness: micro-batches pad up to bucket sizes with zero frames.
 Zero-init biases keep pad rows silent, but *trained* supra-threshold biases
@@ -76,14 +86,18 @@ import numpy as np
 from repro.config import SNNConfig
 from repro.core.balance import balance_ratio
 from repro.runtime.fault_tolerance import RetryPolicy
+from repro.runtime.faults import FaultInjector, FaultPlan
 from repro.serving import admission
 from repro.serving.batcher import (DEFAULT_BUCKETS, DynamicBatcher, JitCache,
                                    bucket_for, pad_frames)
 from repro.serving.clock import VirtualClock, WallClock
 from repro.serving.dispatch import LaneDispatcher, LaneFailed
-from repro.serving.futures import RequestHandle, SLORejected
+from repro.serving.futures import (Cancelled, DeadlineExceeded, QueueFull,
+                                   RequestHandle, ShutdownTimeout,
+                                   SLORejected)
 from repro.serving.metrics import ServingMetrics, energy_per_image
 from repro.serving.request import Request
+from repro.serving.supervisor import LaneSupervisor
 
 __all__ = ["EngineConfig", "ServingEngine", "serve_frames"]
 
@@ -121,8 +135,27 @@ class EngineConfig:
     # marginal seconds-per-work, so tight budgets admit more (the historical
     # quantum-free model priced the fixed cost once per *request*)
     slo_batch_quantum_s: Optional[float] = None
+    # bounded-queue backpressure: submit_live() raises QueueFull once this
+    # many requests are already queued (None = unbounded, historical)
+    max_queue: Optional[int] = None
+    # default per-request deadline (s after arrival) applied to submissions
+    # that don't carry their own; None = no deadline unless the client sets
+    # one (Request.deadline_s)
+    default_deadline_s: Optional[float] = None
+    # lane supervision (threaded engine): restarts per lane before a death
+    # becomes permanent, base of the exponential capped restart backoff, and
+    # the heartbeat silence after which a busy lane is presumed hung (None
+    # disables hang detection).  restart_budget=0 keeps the historical
+    # one-way-death semantics.
+    restart_budget: int = 0
+    restart_backoff_s: float = 0.05
+    hang_timeout_s: Optional[float] = None
     # test/chaos hooks
     fault_hook: Optional[Callable[[int, int], None]] = None
+    # deterministic seeded chaos (runtime.faults): crashes/transients become
+    # the dispatcher fault hook (chained before fault_hook), slow lanes scale
+    # service time.  Storms are driver-level (FaultPlan.storm_arrivals).
+    fault_plan: Optional[FaultPlan] = None
     # maps (lane, measured wall s) -> virtual service s; tests inject
     # deterministic lane speeds here, default is the wall measurement
     # (virtual clock only — the threaded engine serves on measured time)
@@ -140,6 +173,20 @@ class ServingEngine:
             raise ValueError(
                 f"degrade_timesteps must be >= 1, got {ecfg.degrade_timesteps}"
                 " (a zero-timestep network cannot run)")
+        if ecfg.max_queue is not None and ecfg.max_queue < 1:
+            raise ValueError(
+                f"max_queue must be >= 1 (or None for unbounded), "
+                f"got {ecfg.max_queue}")
+        if ecfg.default_deadline_s is not None and ecfg.default_deadline_s <= 0:
+            raise ValueError(
+                f"default_deadline_s must be positive, "
+                f"got {ecfg.default_deadline_s}")
+        if ecfg.restart_budget < 0:
+            raise ValueError(
+                f"restart_budget must be >= 0, got {ecfg.restart_budget}")
+        if ecfg.restart_backoff_s < 0:
+            raise ValueError(
+                f"restart_backoff_s must be >= 0, got {ecfg.restart_backoff_s}")
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
@@ -149,14 +196,26 @@ class ServingEngine:
             self._schedule = build_schedule(params, cfg, ecfg.schedule_mode)
         self.cache = JitCache(params, cfg, schedule=self._schedule)
         self.batcher = DynamicBatcher(ecfg.max_batch, ecfg.buckets)
+        # seeded chaos: the plan's crash/transient hook chains *before* any
+        # user fault_hook; slow-lane multipliers are queried at service time
+        self._injector: Optional[FaultInjector] = None
+        hook = ecfg.fault_hook
+        if ecfg.fault_plan is not None:
+            self._injector = FaultInjector(ecfg.fault_plan, ecfg.num_lanes)
+            hook = self._injector.chain(ecfg.fault_hook)
         self.dispatcher = LaneDispatcher(
             ecfg.num_lanes,
             retry=RetryPolicy(max_retries=ecfg.max_retries,
                               backoff_s=ecfg.retry_backoff_s),
-            straggler_z=ecfg.straggler_z, fault_hook=ecfg.fault_hook)
+            straggler_z=ecfg.straggler_z, fault_hook=hook)
+        self.supervisor = LaneSupervisor(
+            ecfg.num_lanes, restart_budget=ecfg.restart_budget,
+            policy=RetryPolicy(backoff_s=ecfg.restart_backoff_s),
+            hang_timeout_s=ecfg.hang_timeout_s)
         self.metrics = ServingMetrics()
         self.completed: List[Request] = []
         self.rejected: List[Request] = []
+        self.expired: List[Request] = []   # deadline-expired in queue
         self._chan_w = admission.layer0_channel_weights(params)
         self._next_rid = 0
         self._submitted: List[Request] = []
@@ -186,18 +245,25 @@ class ServingEngine:
         self._live_summary: Optional[Dict[str, float]] = None
 
     # -- submission ---------------------------------------------------------
-    def _make_request(self, frame: np.ndarray, arrival: float) -> Request:
+    def _make_request(self, frame: np.ndarray, arrival: float,
+                      deadline_s: Optional[float] = None) -> Request:
         frame = np.asarray(frame, dtype=np.float32)
         with self._rid_lock:
             rid = self._next_rid
             self._next_rid += 1
+        if deadline_s is None:
+            deadline_s = self.ecfg.default_deadline_s
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s must be positive, got {deadline_s}")
         return Request(
             rid=rid, frame=frame, arrival=float(arrival),
+            deadline_s=None if deadline_s is None else float(deadline_s),
             workload=admission.predict_workload(frame, self._chan_w,
                                                 self.cfg.timesteps),
             events=float(self.cfg.timesteps) * float(frame.sum()))
 
-    def submit(self, frame: np.ndarray, arrival: float = 0.0) -> int:
+    def submit(self, frame: np.ndarray, arrival: float = 0.0,
+               deadline_s: Optional[float] = None) -> int:
         if self._live_thread is not None:
             # the trace list is snapshotted once when the scheduler starts —
             # appending now would silently black-hole the request
@@ -205,18 +271,24 @@ class ServingEngine:
                 "engine is live (serve_forever running): use submit_live() "
                 "— trace submit() is only read when run()/serve_forever() "
                 "starts")
-        req = self._make_request(frame, arrival)
+        req = self._make_request(frame, arrival, deadline_s)
         self._submitted.append(req)
         return req.rid
 
-    def submit_live(self, frame: np.ndarray) -> RequestHandle:
+    def submit_live(self, frame: np.ndarray,
+                    deadline_s: Optional[float] = None) -> RequestHandle:
         """Submit one frame to a *running* engine (``serve_forever``).
 
         Returns a future-style ``RequestHandle``: ``result(timeout)`` blocks
         for the logits, raises ``SLORejected`` if admission dropped the
-        request, or re-raises the engine failure if serving died.  Arrival
-        is stamped off the live wall clock; thread-safe (any client thread
-        may call this concurrently).
+        request, ``DeadlineExceeded``/``Cancelled`` per the handle's fate,
+        or re-raises the engine failure if serving died.  ``deadline_s``
+        (seconds after arrival; default ``EngineConfig.default_deadline_s``)
+        is the client's latency contract.  Raises ``QueueFull`` *here* —
+        fail-fast backpressure, no handle created — when the bounded queue
+        (``EngineConfig.max_queue``) is at capacity.  Arrival is stamped off
+        the live wall clock; thread-safe (any client thread may call this
+        concurrently).
         """
         if self._live_thread is None or self._stop is None:
             raise RuntimeError(
@@ -234,13 +306,40 @@ class ServingEngine:
             if self._stop.is_set():
                 raise RuntimeError(
                     "engine is shutting down; no new submissions")
-            req = self._make_request(frame, self._live_clock.now())
+            depth = len(self.batcher)
+            if self.ecfg.max_queue is not None \
+                    and depth >= self.ecfg.max_queue:
+                self.metrics.queue_full += 1
+                raise QueueFull(depth, self.ecfg.max_queue)
+            req = self._make_request(frame, self._live_clock.now(),
+                                     deadline_s)
             handle = RequestHandle(req)
+            handle._canceller = lambda rid=req.rid: self._cancel_live(rid)
             with self._futures_lock:
                 self._futures[req.rid] = handle
             self.batcher.push(req)
+            self.metrics.note_depth(depth + 1)
         self._completions.put(("wake",))      # unpark the scheduler
         return handle
+
+    def _cancel_live(self, rid: int) -> bool:
+        """Attempt a client cancel (``RequestHandle.cancel``).  The
+        ``in_flight`` check and the handle pop are atomic under the futures
+        lock — the same lock dispatch takes to set ``in_flight`` — so a
+        cancel either wins (handle fails ``Cancelled``, the queued request
+        is dropped at the next sweep) or cleanly refuses; it can never race
+        a dispatch into a double resolution."""
+        with self._futures_lock:
+            h = self._futures.get(rid)
+            if h is None or h.request.in_flight:
+                return False
+            del self._futures[rid]
+            h.request.cancelled = True
+        self.metrics.cancelled += 1
+        h._fail(Cancelled(h.request))
+        if self._completions is not None:
+            self._completions.put(("wake",))   # let the scheduler sweep it
+        return True
 
     def update_params(self, params: Dict) -> None:
         """Swap the served params in place (same pytree structure).
@@ -287,10 +386,35 @@ class ServingEngine:
             h._resolve(np.array(logits_row, copy=True))
 
     def _fail_rejected(self, rejected: Sequence[Request]) -> None:
+        """Admission drops: ``DeadlineExceeded`` when the request's own
+        deadline was the binding constraint (``slo_filter`` flags it),
+        ``SLORejected`` when the engine-wide budget was."""
         for r in rejected:
+            if r.deadline_missed:
+                self.metrics.deadline_missed += 1
             h = self._pop_handle(r.rid)
             if h is not None:
-                h._fail(SLORejected(r))
+                h._fail(DeadlineExceeded(r) if r.deadline_missed
+                        else SLORejected(r))
+
+    def _fail_expired(self, expired: Sequence[Request]) -> None:
+        """Queue-expired requests: the deadline passed before dispatch."""
+        for r in expired:
+            r.deadline_missed = True
+            self.metrics.deadline_missed += 1
+            self.expired.append(r)
+            h = self._pop_handle(r.rid)
+            if h is not None:
+                h._fail(DeadlineExceeded(r))
+
+    def _sweep_queue(self, now: float) -> None:
+        """Drop cancelled/expired requests from the FIFO queue.  Cancelled
+        handles already failed inside ``cancel()``; expired ones fail here
+        with ``DeadlineExceeded`` — either way the request leaves the system
+        having resolved exactly once."""
+        swept = self.batcher.sweep(now)
+        if swept:
+            self._fail_expired([r for r in swept if not r.cancelled])
 
     def _fail_outstanding(self, exc: BaseException) -> None:
         """Engine-fatal: every unresolved live handle fails with the cause
@@ -420,7 +544,22 @@ class ServingEngine:
         """
         t_full = self.cfg.timesteps
         ecfg = self.ecfg
-        if ecfg.latency_budget_s is not None:
+        # cancelled/expired requests can reach a window when the clock jumps
+        # past their fate between sweep and take_window — drop them here so
+        # a lane never burns service time on a dead request
+        live_window: List[Request] = []
+        for r in window:
+            if r.cancelled:
+                continue
+            if r.expired(now):
+                self._fail_expired([r])
+                continue
+            live_window.append(r)
+        window = live_window
+        # a per-request deadline prices like a personal budget, so the SLO
+        # filter runs even on engines with no global latency_budget_s
+        if ecfg.latency_budget_s is not None \
+                or any(r.deadline_s is not None for r in window):
             model = self._delay_model()
             if model is not None:
                 quantum, spw = model
@@ -500,8 +639,15 @@ class ServingEngine:
         self._submitted = []
         window_idx = 0
         last_failure: Optional[Exception] = None
+        # lane -> (predicted eff work, finish time) of its last micro-batch:
+        # work still in flight at admission time is backlog the SLO delay
+        # model must price (a busy lane delays everything queued behind it)
+        busy_work: Dict[int, Tuple[float, float]] = {}
         while len(self.batcher):
             t = clock.now()
+            self._sweep_queue(t)
+            if not len(self.batcher):
+                break
             ready = self.dispatcher.ready(t)
             na = self.batcher.next_arrival()
             arrived = na is not None and na <= t
@@ -512,17 +658,29 @@ class ServingEngine:
                     nxt.append(nf)
                 if na is not None and na > t:
                     nxt.append(na)
+                # a queued deadline can expire before any lane frees — the
+                # sweep must run *at* that moment, not at the next unrelated
+                # event (the expiry may BE the next event)
+                ed = self.batcher.earliest_deadline()
+                if ed is not None and ed > t:
+                    nxt.append(ed)
                 if not nxt:
                     if not self.dispatcher.alive():
                         raise RuntimeError(
                             "all serving lanes failed") from last_failure
                     raise RuntimeError("serving engine stalled")
                 clock.advance_to(min(nxt))
+                # nudge past an exact-deadline instant so expired() (strict
+                # inequality) observes it on the next sweep
+                if ed is not None and min(nxt) == ed:
+                    clock.advance_to(ed + 1e-9)
                 continue
 
             depth = len(self.batcher)
             window = self.batcher.take_window(t, len(ready))
-            dispatchable, predicted = self._admit_window(window, len(ready), t)
+            backlog = sum(w for w, f in busy_work.values() if f > t)
+            dispatchable, predicted = self._admit_window(
+                window, len(ready), t, backlog_work=backlog)
             if not dispatchable:
                 continue                      # whole window rejected
             # heaviest micro-batch -> measured-fastest lane: CBWS placement
@@ -557,7 +715,13 @@ class ServingEngine:
                     continue
                 svc = (self.ecfg.service_time_fn(lane, wall)
                        if self.ecfg.service_time_fn else wall)
+                if self._injector is not None:
+                    # planned slow lane: scale the committed virtual service
+                    # time (the threaded engine sleeps the difference)
+                    svc *= self._injector.latency_multiplier(lane)
                 finish = self.dispatcher.commit(lane, t, svc, len(grp))
+                busy_work[lane] = (sum(self._eff_work(r) for r in grp),
+                                   finish)
                 self._accumulate(out.timestep_counts, bucket - len(grp),
                                  tsteps)
                 logits = np.asarray(out.logits)
@@ -597,6 +761,10 @@ class ServingEngine:
             if item is None:
                 return
             grp, tsteps, widx, t_disp = item
+            # heartbeat: picked up work — the supervisor's hang detector
+            # measures silence from here (it cannot beat mid-execution, so
+            # hang_timeout_s must exceed the worst-case micro-batch)
+            self.supervisor.beat(lane, clock.now())
             counts = {"retries": 0}
 
             def on_retry(attempt, exc, grp=grp):
@@ -624,6 +792,15 @@ class ServingEngine:
                 completions.put(("failed", lane, grp, LaneFailed(lane, e),
                                  counts["retries"], widx))
                 return
+            if self._injector is not None:
+                # planned slow lane: really sleep the extra latency so the
+                # wall-clock engine degrades the way the plan says, and
+                # report the inflated service time to the delay model
+                mult = self._injector.latency_multiplier(lane)
+                if mult > 1.0:
+                    time.sleep((mult - 1.0) * wall)
+                    wall *= mult
+            self.supervisor.beat(lane, clock.now())
             completions.put((
                 "done", lane, grp, tsteps, widx, t_disp, clock.now(),
                 np.asarray(out.logits),
@@ -689,7 +866,12 @@ class ServingEngine:
 
         busy: set = set()
         inflight_work: Dict[int, float] = {}   # lane -> dispatched eff work
+        inflight_items: Dict[int, Tuple] = {}  # lane -> (grp, window idx)
+        abandoned: set = set()                 # id(grp) of hang-escalated
+        #                                      # dispatches: the zombie's
+        #                                      # eventual report is discarded
         window_idx = 0
+        restart_gen = [0]
         state: Dict[str, Optional[Exception]] = {"last_failure": None}
         # per-window accounting so round balance is recorded — exactly as in
         # the virtual loop — over the groups that actually *executed*
@@ -707,18 +889,52 @@ class ServingEngine:
                           if multi else None),
                 lane_wall=rs["lane_wall"])
 
+        def restart_lane(lane: int) -> None:
+            """Supervised recovery: fresh warmed cache fork, fresh inbox,
+            new worker thread.  The dead worker already exited (it posts its
+            failure and returns), so its inbox is simply abandoned; the
+            fork shares every executable the warm shared cache compiled, so
+            a restarted lane serves its first micro-batch without a trace."""
+            restart_gen[0] += 1
+            caches[lane] = self.cache.fork()
+            inboxes[lane] = queue_mod.Queue()
+            wkr = threading.Thread(
+                target=self._lane_worker,
+                args=(lane, caches[lane], clock, inboxes[lane], completions),
+                name=f"serving-lane-{lane}-r{restart_gen[0]}", daemon=True)
+            workers[lane] = wkr
+            wkr.start()
+            t_up = clock.now()
+            self.dispatcher.revive(lane, t_up)
+            recovery = self.supervisor.on_restarted(lane, t_up)
+            self.metrics.record_restart(recovery, t_up)
+
         def handle(item) -> None:
             if item[0] == "wake":         # live submit()/shutdown() unpark
                 return
-            kind, lane = item[0], item[1]
+            kind, lane, grp = item[0], item[1], item[2]
+            if id(grp) in abandoned:
+                # a presumed-hung zombie finally reported: its micro-batch
+                # was already re-queued (and possibly re-served elsewhere) —
+                # discard the report wholesale, done or failed, or requests
+                # would resolve twice
+                abandoned.discard(id(grp))
+                return
             busy.discard(lane)
             inflight_work.pop(lane, None)
+            inflight_items.pop(lane, None)
             if kind == "failed":
                 _, _, grp, exc, retries, widx = item
                 state["last_failure"] = exc
                 self.metrics.retries += retries
-                # dead lane: requests keep FIFO priority on survivors
+                # dead lane: requests keep FIFO priority on survivors (or on
+                # this lane's supervised replacement), and become cancellable
+                # again while they wait
+                with self._futures_lock:
+                    for r in grp:
+                        r.in_flight = False
                 self.batcher.push_front(grp)
+                self.supervisor.on_death(lane, clock.now())
             else:
                 (_, _, grp, tsteps, widx, t_disp, t_done, logits, tcs,
                  bucket, wall, retries) = item
@@ -728,6 +944,11 @@ class ServingEngine:
                 for j, r in enumerate(grp):
                     r.start, r.finish, r.lane, r.window = (t_disp, t_done,
                                                            lane, widx)
+                    if r.cancelled:
+                        # lost the dispatch race by a hair: the handle
+                        # already failed with Cancelled — don't double-count
+                        # it as served
+                        continue
                     if ecfg.keep_logits:
                         r.logits = logits[j]
                     self.metrics.record_completion(r.arrival, r.finish)
@@ -756,8 +977,37 @@ class ServingEngine:
                         handle(completions.get_nowait())
                     except queue_mod.Empty:
                         break
+                now = clock.now()
+                self._sweep_queue(now)
+                # supervised recovery: bring restart-due lanes back before
+                # forming a window, so they take traffic this iteration
+                for lane in self.supervisor.due_restarts(now):
+                    restart_lane(lane)
+                # hang escalation: a busy lane silent past hang_timeout_s is
+                # presumed stuck — re-queue its micro-batch and treat the
+                # lane as dead (Python cannot kill the thread; its eventual
+                # report is discarded via the abandoned set)
+                for lane in self.supervisor.stale(now, list(busy)):
+                    if lane not in busy:
+                        continue
+                    self.dispatcher.mark_dead(lane)
+                    grp, widx = inflight_items.pop(lane)
+                    abandoned.add(id(grp))
+                    busy.discard(lane)
+                    inflight_work.pop(lane, None)
+                    state["last_failure"] = RuntimeError(
+                        f"lane {lane} presumed hung: no heartbeat in "
+                        f"{self.supervisor.hang_timeout_s}s")
+                    with self._futures_lock:
+                        for r in grp:
+                            r.in_flight = False
+                    self.batcher.push_front(grp)
+                    self.supervisor.on_death(lane, now)
+                    rounds[widx]["pending"] -= 1
+                    if rounds[widx]["pending"] == 0:
+                        finish_round(widx)
                 alive = self.dispatcher.alive()
-                if not alive:
+                if not alive and not self.supervisor.pending_restarts():
                     # drain the final failure completion (the worker marks
                     # its lane dead *before* posting, so the item carrying
                     # the micro-batch + cause may still be in transit)
@@ -786,41 +1036,43 @@ class ServingEngine:
                             busy.add(lane)
                             inflight_work[lane] = sum(self._eff_work(r)
                                                       for r in grp)
+                            inflight_items[lane] = (grp, window_idx)
+                            # cancel barrier: from here the dispatch owns
+                            # these requests — cancel() refuses
+                            with self._futures_lock:
+                                for r in grp:
+                                    r.in_flight = True
                             inboxes[lane].put(
                                 (grp, tsteps, window_idx, clock.now()))
                         window_idx += 1
                     continue
-                # nothing dispatchable: park until the next event
-                if busy:
-                    timeout = None
-                    if pending:
-                        timeout = max(0.0, pending[0].arrival - clock.now())
+                # nothing dispatchable: park until the next timed event — a
+                # replayed arrival, a queued deadline expiring, an owed lane
+                # restart, or a hang-detection check — interruptibly
+                # whenever completions/wake sentinels can land, so neither
+                # expiry nor recovery waits on an unrelated event
+                bounds = []
+                if pending:
+                    bounds.append(pending[0].arrival)
+                ed = self.batcher.earliest_deadline()
+                if ed is not None:
+                    bounds.append(ed)
+                ra = self.supervisor.next_restart_at()
+                if ra is not None:
+                    bounds.append(ra)
+                if busy and self.supervisor.hang_timeout_s is not None:
+                    bounds.append(now + self.supervisor.hang_timeout_s)
+                if busy or live_running or ra is not None or ed is not None:
+                    timeout = (max(0.0, min(bounds) - clock.now())
+                               if bounds else (0.5 if live_running else None))
                     try:
                         handle(completions.get(timeout=timeout))
                     except queue_mod.Empty:
                         pass
                 elif pending:
-                    if live:
-                        # interruptible wait: submit_live()/shutdown() wake
-                        # sentinels must not be deaf until the next replayed
-                        # arrival lands
-                        try:
-                            handle(completions.get(timeout=max(
-                                0.0, pending[0].arrival - clock.now())))
-                        except queue_mod.Empty:
-                            pass
-                    else:
-                        clock.sleep_until(pending[0].arrival)
+                    clock.sleep_until(pending[0].arrival)
                 elif len(self.batcher):
                     continue        # re-queued failures: loop re-dispatches
-                elif live_running:
-                    # idle live engine: park on the completion queue —
-                    # submit_live()/shutdown() post a wake sentinel, so this
-                    # never busy-waits (the timeout is only a safety net)
-                    try:
-                        handle(completions.get(timeout=0.5))
-                    except queue_mod.Empty:
-                        pass
                 else:
                     break
         finally:
@@ -888,7 +1140,15 @@ class ServingEngine:
         request and in-flight micro-batch drains (futures resolve), the
         scheduler and lane workers join.  Returns the metrics summary;
         re-raises the engine failure if serving died (after failing every
-        outstanding handle, so no client hangs)."""
+        outstanding handle, so no client hangs).
+
+        If the scheduler cannot drain within ``timeout``, every outstanding
+        handle fails with ``ShutdownTimeout`` *before* this raises — a
+        client blocked in ``result()`` learns its fate instead of hanging
+        forever.  Should the wedged scheduler later limp through a stray
+        completion, the resolution is a no-op (its handle was already
+        popped), so the exactly-once guarantee survives the timeout path
+        too."""
         if self._live_thread is None:
             raise RuntimeError("engine is not live (serve_forever not running)")
         with self._submit_lock:
@@ -897,8 +1157,10 @@ class ServingEngine:
         self._live_thread.join(timeout)
         still_running = self._live_thread.is_alive()
         if still_running:
-            raise RuntimeError(
+            exc = ShutdownTimeout(
                 f"live scheduler did not drain within {timeout}s")
+            self._fail_outstanding(exc)
+            raise exc
         self._live_thread = None
         if self._live_error is not None:
             raise self._live_error
@@ -958,6 +1220,8 @@ class ServingEngine:
         s = self.metrics.summary()
         s["compiles"] = self.cache.compiles + self._lane_compiles
         s["dead_lanes"] = len(self.dispatcher.lanes) - len(self.dispatcher.alive())
+        s["permanently_dead_lanes"] = float(
+            len(self.supervisor.permanently_dead()))
         if self._tc_accum is not None and self.metrics.served:
             s.update(energy_per_image(self.cfg, self.params, self._tc_accum,
                                       self.metrics.served))

@@ -36,6 +36,17 @@ class ServingMetrics:
     degraded: int = 0                 # served with reduced timesteps (SLO)
     first_arrival: float = float("inf")
     last_finish: float = 0.0
+    # fault tolerance / graceful degradation (serving.supervisor + engine)
+    restarts: int = 0                 # supervised lane restarts
+    recovery_s: List[float] = field(default_factory=list)
+    #                                 # per-restart time-to-recovery (death ->
+    #                                 # lane serving again)
+    restart_times: List[float] = field(default_factory=list)
+    #                                 # engine-clock times lanes came back
+    deadline_missed: int = 0          # expired in queue / unmeetable deadline
+    cancelled: int = 0                # client-cancelled before dispatch
+    queue_full: int = 0               # submissions refused (bounded queue)
+    queue_watermark: int = 0          # max queue depth ever observed
 
     def record_round(self, *, queue_depth: int,
                      predicted: Optional[float] = None,
@@ -46,12 +57,28 @@ class ServingMetrics:
         pass None to skip them; queue depth is recorded every round."""
         self.rounds += 1
         self.queue_depths.append(int(queue_depth))
+        self.note_depth(queue_depth)
         if predicted is not None:
             self.predicted_balances.append(float(predicted))
         if measured is not None:
             self.measured_balances.append(float(measured))
         if len(lane_wall) >= 2:
             self.wall_balances.append(balance_ratio(lane_wall))
+
+    def note_depth(self, depth: int) -> None:
+        """Update the queue high-watermark (sampled at submit time and at
+        every admission round) — the backpressure signal ``max_queue``
+        should be tuned against."""
+        if depth > self.queue_watermark:
+            self.queue_watermark = int(depth)
+
+    def record_restart(self, recovery_s: float, at: float) -> None:
+        """One supervised lane restart: ``recovery_s`` is death-to-serving
+        time (the backoff delay plus scheduler latency), ``at`` the
+        engine-clock instant the lane came back."""
+        self.restarts += 1
+        self.recovery_s.append(float(recovery_s))
+        self.restart_times.append(float(at))
 
     def record_completion(self, arrival: float, finish: float) -> None:
         self.served += 1
@@ -76,6 +103,15 @@ class ServingMetrics:
             "mean_queue_depth": float(np.mean(self.queue_depths))
             if self.queue_depths else 0.0,
             "max_queue_depth": float(max(self.queue_depths, default=0)),
+            # fault tolerance / graceful degradation
+            "restarts": float(self.restarts),
+            "mean_recovery_s": float(np.mean(self.recovery_s))
+            if self.recovery_s else 0.0,
+            "max_recovery_s": float(max(self.recovery_s, default=0.0)),
+            "deadline_missed": float(self.deadline_missed),
+            "cancelled": float(self.cancelled),
+            "queue_full": float(self.queue_full),
+            "queue_watermark": float(self.queue_watermark),
             # mean over multi-lane rounds only; balance_rounds says how many
             # samples back it (0 -> the 1.0 default is vacuous, not measured)
             "balance_rounds": float(len(self.measured_balances)),

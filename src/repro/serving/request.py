@@ -26,9 +26,21 @@ class Request:
     workload: float = 0.0             # APRC-predicted relative workload
     events: float = 0.0               # measured input events (T * frame.sum())
 
+    # client latency contract: seconds after arrival by which the result is
+    # useless (None = no deadline).  Expired requests are dropped at queue
+    # sweep / admission and their handles fail with DeadlineExceeded.
+    deadline_s: Optional[float] = None
+
     # SLO admission outcome (set by admission.slo_filter)
     timesteps: Optional[int] = None   # degraded T (None -> cfg.timesteps)
     rejected: bool = False            # dropped at admission (over budget)
+    deadline_missed: bool = False     # dropped because its deadline was the
+                                      # binding constraint (expired in queue
+                                      # or priced over it at admission)
+    cancelled: bool = False           # client cancelled before dispatch
+    in_flight: bool = False           # dispatched to a lane (cancel barrier:
+                                      # set under the engine's futures lock,
+                                      # after which cancel() refuses)
 
     # filled in by the engine at dispatch/completion
     start: float = -1.0               # dispatch time on the engine clock
@@ -49,3 +61,13 @@ class Request:
     @property
     def degraded(self) -> bool:
         return self.timesteps is not None
+
+    @property
+    def expires_at(self) -> float:
+        """Engine-clock time after which this request is dead (inf = never)."""
+        if self.deadline_s is None:
+            return float("inf")
+        return self.arrival + self.deadline_s
+
+    def expired(self, now: float) -> bool:
+        return now > self.expires_at

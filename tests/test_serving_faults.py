@@ -1,0 +1,531 @@
+"""Fault injection, lane supervision, deadlines, backpressure — the
+robustness layer (runtime.faults + serving.supervisor + engine plumbing).
+
+Everything here is deterministic or event-gated: seeded FaultPlans replay
+bit-identically, live-mode races are closed with a blocking fault hook
+(``_Gate``) instead of sleeps.  The chaos acceptance test
+(``test_threaded_crash_restart_acceptance``) kills every lane once
+mid-epoch and requires full conservation plus post-restart service.
+
+``CHAOS_SEED=<n>`` (the nightly chaos job's randomized seed) adds one
+extra sampled-plan conservation case; a red run replays locally as
+``CHAOS_SEED=<n> pytest tests/test_serving_faults.py -k sampled``.
+"""
+import dataclasses
+import json
+import os
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro import api
+from repro.config import get_snn
+from repro.core import init_snn
+from repro.runtime.fault_tolerance import RetryPolicy
+from repro.runtime.faults import (FaultInjector, FaultPlan, InjectedCrash,
+                                  InjectedTransient)
+from repro.serving import (Cancelled, DeadlineExceeded, EngineConfig,
+                           LaneSupervisor, QueueFull, ServingEngine,
+                           ShutdownTimeout)
+
+
+def _tiny_cfg():
+    return dataclasses.replace(
+        get_snn("snn-mnist"), input_hw=(8, 8), conv_channels=(8, 8),
+        timesteps=3, num_spe_clusters=4)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = _tiny_cfg()
+    params = init_snn(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _frames(n, cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.random((*cfg.input_hw, cfg.input_channels))
+            .astype(np.float32) for _ in range(n)]
+
+
+def _assert_conserved(eng, rids, msg=""):
+    """Every submitted rid resolved exactly once (completed / rejected /
+    expired) — the conservation invariant under any fault plan."""
+    out = ([r.rid for r in eng.completed] + [r.rid for r in eng.rejected]
+           + [r.rid for r in eng.expired])
+    assert len(out) == len(set(out)), f"a request resolved twice  {msg}"
+    assert set(out) == set(rids), (
+        f"lost={set(rids) - set(out)} phantom={set(out) - set(rids)}  {msg}")
+
+
+class _Gate:
+    """Fault hook that blocks the *first* dispatched execution until
+    released — pins one lane busy so live-mode tests can race-freely queue
+    work behind it."""
+
+    def __init__(self):
+        self.entered = threading.Event()
+        self.release = threading.Event()
+        self._armed = True
+        self._lock = threading.Lock()
+
+    def __call__(self, lane, attempt):
+        with self._lock:
+            arm, self._armed = self._armed, False
+        if arm:
+            self.entered.set()
+            self.release.wait(timeout=30.0)
+
+
+# -- FaultPlan: the scenario value ------------------------------------------
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError):
+        FaultPlan(crashes=((-1, 0),))
+    with pytest.raises(ValueError):
+        FaultPlan(transients=((0, -2),))
+    with pytest.raises(ValueError):
+        FaultPlan(slow_lanes=((0, 0.5),))
+    with pytest.raises(ValueError):
+        FaultPlan(storms=((0.1, 0),))
+    with pytest.raises(ValueError):
+        FaultPlan(storms=((-0.1, 3),))
+
+
+def test_fault_plan_json_round_trip():
+    plan = FaultPlan(seed=11, crashes=((0, 1), (2, 0)), transients=((1, 3),),
+                     slow_lanes=((1, 1.5),), storms=((0.02, 5),))
+    back = FaultPlan.from_dict(json.loads(json.dumps(plan.to_dict())))
+    assert back == plan
+
+
+def test_fault_plan_from_dict_unknown_key_is_loud():
+    with pytest.raises(ValueError, match="unknown FaultPlan field"):
+        FaultPlan.from_dict({"seed": 1, "krashes": [[0, 0]]})
+
+
+def test_fault_plan_sample_deterministic():
+    a = FaultPlan.sample(7, num_lanes=4)
+    assert a == FaultPlan.sample(7, num_lanes=4)
+    assert a.seed == 7
+    # the distribution actually varies across seeds
+    assert len({FaultPlan.sample(s, num_lanes=4) for s in range(16)}) > 1
+
+
+def test_storm_arrivals_flat_and_sorted():
+    plan = FaultPlan(storms=((0.02, 3), (0.01, 2)))
+    assert plan.storm_arrivals() == [0.01, 0.01, 0.02, 0.02, 0.02]
+    assert FaultPlan().storm_arrivals() == []
+
+
+# -- FaultInjector: crash-once / transient-first-attempt semantics ----------
+
+def test_injector_crash_fires_every_attempt_of_one_execution():
+    inj = FaultInjector(FaultPlan(crashes=((0, 1),)), num_lanes=2)
+    inj.on_execute(0, 0)                      # execution 0: clean
+    with pytest.raises(InjectedCrash):
+        inj.on_execute(0, 0)                  # execution 1, attempt 0
+    with pytest.raises(InjectedCrash):
+        inj.on_execute(0, 1)                  # retry of the same execution
+    inj.on_execute(0, 0)                      # execution 2: crash fired once
+    inj.on_execute(1, 0)                      # sibling lane untouched
+    assert inj.fired["crash"] == 2
+    assert inj.executions(0) == 3
+    assert inj.executions(1) == 1
+
+
+def test_injector_transient_absorbed_by_retry():
+    inj = FaultInjector(FaultPlan(transients=((0, 0),)), num_lanes=1)
+    with pytest.raises(InjectedTransient):
+        inj.on_execute(0, 0)
+    inj.on_execute(0, 1)                      # retry passes
+    inj.on_execute(0, 0)                      # next execution clean
+    assert inj.fired["transient"] == 1
+
+
+def test_injector_slow_lane_and_hook_chain():
+    inj = FaultInjector(FaultPlan(slow_lanes=((1, 1.5),)), num_lanes=2)
+    assert inj.latency_multiplier(1) == pytest.approx(1.5)
+    assert inj.latency_multiplier(0) == 1.0
+    calls = []
+    chained = inj.chain(lambda lane, att: calls.append((lane, att)))
+    chained(0, 0)
+    assert calls == [(0, 0)]                  # user hook still fires
+    assert inj.chain(None) == inj.on_execute
+
+
+# -- RetryPolicy backoff schedule -------------------------------------------
+
+def test_backoff_delay_schedule():
+    pol = RetryPolicy(backoff_s=0.05, max_backoff_s=0.4)
+    assert [pol.backoff_delay(a) for a in range(5)] == \
+        pytest.approx([0.05, 0.1, 0.2, 0.4, 0.4])
+    assert RetryPolicy(backoff_s=0.0).backoff_delay(10) == 0.0
+
+
+@given(st.floats(0.0, 5.0), st.floats(1e-3, 10.0), st.integers(0, 60))
+@settings(max_examples=60, deadline=None)
+def test_backoff_delay_properties(base, cap, attempt):
+    pol = RetryPolicy(backoff_s=base, max_backoff_s=cap)
+    d = pol.backoff_delay(attempt)
+    assert d == pol.backoff_delay(attempt)            # deterministic
+    assert 0.0 <= d <= cap + 1e-12                    # capped
+    assert pol.backoff_delay(attempt + 1) >= d        # monotone
+
+
+# -- LaneSupervisor policy ---------------------------------------------------
+
+def test_supervisor_budget_backoff_and_permanent_death():
+    sup = LaneSupervisor(2, restart_budget=2,
+                         policy=RetryPolicy(backoff_s=0.1, max_backoff_s=1.0))
+    at = sup.on_death(0, 10.0)
+    assert at == pytest.approx(10.1)                  # backoff_delay(0)
+    assert sup.on_death(0, 10.05) == at               # idempotent while dead
+    assert sup.due_restarts(10.05) == []
+    assert sup.due_restarts(10.1) == [0]
+    assert sup.pending_restarts() == [0]
+    assert sup.next_restart_at() == pytest.approx(10.1)
+    assert sup.on_restarted(0, 10.3) == pytest.approx(0.3)
+    assert sup.on_death(0, 20.0) == pytest.approx(20.2)  # backoff doubled
+    sup.on_restarted(0, 20.2)
+    assert sup.on_death(0, 30.0) is None              # budget exhausted
+    assert sup.permanently_dead() == [0]
+    assert sup.pending_restarts() == []
+    assert sup.next_restart_at() is None
+    stats = sup.stats()
+    assert stats["restarts"] == 2
+    assert stats["per_lane_restarts"] == [2, 0]
+    assert stats["recoveries_s"] == pytest.approx([0.3, 0.2])
+
+
+def test_supervisor_zero_budget_keeps_one_way_death():
+    sup = LaneSupervisor(1)
+    assert sup.on_death(0, 1.0) is None
+    assert sup.permanently_dead() == [0]
+
+
+def test_supervisor_hang_detection():
+    sup = LaneSupervisor(2, restart_budget=1, hang_timeout_s=0.1)
+    sup.beat(0, 0.0)
+    sup.beat(1, 0.0)
+    assert sup.stale(0.05) == []
+    assert sup.stale(0.2) == [0, 1]
+    assert sup.stale(0.2, busy=[1]) == [1]            # idle lanes exempt
+    sup.on_death(1, 0.2)
+    assert sup.stale(0.3, busy=[1]) == []             # dead lanes not stale
+    assert LaneSupervisor(1).stale(1e9) == []         # no timeout configured
+
+
+def test_supervisor_validation():
+    with pytest.raises(ValueError):
+        LaneSupervisor(0)
+    with pytest.raises(ValueError):
+        LaneSupervisor(1, restart_budget=-1)
+    with pytest.raises(ValueError):
+        LaneSupervisor(1, hang_timeout_s=0.0)
+
+
+# -- engine config validation ------------------------------------------------
+
+def test_engine_config_validation(tiny):
+    cfg, params = tiny
+    for bad in (dict(max_queue=0), dict(default_deadline_s=0.0),
+                dict(restart_budget=-1), dict(restart_backoff_s=-0.1)):
+        with pytest.raises(ValueError):
+            ServingEngine(params, cfg, EngineConfig(**bad))
+
+
+# -- virtual engine: deterministic fault replay ------------------------------
+
+def test_virtual_crash_kills_lane_survivors_serve(tiny):
+    cfg, params = tiny
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=2, max_batch=2, max_retries=0,
+        fault_plan=FaultPlan(crashes=((0, 0),))))
+    rids = [eng.submit(f, arrival=0.001 * i)
+            for i, f in enumerate(_frames(8, cfg))]
+    s = eng.run()
+    assert s["served"] == 8
+    _assert_conserved(eng, rids)
+    assert not eng.dispatcher.lanes[0].alive      # no restarts in virtual
+    assert {r.lane for r in eng.completed} == {1}
+    assert eng._injector.fired["crash"] >= 1
+
+
+def test_virtual_slow_lane_scales_committed_service(tiny):
+    cfg, params = tiny
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=1, max_batch=4,
+        service_time_fn=lambda lane, wall: 0.01,
+        fault_plan=FaultPlan(slow_lanes=((0, 2.0),))))
+    for f in _frames(4, cfg):
+        eng.submit(f, arrival=0.0)
+    eng.run()
+    r = eng.completed[0]
+    assert r.finish - r.start == pytest.approx(0.02)  # 0.01 x 2.0
+
+
+def test_virtual_deadline_expires_in_queue(tiny):
+    cfg, params = tiny
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=1, max_batch=1, default_deadline_s=0.05,
+        service_time_fn=lambda lane, wall: 0.1))
+    rid0 = eng.submit(_frames(1, cfg)[0], arrival=0.0, deadline_s=10.0)
+    rid1 = eng.submit(_frames(1, cfg)[0], arrival=0.0)  # inherits 0.05
+    r1 = eng._submitted[1]
+    assert r1.deadline_s == pytest.approx(0.05)        # config default applied
+    s = eng.run()
+    assert s["served"] == 1
+    assert [r.rid for r in eng.completed] == [rid0]
+    assert [r.rid for r in eng.expired] == [rid1]
+    assert r1.deadline_missed
+    assert s["deadline_missed"] == 1.0
+    _assert_conserved(eng, [rid0, rid1])
+
+
+def test_virtual_unmeetable_deadline_rejected_at_admission(tiny):
+    cfg, params = tiny
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=1, slo_seconds_per_work=10.0))      # delay >> any deadline
+    rid = eng.submit(_frames(1, cfg)[0], arrival=0.0, deadline_s=0.001)
+    s = eng.run()
+    assert s["served"] == 0
+    assert [x.rid for x in eng.rejected] == [rid]
+    assert eng.rejected[0].deadline_missed
+    assert s["deadline_missed"] == 1.0
+
+
+def test_invalid_deadline_is_loud(tiny):
+    cfg, params = tiny
+    eng = ServingEngine(params, cfg, EngineConfig(num_lanes=1))
+    with pytest.raises(ValueError):
+        eng.submit(_frames(1, cfg)[0], deadline_s=-1.0)
+
+
+# -- threaded engine: crash -> supervised restart (chaos acceptance) ---------
+
+def test_threaded_crash_restart_acceptance(tiny):
+    """Kill every lane once mid-epoch (seeded plan, restart budget 1):
+    every request still resolves exactly once, both lanes serve traffic
+    after their restart, and recovery is observable in the metrics."""
+    cfg, params = tiny
+    plan = FaultPlan(seed=42, crashes=((0, 0), (1, 1)))
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=2, max_batch=2, threaded=True, max_retries=0,
+        restart_budget=1, restart_backoff_s=0.001, fault_plan=plan))
+    rids = [eng.submit(f, arrival=0.0) for f in _frames(24, cfg)]
+    s = eng.run()
+    assert s["served"] == 24
+    _assert_conserved(eng, rids, msg=f"plan={plan}")
+    assert s["restarts"] == 2.0
+    assert len(eng.metrics.recovery_s) == 2
+    assert len(eng.metrics.restart_times) == 2
+    assert all(rec >= 0.0 for rec in eng.metrics.recovery_s)
+    assert s["mean_recovery_s"] >= 0.001              # >= the backoff
+    # lane 0's very first execution crashed, so every lane-0 completion is
+    # post-restart service: the restarted lane really carries traffic again
+    lanes_served = {r.lane for r in eng.completed}
+    assert lanes_served == {0, 1}
+    assert eng.supervisor.permanently_dead() == []
+    assert s["permanently_dead_lanes"] == 0.0
+
+
+def test_threaded_budget_exhausted_goes_permanent(tiny):
+    """Two crashes on one lane with budget 1: the second death is final,
+    the survivor drains the queue."""
+    cfg, params = tiny
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=2, max_batch=2, threaded=True, max_retries=0,
+        restart_budget=1, restart_backoff_s=0.001,
+        fault_plan=FaultPlan(crashes=((0, 0), (0, 1)))))
+    rids = [eng.submit(f, arrival=0.0) for f in _frames(16, cfg)]
+    s = eng.run()
+    assert s["served"] == 16
+    _assert_conserved(eng, rids)
+    assert s["restarts"] == 1.0
+    assert eng.supervisor.permanently_dead() == [0]
+    assert s["permanently_dead_lanes"] == 1.0
+
+
+def test_threaded_transients_absorbed_no_restarts(tiny):
+    cfg, params = tiny
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=2, max_batch=2, threaded=True, max_retries=2,
+        fault_plan=FaultPlan(transients=((0, 0), (1, 0)))))
+    rids = [eng.submit(f, arrival=0.0) for f in _frames(8, cfg)]
+    s = eng.run()
+    assert s["served"] == 8
+    _assert_conserved(eng, rids)
+    assert s["restarts"] == 0.0
+    assert all(l.alive for l in eng.dispatcher.lanes)
+    assert eng._injector.fired["transient"] == 2
+    assert s["retries"] >= 2
+
+
+def test_threaded_hang_escalated_to_restart(tiny):
+    """A worker that stops beating while busy is presumed hung: its batch is
+    re-queued, the lane restarts, the zombie's eventual report is
+    discarded."""
+    cfg, params = tiny
+    gate = _Gate()
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=1, max_batch=1, threaded=True,
+        restart_budget=1, restart_backoff_s=0.001, hang_timeout_s=0.25,
+        fault_hook=gate))
+    rids = [eng.submit(f, arrival=0.0) for f in _frames(3, cfg)]
+    try:
+        s = eng.run()
+    finally:
+        gate.release.set()                    # unblock the zombie worker
+    assert s["served"] == 3
+    _assert_conserved(eng, rids)
+    assert s["restarts"] == 1.0
+
+
+# -- conservation over seed-sampled plans (the property the module owes) -----
+
+def _run_sampled_plan(tiny, seed):
+    cfg, params = tiny
+    plan = FaultPlan.sample(seed, num_lanes=2)
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=2, max_batch=2, threaded=True, max_retries=1,
+        restart_budget=1, restart_backoff_s=0.001, fault_plan=plan))
+    frames = _frames(4, cfg, seed=1)
+    arrivals = sorted([0.002 * i for i in range(10)]
+                      + plan.storm_arrivals())
+    rids = [eng.submit(frames[i % len(frames)], arrival=a)
+            for i, a in enumerate(arrivals)]
+    s = eng.run()
+    msg = f"replay: FaultPlan.sample(seed={seed}, num_lanes=2)"
+    assert s["served"] == len(rids), msg
+    _assert_conserved(eng, rids, msg=msg)
+
+
+_CHAOS_SEEDS = [0, 1, 2, 3]
+if os.environ.get("CHAOS_SEED"):
+    _CHAOS_SEEDS.append(int(os.environ["CHAOS_SEED"]))
+
+
+@pytest.mark.parametrize("seed", _CHAOS_SEEDS)
+def test_sampled_plan_conservation(tiny, seed):
+    _run_sampled_plan(tiny, seed)
+
+
+@given(st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=5, deadline=None)
+def test_sampled_plan_conservation_property(tiny, seed):
+    _run_sampled_plan(tiny, seed)
+
+
+# -- live mode: backpressure, cancellation, deadlines, shutdown timeout ------
+
+def test_live_bounded_queue_raises_queue_full(tiny):
+    cfg, params = tiny
+    gate = _Gate()
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=1, max_batch=1, threaded=True, max_queue=1,
+        fault_hook=gate))
+    eng.serve_forever()
+    frame = _frames(1, cfg)[0]
+    h1 = eng.submit_live(frame)
+    assert gate.entered.wait(10.0)            # h1 dispatched, lane pinned
+    h2 = eng.submit_live(frame)               # queued: depth 1 == max_queue
+    with pytest.raises(QueueFull) as ei:
+        eng.submit_live(frame)
+    assert ei.value.depth == 1 and ei.value.max_queue == 1
+    gate.release.set()
+    s = eng.shutdown()
+    assert h1.result(10.0) is not None
+    assert h2.result(10.0) is not None
+    assert s["queue_full"] == 1.0
+    assert s["queue_watermark"] >= 1.0
+    assert s["served"] == 2
+
+
+def test_live_cancel_queued_request(tiny):
+    cfg, params = tiny
+    gate = _Gate()
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=1, max_batch=1, threaded=True, fault_hook=gate))
+    eng.serve_forever()
+    frame = _frames(1, cfg)[0]
+    h1 = eng.submit_live(frame)
+    assert gate.entered.wait(10.0)
+    h2 = eng.submit_live(frame)
+    assert h1.cancel() is False               # in flight: too late
+    assert h2.cancel() is True                # still queued: cancelled
+    assert h2.cancel() is False               # second cancel is a no-op
+    with pytest.raises(Cancelled):
+        h2.result(5.0)
+    assert h2.request.cancelled
+    gate.release.set()
+    s = eng.shutdown()
+    assert h1.result(10.0) is not None
+    assert h1.cancel() is False               # done: uncancellable
+    assert s["cancelled"] == 1.0
+    assert s["served"] == 1
+    assert h2.rid not in {r.rid for r in eng.completed}
+
+
+def test_live_deadline_exceeded_behind_busy_lane(tiny):
+    cfg, params = tiny
+    gate = _Gate()
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=1, max_batch=1, threaded=True, fault_hook=gate))
+    eng.serve_forever()
+    frame = _frames(1, cfg)[0]
+    h1 = eng.submit_live(frame)
+    assert gate.entered.wait(10.0)
+    h2 = eng.submit_live(frame, deadline_s=0.05)
+    exc = h2.exception(timeout=10.0)          # scheduler sweeps at expiry
+    assert isinstance(exc, DeadlineExceeded)
+    assert h2.request.deadline_missed
+    gate.release.set()
+    s = eng.shutdown()
+    assert h1.result(10.0) is not None
+    assert s["deadline_missed"] == 1.0
+    assert s["served"] == 1
+
+
+def test_live_shutdown_timeout_fails_outstanding(tiny):
+    cfg, params = tiny
+    gate = _Gate()
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=1, max_batch=1, threaded=True, fault_hook=gate))
+    eng.serve_forever()
+    h = eng.submit_live(_frames(1, cfg)[0])
+    assert gate.entered.wait(10.0)            # worker pinned mid-flight
+    with pytest.raises(ShutdownTimeout):
+        eng.shutdown(timeout=0.2)
+    assert isinstance(h.exception(timeout=1.0), ShutdownTimeout)
+    gate.release.set()                        # let the zombie drain
+    if eng._live_thread is not None:
+        eng._live_thread.join(timeout=10.0)
+
+
+# -- spec plumbing -----------------------------------------------------------
+
+def test_serve_spec_fault_plan_round_trip():
+    plan = FaultPlan(seed=3, crashes=((0, 1),), slow_lanes=((1, 1.5),),
+                     storms=((0.01, 4),))
+    spec = api.ServeSpec(threaded=True, restart_budget=2,
+                         restart_backoff_s=0.02, max_queue=8,
+                         default_deadline_s=0.2, hang_timeout_s=1.0,
+                         fault_plan=plan)
+    back = api.spec_from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert back == spec
+    ecfg = spec.to_engine_config()
+    assert ecfg.fault_plan == plan
+    assert ecfg.max_queue == 8
+    assert ecfg.default_deadline_s == pytest.approx(0.2)
+    assert ecfg.restart_budget == 2
+    assert ecfg.restart_backoff_s == pytest.approx(0.02)
+    assert ecfg.hang_timeout_s == pytest.approx(1.0)
+
+
+def test_serve_spec_fault_plan_type_is_validated():
+    with pytest.raises((TypeError, ValueError)):
+        api.ServeSpec(fault_plan={"seed": 1})
