@@ -20,6 +20,9 @@ import numpy as np
 
 from repro import api
 from repro.data.synthetic import mnist_like
+from repro.obs.log import configure_logging, get_logger
+
+log = get_logger("examples")
 
 
 def main():
@@ -31,30 +34,31 @@ def main():
                     help="execution backend to train AND serve through")
     ap.add_argument("--lanes", type=int, default=2)
     args = ap.parse_args()
+    configure_logging("info")
 
     # --- train (surrogate-gradient SGD on the deployed dataflow) -----------
     train_spec = api.TrainSpec(backend=args.backend, lr=1e-3,
                                timesteps=args.timesteps)
     sess = api.Session("snn-mnist", train_spec)
-    print(f"training snn-mnist via {train_spec}")
+    log.info("training snn-mnist via %s", train_spec)
     losses = []
     t0 = time.time()
     for i in range(args.steps):
         x, y = mnist_like(args.batch, seed=i)
         losses.append(sess.train_step(x, y))
         if i % 25 == 0 or i == args.steps - 1:
-            print(f"step {i:4d} loss {losses[-1]:.4f}")
+            log.info("step %4d loss %.4f", i, losses[-1])
     xte, yte = mnist_like(256, seed=10_000)
     acc = sess.evaluate(xte, yte)
-    print(f"trained {args.steps} steps in {time.time()-t0:.1f}s, "
-          f"held-out acc {acc*100:.2f}%")
+    log.info("trained %d steps in %.1fs, held-out acc %.2f%%",
+             args.steps, time.time() - t0, acc * 100)
     assert losses[-1] < losses[0], "training must reduce loss"
 
     # --- single-shot serving (same session, same params) -------------------
     frames = xte[:8]
     s = sess.serve(frames, steps=4)
-    print(f"single-shot: {s['fps']:.1f} FPS "
-          f"({s['spikes_per_frame']:.0f} spikes/frame)")
+    log.info("single-shot: %.1f FPS (%.0f spikes/frame)",
+             s["fps"], s["spikes_per_frame"])
 
     # --- live serving: submit while the engine runs ------------------------
     # one padding bucket (8) so the live micro-batches and the single-shot
@@ -64,19 +68,27 @@ def main():
                                buckets=(8,))
     with sess.serve_forever(serve_spec) as live:
         handles = [live.submit(f) for f in xte[:24]]
+        # live introspection mid-burst: LiveServer.metrics() returns a
+        # consistent MetricsSnapshot while requests are still in flight
+        snap = live.metrics()
+        log.info("mid-run snapshot: served=%d queued=%d in_flight=%d "
+                 "outstanding=%d lanes=%d/%d",
+                 snap.served, snap.queued, snap.in_flight, snap.outstanding,
+                 snap.lanes_alive, snap.lanes_total)
         logits = [h.result(timeout=60.0) for h in handles]
     summ = live.summary()
-    print(f"live: served {summ['served']:.0f} requests on {args.lanes} lanes "
-          f"(p50 {summ['p50_latency_s']*1e3:.1f}ms, "
-          f"p99 {summ['p99_latency_s']*1e3:.1f}ms, {summ['fps']:.1f} FPS)")
+    log.info("live: served %.0f requests on %d lanes (p50 %.1fms, "
+             "p99 %.1fms, %.1f FPS)", summ["served"], args.lanes,
+             summ["p50_latency_s"] * 1e3, summ["p99_latency_s"] * 1e3,
+             summ["fps"])
 
     # futures resolve bit-identically to the single-shot path
     want = np.asarray(sess.infer(xte[:8]).logits)
     for i in range(8):
         assert np.array_equal(want[i], logits[i]), "live != single-shot logits"
     preds = np.argmax(np.stack(logits), axis=-1)
-    print(f"live accuracy on the submitted slice: "
-          f"{(preds == yte[:24]).mean()*100:.1f}%")
+    log.info("live accuracy on the submitted slice: %.1f%%",
+             (preds == yte[:24]).mean() * 100)
 
 
 if __name__ == "__main__":

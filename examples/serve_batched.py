@@ -19,6 +19,9 @@ import jax.numpy as jnp
 
 from repro.config import get_arch, reduced
 from repro.models import transformer
+from repro.obs.log import configure_logging, get_logger
+
+log = get_logger("examples")
 
 
 def serve_snn_threaded(args) -> None:
@@ -51,9 +54,9 @@ def serve_snn_threaded(args) -> None:
         s = eng.run()
         walls[threaded] = time.time() - t0
         mode = "threaded" if threaded else "1-thread"
-        print(f"{mode:9s}: {n / walls[threaded]:7.1f} frames/s wall "
-              f"(balance={s['request_balance']:.3f}, lanes={args.lanes})")
-    print(f"threaded speedup: {walls[False] / walls[True]:.2f}x")
+        log.info("%9s: %7.1f frames/s wall (balance=%.3f, lanes=%d)",
+                 mode, n / walls[threaded], s["request_balance"], args.lanes)
+    log.info("threaded speedup: %.2fx", walls[False] / walls[True])
 
 
 def serve_snn_batched(args) -> None:
@@ -74,12 +77,12 @@ def serve_snn_batched(args) -> None:
                                 params=sess.params)
         s = spec_sess.serve(frames, steps=4)
         results[backend] = s["seconds"] / 4
-        print(f"{backend:8s}: {results[backend]*1e3:6.1f} ms/batch "
-              f"({s['fps']:.1f} FPS)")
+        log.info("%8s: %6.1f ms/batch (%.1f FPS)",
+                 backend, results[backend] * 1e3, s["fps"])
         out = s["outputs"]
     if args.backend != "ref":
-        print(f"time-batched speedup vs seed scan: "
-              f"{results['ref'] / results[args.backend]:.2f}x")
+        log.info("time-batched speedup vs seed scan: %.2fx",
+                 results["ref"] / results[args.backend])
     assert bool(jnp.isfinite(out.logits).all())
 
 
@@ -100,6 +103,7 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new", type=int, default=32)
     args = ap.parse_args()
+    configure_logging("info")
 
     if args.snn:
         if args.threaded:
@@ -121,7 +125,8 @@ def main():
                                          remat=False, max_len=max_len)
     jax.block_until_ready(logits)
     t_prefill = time.time() - t0
-    print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill*1e3:.0f}ms")
+    log.info("prefill: %dx%d in %.0fms",
+             args.batch, args.prompt_len, t_prefill * 1e3)
 
     decode = jax.jit(lambda p, c, t, pos: transformer.decode_step(
         p, c, cfg, token=t, pos=pos))
@@ -137,10 +142,10 @@ def main():
     jax.block_until_ready(token)
     dt = time.time() - t0
     toks = args.batch * (args.new - 1)
-    print(f"decode: {toks} tokens in {dt*1e3:.0f}ms "
-          f"({toks/dt:.1f} tok/s on CPU, reduced config)")
+    log.info("decode: %d tokens in %.0fms (%.1f tok/s on CPU, reduced "
+             "config)", toks, dt * 1e3, toks / dt)
     out = jnp.concatenate(generated, axis=1)
-    print("sample generation (token ids):", out[0, :16].tolist())
+    log.info("sample generation (token ids): %s", out[0, :16].tolist())
     assert bool(jnp.isfinite(logits).all())
 
 

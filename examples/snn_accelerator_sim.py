@@ -19,7 +19,10 @@ from repro.config import get_snn
 from repro.core import build_schedule, init_snn, snn_apply
 from repro.core.snn_model import skew_channels
 from repro.data.synthetic import road_like
+from repro.obs.log import configure_logging, get_logger
 from repro.perfmodel import XC7Z045, simulate_network
+
+log = get_logger("examples")
 
 
 def measure(cfg, params, frames):
@@ -36,6 +39,7 @@ def main():
     ap.add_argument("--timesteps", type=int, default=12)
     ap.add_argument("--frames", type=int, default=4)
     args = ap.parse_args()
+    configure_logging("info")
 
     frames, _ = road_like(args.frames, h=80, w=160, seed=0)
     base = get_snn("snn-seg")
@@ -55,13 +59,12 @@ def main():
                                 [s.in_partition for s in scheds],
                                 [s.out_partition for s in scheds], XC7Z045)
         results[mode] = perf
-        print(f"{mode:10s} balance={perf.balance_spartus:.4f} "
-              f"(paper {paper[mode]:.4f}) "
-              f"barrier_balance={perf.balance:.4f} "
-              f"fps={perf.fps(XC7Z045):.1f} "
-              f"mJ/frame={perf.energy_j(XC7Z045)*1e3:.2f}")
+        log.info("%10s balance=%.4f (paper %.4f) barrier_balance=%.4f "
+                 "fps=%.1f mJ/frame=%.2f", mode, perf.balance_spartus,
+                 paper[mode], perf.balance, perf.fps(XC7Z045),
+                 perf.energy_j(XC7Z045) * 1e3)
     gain = results["aprc+cbws"].fps(XC7Z045) / results["none"].fps(XC7Z045)
-    print(f"\nthroughput gain APRC+CBWS vs none: {gain:.2f}x (paper: 1.4x)")
+    log.info("throughput gain APRC+CBWS vs none: %.2fx (paper: 1.4x)", gain)
 
 
 if __name__ == "__main__":

@@ -21,7 +21,10 @@ import numpy as np
 from repro import api
 from repro.core import SNN_BACKENDS, SURROGATE_KINDS, aprc
 from repro.data.synthetic import mnist_like
+from repro.obs.log import configure_logging, get_logger
 from repro.perfmodel import XC7Z045, simulate_network
+
+log = get_logger("examples")
 
 
 def main():
@@ -36,6 +39,7 @@ def main():
                     choices=SURROGATE_KINDS,
                     help="surrogate-gradient kind for the spike backward")
     args = ap.parse_args()
+    configure_logging("info")
 
     sess = api.Session("snn-mnist", api.TrainSpec(
         backend=args.backend, surrogate_kind=args.surrogate, lr=args.lr,
@@ -47,15 +51,15 @@ def main():
         x, y = mnist_like(args.batch, seed=i)
         loss = sess.train_step(x, y)
         if i % 25 == 0 or i == args.steps - 1:
-            print(f"step {i:4d} loss {loss:.4f}")
-    print(f"trained {args.steps} steps in {time.time()-t0:.1f}s "
-          f"(backend={args.backend}, surrogate={args.surrogate})")
+            log.info("step %4d loss %.4f", i, loss)
+    log.info("trained %d steps in %.1fs (backend=%s, surrogate=%s)",
+             args.steps, time.time() - t0, args.backend, args.surrogate)
 
     # test accuracy (the paper reports 98.5% on real MNIST @ T=8)
     xte, yte = mnist_like(512, seed=10_000)
     acc = sess.evaluate(xte, yte)
-    print(f"accuracy on held-out synthetic digits: {acc*100:.2f}% "
-          f"(paper: 98.5% on MNIST)")
+    log.info("accuracy on held-out synthetic digits: %.2f%% "
+             "(paper: 98.5%% on MNIST)", acc * 100)
 
     # --- Skydiver pipeline on the trained net ---
     from repro.core import build_schedule
@@ -71,15 +75,15 @@ def main():
         perf = simulate_network(cfg, per_layer,
                                 [s.in_partition for s in scheds],
                                 [s.out_partition for s in scheds], XC7Z045)
-        print(f"{mode:10s} balance={perf.balance:.4f} "
-              f"kfps={perf.fps(XC7Z045)/1e3:.2f} "
-              f"uJ/img={perf.energy_j(XC7Z045)*1e6:.1f} "
-              f"gsops={perf.gsops(XC7Z045):.2f}")
+        log.info("%10s balance=%.4f kfps=%.2f uJ/img=%.1f gsops=%.2f",
+                 mode, perf.balance, perf.fps(XC7Z045) / 1e3,
+                 perf.energy_j(XC7Z045) * 1e6, perf.gsops(XC7Z045))
     # per-layer spike/magnitude correlation after training (Fig. 6)
     for l in range(1, len(cfg.conv_channels)):
         mags = np.maximum(aprc.filter_magnitudes(params["conv"][l]["w"]), 0)
         stats = aprc.proportionality(mags, np.asarray(out.spike_counts[l]))
-        print(f"layer {l} spike~magnitude spearman={stats['spearman']:.3f}")
+        log.info("layer %d spike~magnitude spearman=%.3f",
+                 l, stats["spearman"])
 
 
 if __name__ == "__main__":

@@ -18,6 +18,10 @@ One import gives everything an entry point needs:
             shutdown-timeout drain failure
   FaultPlan the seeded deterministic chaos scenario record
             (``runtime.faults``) a ``ServeSpec.fault_plan`` pins
+  MetricsSnapshot
+            the consistent mid-run view ``LiveServer.metrics()`` returns
+            (``repro.obs``; ``ServeSpec.trace=True`` additionally records
+            lifecycle events for Chrome-trace export)
 
 The layers underneath (``core.snn_model``, ``core.snn_train``,
 ``kernels.ops``, ``serving.engine``) stay importable but are driven through
@@ -27,6 +31,7 @@ facade.  See docs/api.md.
 from repro.api.session import LiveServer, Session
 from repro.api.specs import (SCHEDULE_MODES, ExecutionSpec, ServeSpec,
                              TrainSpec, spec_from_dict)
+from repro.obs import MetricsSnapshot
 from repro.runtime.faults import FaultPlan
 from repro.serving.futures import (Cancelled, DeadlineExceeded, QueueFull,
                                    RequestHandle, ShutdownTimeout,
@@ -37,7 +42,7 @@ __all__ = [
     "spec_from_dict", "resolve_schedule",
     "Session", "LiveServer",
     "RequestHandle", "SLORejected", "DeadlineExceeded", "Cancelled",
-    "QueueFull", "ShutdownTimeout", "FaultPlan",
+    "QueueFull", "ShutdownTimeout", "FaultPlan", "MetricsSnapshot",
 ]
 
 

@@ -222,6 +222,18 @@ class LiveServer:
     def running(self) -> bool:
         return self._engine.live
 
+    def metrics(self):
+        """A consistent ``obs.MetricsSnapshot`` of the running engine —
+        callable from any thread *while* requests are in flight (each
+        subsystem is read under its own lock).  Use ``shutdown()`` /
+        ``summary()`` for the terminal numbers."""
+        return self._engine.snapshot()
+
+    def trace(self):
+        """The engine's ``obs.TraceRecorder`` (empty unless the spec set
+        ``trace=True``); export with ``obs.export.write_chrome_trace``."""
+        return self._engine.trace
+
     def shutdown(self, timeout: Optional[float] = None) -> Dict[str, float]:
         """Drain and stop; returns (and caches) the metrics summary."""
         if self._summary is None:

@@ -187,6 +187,10 @@ class ServeSpec(ExecutionSpec):
     # deterministic seeded chaos (runtime.faults.FaultPlan); serialized as a
     # nested dict so spec files can pin a replayable scenario
     fault_plan: Optional[Any] = None
+    # observability (repro.obs): record lifecycle events into the engine's
+    # bounded trace ring buffer (export via obs.export / --trace-out)
+    trace: bool = False
+    trace_capacity: int = 65536
 
     def __post_init__(self):
         super().__post_init__()
@@ -225,6 +229,9 @@ class ServeSpec(ExecutionSpec):
         if self.hang_timeout_s is not None and self.hang_timeout_s <= 0:
             raise ValueError(
                 f"hang_timeout_s must be positive, got {self.hang_timeout_s}")
+        if self.trace_capacity < 1:
+            raise ValueError(
+                f"trace_capacity must be >= 1, got {self.trace_capacity}")
         if self.fault_plan is not None \
                 and not isinstance(self.fault_plan, FaultPlan):
             raise ValueError(
@@ -276,6 +283,8 @@ class ServeSpec(ExecutionSpec):
             restart_backoff_s=self.restart_backoff_s,
             hang_timeout_s=self.hang_timeout_s,
             fault_plan=self.fault_plan,
+            trace=self.trace,
+            trace_capacity=self.trace_capacity,
         )
         kw.update(overrides)
         return EngineConfig(**kw)

@@ -61,6 +61,10 @@ class SNNOutputs(NamedTuple):
     spike_counts: Tuple[jax.Array, ...]   # per conv layer: (Cout,) summed over B,T,HW
     spike_totals: Tuple[jax.Array, ...]   # per conv layer: scalar total spikes
     timestep_counts: Tuple[jax.Array, ...]  # per conv layer: (T, Cout) — temporal profile
+    # per pallas-fused conv layer: scalar fraction of (T, B, row-block)
+    # skip-table cells skipped (kernels.spiking_conv.skip_table_fraction);
+    # empty on backends without skip tables (ref/batched)
+    skip_fractions: Tuple[jax.Array, ...] = ()
 
 
 def layer_shapes(cfg: SNNConfig) -> List[Tuple[int, int, int]]:
@@ -332,7 +336,17 @@ def _apply_time_batched(params: Dict, frames: jax.Array, cfg: SNNConfig,
         inv_perms = [np.argsort(s.out_perm) for s in schedule]
 
     counts_t: List[jax.Array] = []      # per layer (T, Cout)
+    skips: List[jax.Array] = []         # per pallas layer: skip-cell fraction
     x = frames                          # (B,...) analog | (T,B,...) spikes
+
+    def note_skip(train, r):
+        # observability: the fused kernel's skip-table sparsity, computed on
+        # the same padded train the kernel sees (free when logits-only — XLA
+        # drops it with the other unused outputs)
+        if use_pallas and train.ndim == 5:
+            from repro.kernels import ops
+            skips.append(ops.skip_table_fraction(train, r, aprc=cfg.aprc))
+
     v_out = None
     for i in range(n_conv):
         p = params["conv"][i]
@@ -343,6 +357,7 @@ def _apply_time_batched(params: Dict, frames: jax.Array, cfg: SNNConfig,
             if hoist and i == 0:        # degenerate single-layer net
                 x = jnp.broadcast_to(x[None], (T,) + x.shape)
                 hoist = False
+            note_skip(x, p["w"].shape[0])
             z = _conv_folded(x, p, cfg, use_pallas, groups)
             v_traj = jnp.cumsum(z.astype(jnp.float32), axis=0)
             s_metric = (v_traj >= v_th).astype(z.dtype)
@@ -362,6 +377,7 @@ def _apply_time_batched(params: Dict, frames: jax.Array, cfg: SNNConfig,
         else:
             if use_pallas:
                 from repro.kernels import ops
+                note_skip(x, p["w"].shape[0])
                 e_h, e_w, _ = shapes[i]
                 v0 = jnp.zeros((B, e_h, e_w, cout), x.dtype)
                 s, _ = ops.spiking_conv_lif(
@@ -397,6 +413,7 @@ def _apply_time_batched(params: Dict, frames: jax.Array, cfg: SNNConfig,
         spike_counts=tuple(c.sum(axis=0) for c in counts_t),
         spike_totals=tuple(c.sum() for c in counts_t),
         timestep_counts=tuple(counts_t),
+        skip_fractions=tuple(skips),
     )
 
 

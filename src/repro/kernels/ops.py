@@ -25,12 +25,13 @@ from repro.kernels.lif import lif_fused_pallas
 from repro.kernels.spiking_conv import (conv_grad_input_pallas,
                                         conv_grad_input_xla,
                                         conv_grad_weights_xla,
+                                        skip_table_fraction,
                                         spiking_conv_pallas)
 from repro.kernels.spiking_conv_lif import (ConvLIFOpts, _largest_divisor,
                                             spiking_conv_lif_train)
 
 __all__ = ["spiking_conv", "lif_fused", "spiking_conv_lif",
-           "default_interpret"]
+           "skip_table_fraction", "default_interpret"]
 
 
 def default_interpret() -> bool:

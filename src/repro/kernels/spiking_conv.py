@@ -44,8 +44,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 __all__ = ["spiking_conv_kernel", "spiking_conv_pallas", "row_block_counts",
-           "conv_grad_input_xla", "conv_grad_input_pallas",
-           "conv_grad_weights_xla", "conv_pads"]
+           "skip_table_fraction", "conv_grad_input_xla",
+           "conv_grad_input_pallas", "conv_grad_weights_xla", "conv_pads"]
 
 
 def conv_pads(r: int, aprc: bool) -> tuple:
@@ -106,6 +106,34 @@ def row_block_counts(spikes_padded: jax.Array, r: int, block_rows: int,
     ends = jnp.minimum(starts + block_rows + r - 1, row_tot.shape[1])
     win = cs[:, ends] - cs[:, starts]                 # (B, n_blocks)
     return win.astype(jnp.int32)
+
+
+def skip_table_fraction(spikes: jax.Array, r: int, *, aprc: bool = True,
+                        block_rows: int = 8) -> jax.Array:
+    """Fraction of the fused kernel's (T, B, row-block) skip-table cells
+    that are skipped (zero receptive spikes) — the observable sparsity win
+    of the spatio-temporal skip (paper Fig. 2), without running the conv.
+
+    ``spikes`` is the (T, B, H, W, Cin) input train of one fused layer;
+    the padding replicates ``spiking_conv_lif._fused_call`` exactly, so
+    this counts precisely the cells whose R*R matmuls that kernel elides.
+    Traceable (pure jnp) — the time-batched model computes it inline and
+    XLA drops it when the caller only consumes logits."""
+    t, b, h, w, cin = spikes.shape
+    if aprc:
+        e_h, e_w = h + r - 1, w + r - 1
+        pad_lo = r - 1
+    else:
+        e_h, e_w = h, w
+        pad_lo = (r - 1) // 2
+    n_blocks = -(-e_h // block_rows)                  # ceil
+    h_pad = n_blocks * block_rows + r - 1
+    w_pad = e_w + r - 1
+    x = jnp.zeros((t * b, h_pad, w_pad, cin), spikes.dtype)
+    x = jax.lax.dynamic_update_slice(
+        x, spikes.reshape(t * b, h, w, cin), (0, pad_lo, pad_lo, 0))
+    counts = row_block_counts(x, r, block_rows, n_blocks)
+    return jnp.mean((counts == 0).astype(jnp.float32))
 
 
 @functools.partial(

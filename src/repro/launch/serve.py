@@ -37,6 +37,9 @@ import numpy as np
 
 from repro.config import get_arch, reduced
 from repro.models import transformer
+from repro.obs.log import LOG_LEVELS, configure_logging, get_logger
+
+log = get_logger("serve")
 
 
 def _load_spec_file(path: str):
@@ -77,6 +80,8 @@ def serve_snn(args) -> None:
         overrides["max_queue"] = args.max_queue
     if args.deadline_ms is not None:
         overrides["default_deadline_s"] = args.deadline_ms / 1e3
+    if args.trace_out:
+        overrides["trace"] = True
     if overrides:
         spec = _dc.replace(spec, **overrides)
     sess = api.Session(args.snn, spec)
@@ -91,20 +96,28 @@ def serve_snn(args) -> None:
         n = args.steps * args.batch
         live = sess.serve_forever()
         handles = [live.submit(frames[i % args.batch]) for i in range(n)]
+        # live introspection: a consistent MetricsSnapshot taken while
+        # requests are still in flight (LiveServer.metrics())
+        snap = live.metrics()
+        log.info("mid-burst snapshot: served=%d queued=%d in_flight=%d "
+                 "lanes=%d/%d", snap.served, snap.queued, snap.in_flight,
+                 snap.lanes_alive, snap.lanes_total)
         # exception() instead of result(): with --slo-ms an over-budget
         # submission resolves to SLORejected, which is an outcome to count
         # here, not a crash
         outcomes = [h.exception(timeout=60.0) for h in handles]
         s = live.shutdown()
-        print(f"engine[forever] served {s['served']:.0f} frames live "
-              f"({s['fps']:.1f} FPS, backend={spec.backend}, "
-              f"lanes={spec.num_lanes}, p50={s['p50_latency_s']*1e3:.1f}ms, "
-              f"p99={s['p99_latency_s']*1e3:.1f}ms, "
-              f"futures_resolved={sum(e is None for e in outcomes)}, "
-              f"futures_rejected={sum(e is not None for e in outcomes)}, "
-              f"deadline_missed={s['deadline_missed']:.0f}, "
-              f"queue_full={s['queue_full']:.0f}, "
-              f"restarts={s['restarts']:.0f})")
+        _write_trace(args, live.trace())
+        log.info(
+            "engine[forever] served %.0f frames live (%.1f FPS, backend=%s, "
+            "lanes=%d, p50=%.1fms, p99=%.1fms, futures_resolved=%d, "
+            "futures_rejected=%d, deadline_missed=%.0f, queue_full=%.0f, "
+            "restarts=%.0f)",
+            s["served"], s["fps"], spec.backend, spec.num_lanes,
+            s["p50_latency_s"] * 1e3, s["p99_latency_s"] * 1e3,
+            sum(e is None for e in outcomes),
+            sum(e is not None for e in outcomes),
+            s["deadline_missed"], s["queue_full"], s["restarts"])
         return
 
     if args.engine:
@@ -116,20 +129,32 @@ def serve_snn(args) -> None:
         for i, arr in enumerate(np.cumsum(gaps)):
             eng.submit(frames[i % args.batch], arrival=float(arr))
         s = eng.run()
+        _write_trace(args, eng.trace)
         mode = "threaded" if spec.threaded else "virtual"
-        print(f"engine[{mode}] served {s['served']:.0f} frames in "
-              f"{s['rounds']:.0f} rounds ({s['fps']:.1f} FPS, "
-              f"backend={spec.backend}, lanes={spec.num_lanes}, "
-              f"p50={s['p50_latency_s']*1e3:.1f}ms, "
-              f"p99={s['p99_latency_s']*1e3:.1f}ms, "
-              f"balance={s['request_balance']:.3f}, "
-              f"rejected={s['rejected']:.0f}, degraded={s['degraded']:.0f})")
+        log.info(
+            "engine[%s] served %.0f frames in %.0f rounds (%.1f FPS, "
+            "backend=%s, lanes=%d, p50=%.1fms, p99=%.1fms, balance=%.3f, "
+            "rejected=%.0f, degraded=%.0f)",
+            mode, s["served"], s["rounds"], s["fps"], spec.backend,
+            spec.num_lanes, s["p50_latency_s"] * 1e3,
+            s["p99_latency_s"] * 1e3, s["request_balance"],
+            s["rejected"], s["degraded"])
         return
 
     s = sess.serve(frames, steps=args.steps)
-    print(f"served {s['frames']} frames in {s['seconds']:.2f}s "
-          f"({s['fps']:.1f} FPS, backend={spec.backend}, "
-          f"T={cfg.timesteps}, total_spikes/frame={s['spikes_per_frame']:.0f})")
+    log.info("served %d frames in %.2fs (%.1f FPS, backend=%s, T=%d, "
+             "total_spikes/frame=%.0f)", s["frames"], s["seconds"], s["fps"],
+             spec.backend, cfg.timesteps, s["spikes_per_frame"])
+
+
+def _write_trace(args, trace) -> None:
+    """Export the engine's recorded lifecycle trace as Chrome trace-event
+    JSON (``--trace-out``; load in Perfetto / chrome://tracing)."""
+    if not args.trace_out:
+        return
+    from repro.obs.export import write_chrome_trace
+    n = write_chrome_trace(trace, args.trace_out)
+    log.info("wrote %d trace events to %s", n, args.trace_out)
 
 
 def main():
@@ -176,11 +201,18 @@ def main():
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="default per-request deadline in ms; requests "
                          "expired in queue fail with DeadlineExceeded")
+    ap.add_argument("--trace-out", default=None,
+                    help="record engine lifecycle events (ServeSpec.trace) "
+                         "and write Chrome trace-event JSON here — load in "
+                         "Perfetto (with --engine/--forever)")
+    ap.add_argument("--log-level", default="info", choices=LOG_LEVELS,
+                    help="stderr log verbosity (repro.obs.log)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new", type=int, default=32)
     ap.add_argument("--full-config", action="store_true")
     args = ap.parse_args()
+    configure_logging(args.log_level)
 
     if args.snn:
         serve_snn(args)
@@ -207,7 +239,7 @@ def main():
         token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     jax.block_until_ready(token)
     n = args.batch * (args.new - 1)
-    print(f"served {n} tokens in {time.time()-t0:.2f}s")
+    log.info("served %d tokens in %.2fs", n, time.time() - t0)
 
 
 if __name__ == "__main__":

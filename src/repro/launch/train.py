@@ -29,9 +29,12 @@ from repro.config import get_arch, reduced
 from repro.data.pipeline import Prefetcher
 from repro.data.synthetic import token_batches
 from repro.models import lm
+from repro.obs.log import LOG_LEVELS, configure_logging, get_logger
 from repro.runtime.fault_tolerance import LoopConfig, ResilientLoop
 from repro.runtime.straggler import StragglerMonitor
 from repro.sharding.context import ShardingCtx, make_rules, use_sharding
+
+log = get_logger("train")
 
 
 def train_snn(args) -> None:
@@ -58,12 +61,12 @@ def train_snn(args) -> None:
         x, y = mnist_like(args.batch, seed=i)
         loss = sess.train_step(x, y)
         if i % 10 == 0 or i == args.steps - 1:
-            print(f"step {i:5d} loss {loss:.4f} backend={spec.backend}")
+            log.info("step %5d loss %.4f backend=%s", i, loss, spec.backend)
     dt = time.perf_counter() - t0
     xte, yte = mnist_like(256, seed=10_000)
     acc = sess.evaluate(xte, yte)
-    print(f"finished {args.steps} SNN steps in {dt:.1f}s "
-          f"(backend={spec.backend}, held-out acc {acc*100:.2f}%)")
+    log.info("finished %d SNN steps in %.1fs (backend=%s, "
+             "held-out acc %.2f%%)", args.steps, dt, spec.backend, acc * 100)
 
 
 def main():
@@ -95,7 +98,10 @@ def main():
                     help="e.g. 2x2 => (data=2, model=2); empty = single device")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
     ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--log-level", default="info", choices=LOG_LEVELS,
+                    help="stderr log verbosity (repro.obs.log)")
     args = ap.parse_args()
+    configure_logging(args.log_level)
 
     if args.snn:
         train_snn(args)
@@ -128,15 +134,15 @@ def main():
             monitor.record([now - t_last[0]])
             t_last[0] = now
             if step % 10 == 0:
-                print(f"step {step:5d} loss {float(m['loss']):.4f} "
-                      f"fleet_balance {monitor.fleet_balance():.3f}")
+                log.info("step %5d loss %.4f fleet_balance %.3f",
+                         step, float(m["loss"]), monitor.fleet_balance())
 
         loop = ResilientLoop(step_fn, ckpt, LoopConfig(
             checkpoint_every=args.checkpoint_every, max_steps=args.steps))
         state = loop.run(state, batches, on_metrics=on_metrics)
-    print(f"finished {loop.stats.steps_done} steps "
-          f"(resumed_from={loop.stats.resumed_from}, "
-          f"failures={len(loop.stats.failures)})")
+    log.info("finished %d steps (resumed_from=%s, failures=%d)",
+             loop.stats.steps_done, loop.stats.resumed_from,
+             len(loop.stats.failures))
 
 
 if __name__ == "__main__":

@@ -84,6 +84,14 @@ class StragglerMonitor:
             obs = [s.ewma for s in self.stats if s.n > 0]
         return float(np.mean(obs)) if obs else None
 
+    def per_host_seconds_per_work(self) -> List[Optional[float]]:
+        """Each host's EWMA work-normalized service time (s per unit
+        predicted workload), None for hosts with no observation yet — the
+        per-lane view live snapshots expose (``seconds_per_work`` is the
+        fleet mean of these)."""
+        with self._lock:
+            return [s.ewma if s.n > 0 else None for s in self.stats]
+
     def fleet_balance(self) -> float:
         with self._lock:
             return balance_ratio([s.ewma for s in self.stats])

@@ -85,6 +85,9 @@ import numpy as np
 
 from repro.config import SNNConfig
 from repro.core.balance import balance_ratio
+from repro.obs import trace as trc
+from repro.obs.snapshot import MetricsSnapshot
+from repro.obs.trace import TraceRecorder
 from repro.runtime.fault_tolerance import RetryPolicy
 from repro.runtime.faults import FaultInjector, FaultPlan
 from repro.serving import admission
@@ -160,6 +163,12 @@ class EngineConfig:
     # deterministic lane speeds here, default is the wall measurement
     # (virtual clock only — the threaded engine serves on measured time)
     service_time_fn: Optional[Callable[[int, float], float]] = None
+    # lifecycle tracing (repro.obs): record typed events into a bounded
+    # ring buffer on the engine clock.  Off by default — call sites emit
+    # unconditionally but a disabled recorder returns after one attribute
+    # check, so untraced engines pay nothing.
+    trace: bool = False
+    trace_capacity: int = 65536
 
 
 class ServingEngine:
@@ -187,6 +196,9 @@ class ServingEngine:
         if ecfg.restart_backoff_s < 0:
             raise ValueError(
                 f"restart_backoff_s must be >= 0, got {ecfg.restart_backoff_s}")
+        if ecfg.trace_capacity < 1:
+            raise ValueError(
+                f"trace_capacity must be >= 1, got {ecfg.trace_capacity}")
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
@@ -213,6 +225,10 @@ class ServingEngine:
             policy=RetryPolicy(backoff_s=ecfg.restart_backoff_s),
             hang_timeout_s=ecfg.hang_timeout_s)
         self.metrics = ServingMetrics()
+        # one recorder for the engine's lifetime; emit is a no-op when
+        # EngineConfig.trace is off (call sites stay unconditional)
+        self.trace = TraceRecorder(capacity=ecfg.trace_capacity,
+                                   enabled=ecfg.trace)
         self.completed: List[Request] = []
         self.rejected: List[Request] = []
         self.expired: List[Request] = []   # deadline-expired in queue
@@ -273,6 +289,10 @@ class ServingEngine:
                 "starts")
         req = self._make_request(frame, arrival, deadline_s)
         self._submitted.append(req)
+        # stamped at the request's arrival (not "now"): pre-run submissions
+        # replay deterministically under the virtual clock
+        self.trace.emit(trc.KIND_SUBMIT, t=req.arrival, rid=req.rid,
+                        workload=req.workload, deadline_s=req.deadline_s)
         return req.rid
 
     def submit_live(self, frame: np.ndarray,
@@ -310,6 +330,8 @@ class ServingEngine:
             if self.ecfg.max_queue is not None \
                     and depth >= self.ecfg.max_queue:
                 self.metrics.queue_full += 1
+                self.trace.emit(trc.KIND_QUEUE_FULL,
+                                t=self._live_clock.now(), depth=depth)
                 raise QueueFull(depth, self.ecfg.max_queue)
             req = self._make_request(frame, self._live_clock.now(),
                                      deadline_s)
@@ -319,6 +341,8 @@ class ServingEngine:
                 self._futures[req.rid] = handle
             self.batcher.push(req)
             self.metrics.note_depth(depth + 1)
+            self.trace.emit(trc.KIND_SUBMIT, t=req.arrival, rid=req.rid,
+                            workload=req.workload, deadline_s=req.deadline_s)
         self._completions.put(("wake",))      # unpark the scheduler
         return handle
 
@@ -336,6 +360,10 @@ class ServingEngine:
             del self._futures[rid]
             h.request.cancelled = True
         self.metrics.cancelled += 1
+        self.trace.emit(
+            trc.KIND_CANCEL, rid=rid,
+            t=self._live_clock.now() if self._live_clock is not None
+            else None)
         h._fail(Cancelled(h.request))
         if self._completions is not None:
             self._completions.put(("wake",))   # let the scheduler sweep it
@@ -381,28 +409,40 @@ class ServingEngine:
         """A request completed: record it and resolve its live handle (if
         any) — each handle resolves exactly once (conservation)."""
         self.completed.append(r)
+        self.trace.emit(trc.KIND_COMPLETE, t=r.finish, rid=r.rid,
+                        lane=r.lane if r.lane >= 0 else None,
+                        latency=r.finish - r.arrival)
         h = self._pop_handle(r.rid)
         if h is not None:
             h._resolve(np.array(logits_row, copy=True))
 
-    def _fail_rejected(self, rejected: Sequence[Request]) -> None:
+    def _fail_rejected(self, rejected: Sequence[Request],
+                       now: Optional[float] = None) -> None:
         """Admission drops: ``DeadlineExceeded`` when the request's own
         deadline was the binding constraint (``slo_filter`` flags it),
         ``SLORejected`` when the engine-wide budget was."""
         for r in rejected:
             if r.deadline_missed:
                 self.metrics.deadline_missed += 1
+                self.trace.emit(trc.KIND_DEADLINE, t=now, rid=r.rid,
+                                reason="unmeetable")
+            else:
+                self.trace.emit(trc.KIND_REJECT, t=now, rid=r.rid,
+                                reason="slo_budget")
             h = self._pop_handle(r.rid)
             if h is not None:
                 h._fail(DeadlineExceeded(r) if r.deadline_missed
                         else SLORejected(r))
 
-    def _fail_expired(self, expired: Sequence[Request]) -> None:
+    def _fail_expired(self, expired: Sequence[Request],
+                      now: Optional[float] = None) -> None:
         """Queue-expired requests: the deadline passed before dispatch."""
         for r in expired:
             r.deadline_missed = True
             self.metrics.deadline_missed += 1
             self.expired.append(r)
+            self.trace.emit(trc.KIND_DEADLINE, t=now, rid=r.rid,
+                            reason="expired_in_queue")
             h = self._pop_handle(r.rid)
             if h is not None:
                 h._fail(DeadlineExceeded(r))
@@ -411,10 +451,15 @@ class ServingEngine:
         """Drop cancelled/expired requests from the FIFO queue.  Cancelled
         handles already failed inside ``cancel()``; expired ones fail here
         with ``DeadlineExceeded`` — either way the request leaves the system
-        having resolved exactly once."""
+        having resolved exactly once.  Runs at every scheduler wake, so the
+        queue-depth watermark sample here closes the historical gap where
+        spikes between admission rounds went unrecorded."""
         swept = self.batcher.sweep(now)
+        self.metrics.note_depth(len(self.batcher) + len(swept))
         if swept:
-            self._fail_expired([r for r in swept if not r.cancelled])
+            self._fail_expired([r for r in swept if not r.cancelled],
+                               now=now)
+            self.trace.emit(trc.KIND_SWEEP, t=now, dropped=len(swept))
 
     def _fail_outstanding(self, exc: BaseException) -> None:
         """Engine-fatal: every unresolved live handle fails with the cause
@@ -423,6 +468,8 @@ class ServingEngine:
             handles = list(self._futures.values())
             self._futures.clear()
         for h in handles:
+            self.trace.emit(trc.KIND_FAILED, rid=h.request.rid,
+                            error=type(exc).__name__)
             h._fail(exc)
 
     # -- execution ----------------------------------------------------------
@@ -552,7 +599,7 @@ class ServingEngine:
             if r.cancelled:
                 continue
             if r.expired(now):
-                self._fail_expired([r])
+                self._fail_expired([r], now=now)
                 continue
             live_window.append(r)
         window = live_window
@@ -563,6 +610,7 @@ class ServingEngine:
             model = self._delay_model()
             if model is not None:
                 quantum, spw = model
+                full_t_rids = {r.rid for r in window if r.timesteps is None}
                 window, rejected, degraded = admission.slo_filter(
                     window, now=now, budget_s=ecfg.latency_budget_s,
                     seconds_per_work=spw, batch_quantum_s=quantum,
@@ -573,7 +621,11 @@ class ServingEngine:
                 self.metrics.rejected += len(rejected)
                 self.metrics.degraded += degraded
                 self.rejected.extend(rejected)
-                self._fail_rejected(rejected)
+                self._fail_rejected(rejected, now=now)
+                for r in window:
+                    if r.timesteps is not None and r.rid in full_t_rids:
+                        self.trace.emit(trc.KIND_DEGRADE, t=now, rid=r.rid,
+                                        timesteps=r.timesteps)
         if not window:
             return [], 1.0
 
@@ -619,6 +671,11 @@ class ServingEngine:
              for g, _ in dispatchable] or [1.0])
         dispatchable.sort(
             key=lambda gt: -sum(self._eff_work(r) for r in gt[0]))
+        if dispatchable:
+            self.trace.emit(
+                trc.KIND_ADMIT, t=now, groups=len(dispatchable),
+                requests=sum(len(g) for g, _ in dispatchable),
+                predicted_balance=predicted)
         return dispatchable, predicted
 
     # -- event loops --------------------------------------------------------
@@ -634,6 +691,7 @@ class ServingEngine:
 
     def _run_virtual(self) -> Dict[str, float]:
         clock = VirtualClock()
+        self.trace.bind_clock(clock)
         for r in sorted(self._submitted, key=lambda r: (r.arrival, r.rid)):
             self.batcher.push(r)
         self._submitted = []
@@ -678,6 +736,8 @@ class ServingEngine:
 
             depth = len(self.batcher)
             window = self.batcher.take_window(t, len(ready))
+            self.trace.emit(trc.KIND_WINDOW, t=t, size=len(window),
+                            depth=depth)
             backlog = sum(w for w, f in busy_work.values() if f > t)
             dispatchable, predicted = self._admit_window(
                 window, len(ready), t, backlog_work=backlog)
@@ -701,16 +761,26 @@ class ServingEngine:
                     return self._run_batch([r.frame for r in grp],
                                            timesteps=tsteps)
 
-                def on_retry(attempt, exc, grp=grp):
+                def on_retry(attempt, exc, grp=grp, lane=lane, t=t):
                     self.metrics.retries += 1
+                    self.trace.emit(trc.KIND_RETRY, t=t, lane=lane,
+                                    attempt=attempt)
                     for r in grp:
                         r.retries += 1
+                self.trace.emit(trc.KIND_DISPATCH, t=t, lane=lane,
+                                n=len(grp),
+                                rids=tuple(r.rid for r in grp),
+                                timesteps=tsteps)
+                self.metrics.note_dispatched(len(grp))
                 try:
                     out, wall = self.dispatcher.execute(lane, exec_grp,
                                                         on_retry=on_retry)
                 except LaneFailed as e:
                     # dead lane: requests keep FIFO priority on survivors
                     last_failure = e
+                    self.metrics.note_resolved(len(grp))
+                    self.trace.emit(trc.KIND_LANE_DEATH, t=t, lane=lane,
+                                    error=type(e.cause).__name__)
                     self.batcher.push_front(grp)
                     continue
                 svc = (self.ecfg.service_time_fn(lane, wall)
@@ -724,6 +794,9 @@ class ServingEngine:
                                    finish)
                 self._accumulate(out.timestep_counts, bucket - len(grp),
                                  tsteps)
+                self._note_skip(out)
+                self.trace.emit(trc.KIND_BATCH_DONE, t=finish, lane=lane,
+                                n=len(grp), svc=svc)
                 logits = np.asarray(out.logits)
                 for j, r in enumerate(grp):
                     r.start, r.finish, r.lane, r.window = t, finish, lane, window_idx
@@ -731,6 +804,7 @@ class ServingEngine:
                         r.logits = logits[j]
                     self.metrics.record_completion(r.arrival, r.finish)
                     self._finish_request(r, logits[j])
+                self.metrics.note_resolved(len(grp))
                 work = sum(self._eff_work(r) for r in grp)
                 if work > 0:
                     norm_times[lane] = svc / work
@@ -742,10 +816,27 @@ class ServingEngine:
                 queue_depth=depth,
                 predicted=predicted if multi else None,
                 measured=admission.measured_balance(executed) if multi else None,
-                lane_wall=lane_wall)
+                lane_wall=lane_wall,
+                group_pred=[sum(self._eff_work(r) for r in g)
+                            for g in executed] if multi else (),
+                group_meas=[sum(r.events for r in g)
+                            for g in executed] if multi else ())
+            self.trace.emit(trc.KIND_ROUND, t=clock.now(),
+                            groups=len(executed), window=window_idx)
             self.dispatcher.record_round(norm_times)
             window_idx += 1
+        self.trace.emit(trc.KIND_DRAIN, t=clock.now(),
+                        served=self.metrics.served)
         return self.summary()
+
+    def _note_skip(self, out) -> None:
+        """Fold one micro-batch's pallas skip-table sparsity (mean fraction
+        of (t, b, row-block) cells skipped across the fused layers) into the
+        metrics; a no-op on backends that don't compute skip tables."""
+        fracs = getattr(out, "skip_fractions", ())
+        if fracs:
+            self.metrics.note_skip_fraction(
+                float(np.mean([float(f) for f in fracs])))
 
     # -- threaded engine ----------------------------------------------------
     def _lane_worker(self, lane: int, cache: JitCache, clock,
@@ -769,6 +860,8 @@ class ServingEngine:
 
             def on_retry(attempt, exc, grp=grp):
                 counts["retries"] += 1
+                self.trace.emit(trc.KIND_RETRY, t=clock.now(), lane=lane,
+                                attempt=attempt)
                 for r in grp:
                     r.retries += 1
 
@@ -801,12 +894,15 @@ class ServingEngine:
                     time.sleep((mult - 1.0) * wall)
                     wall *= mult
             self.supervisor.beat(lane, clock.now())
+            fracs = getattr(out, "skip_fractions", ())
+            skip = (float(np.mean([float(f) for f in fracs]))
+                    if fracs else None)
             completions.put((
                 "done", lane, grp, tsteps, widx, t_disp, clock.now(),
                 np.asarray(out.logits),
                 [np.asarray(tc, dtype=np.float64)
                  for tc in out.timestep_counts],
-                bucket, wall, counts["retries"]))
+                bucket, wall, counts["retries"], skip))
 
     def _ensure_lane_caches(self) -> List[JitCache]:
         """Warm every (bucket, T-variant) executable once on the shared
@@ -855,6 +951,7 @@ class ServingEngine:
         else:
             clock = WallClock()
             completions = queue_mod.Queue()
+        self.trace.bind_clock(clock)
         inboxes = [queue_mod.Queue() for _ in range(ecfg.num_lanes)]
         workers = [threading.Thread(
             target=self._lane_worker,
@@ -887,7 +984,13 @@ class ServingEngine:
                 predicted=rs["predicted"] if multi else None,
                 measured=(admission.measured_balance(rs["executed"])
                           if multi else None),
-                lane_wall=rs["lane_wall"])
+                lane_wall=rs["lane_wall"],
+                group_pred=[sum(self._eff_work(r) for r in g)
+                            for g in rs["executed"]] if multi else (),
+                group_meas=[sum(r.events for r in g)
+                            for g in rs["executed"]] if multi else ())
+            self.trace.emit(trc.KIND_ROUND, t=clock.now(),
+                            groups=len(rs["executed"]), window=widx)
 
         def restart_lane(lane: int) -> None:
             """Supervised recovery: fresh warmed cache fork, fresh inbox,
@@ -908,6 +1011,8 @@ class ServingEngine:
             self.dispatcher.revive(lane, t_up)
             recovery = self.supervisor.on_restarted(lane, t_up)
             self.metrics.record_restart(recovery, t_up)
+            self.trace.emit(trc.KIND_LANE_RESTART, t=t_up, lane=lane,
+                            recovery_s=recovery)
 
         def handle(item) -> None:
             if item[0] == "wake":         # live submit()/shutdown() unpark
@@ -927,6 +1032,9 @@ class ServingEngine:
                 _, _, grp, exc, retries, widx = item
                 state["last_failure"] = exc
                 self.metrics.retries += retries
+                self.metrics.note_resolved(len(grp))
+                self.trace.emit(trc.KIND_LANE_DEATH, t=clock.now(),
+                                lane=lane, error=type(exc.cause).__name__)
                 # dead lane: requests keep FIFO priority on survivors (or on
                 # this lane's supervised replacement), and become cancellable
                 # again while they wait
@@ -937,10 +1045,15 @@ class ServingEngine:
                 self.supervisor.on_death(lane, clock.now())
             else:
                 (_, _, grp, tsteps, widx, t_disp, t_done, logits, tcs,
-                 bucket, wall, retries) = item
+                 bucket, wall, retries, skip) = item
                 self.metrics.retries += retries
+                self.metrics.note_resolved(len(grp))
                 self.dispatcher.commit(lane, t_disp, wall, len(grp))
                 self._accumulate(tcs, bucket - len(grp), tsteps)
+                if skip is not None:
+                    self.metrics.note_skip_fraction(skip)
+                self.trace.emit(trc.KIND_BATCH_DONE, t=t_done, lane=lane,
+                                n=len(grp), svc=wall)
                 for j, r in enumerate(grp):
                     r.start, r.finish, r.lane, r.window = (t_disp, t_done,
                                                            lane, widx)
@@ -995,6 +1108,9 @@ class ServingEngine:
                     abandoned.add(id(grp))
                     busy.discard(lane)
                     inflight_work.pop(lane, None)
+                    self.metrics.note_resolved(len(grp))
+                    self.trace.emit(trc.KIND_HANG, t=now, lane=lane,
+                                    n=len(grp))
                     state["last_failure"] = RuntimeError(
                         f"lane {lane} presumed hung: no heartbeat in "
                         f"{self.supervisor.hang_timeout_s}s")
@@ -1023,6 +1139,8 @@ class ServingEngine:
                 if idle and na is not None and na <= now:
                     depth = len(self.batcher)
                     window = self.batcher.take_window(now, len(idle))
+                    self.trace.emit(trc.KIND_WINDOW, t=now,
+                                    size=len(window), depth=depth)
                     dispatchable, predicted = self._admit_window(
                         window, len(idle), now,
                         backlog_work=sum(inflight_work.values()))
@@ -1042,8 +1160,15 @@ class ServingEngine:
                             with self._futures_lock:
                                 for r in grp:
                                     r.in_flight = True
+                            t_disp = clock.now()
+                            self.trace.emit(
+                                trc.KIND_DISPATCH, t=t_disp, lane=lane,
+                                n=len(grp),
+                                rids=tuple(r.rid for r in grp),
+                                timesteps=tsteps)
+                            self.metrics.note_dispatched(len(grp))
                             inboxes[lane].put(
-                                (grp, tsteps, window_idx, clock.now()))
+                                (grp, tsteps, window_idx, t_disp))
                         window_idx += 1
                     continue
                 # nothing dispatchable: park until the next timed event — a
@@ -1081,6 +1206,8 @@ class ServingEngine:
             for wkr in workers:
                 wkr.join(timeout=5.0)
             self._lane_compiles = sum(c.compiles for c in caches)
+            self.trace.emit(trc.KIND_DRAIN, t=clock.now(),
+                            served=self.metrics.served)
         return self.summary()
 
     # -- live serving (serve_forever) ---------------------------------------
@@ -1153,6 +1280,7 @@ class ServingEngine:
             raise RuntimeError("engine is not live (serve_forever not running)")
         with self._submit_lock:
             self._stop.set()
+        self.trace.emit(trc.KIND_SHUTDOWN, t=self._live_clock.now())
         self._completions.put(("wake",))
         self._live_thread.join(timeout)
         still_running = self._live_thread.is_alive()
@@ -1216,6 +1344,64 @@ class ServingEngine:
         return time.perf_counter() - t0
 
     # -- reporting ----------------------------------------------------------
+    def snapshot(self) -> MetricsSnapshot:
+        """A consistent point-in-time view of the engine, callable from any
+        thread *while* ``serve_forever()`` (or ``run()``) is mid-burst.
+
+        Each source is read under its own lock — metrics counters and
+        rolling percentiles (``ServingMetrics.snapshot_fields``), queue
+        depth (batcher), lane health (dispatcher + straggler monitor),
+        restart budget state (supervisor) — so the snapshot never tears a
+        single subsystem's state; ``LiveServer.metrics()`` is the public
+        route here."""
+        m = self.metrics.snapshot_fields()
+        lane_stats = self.dispatcher.lane_stats()
+        sup = self.supervisor.stats()
+        if self._live_clock is not None:
+            ts = self._live_clock.now()
+        elif self.trace._clock is not None:
+            ts = self.trace._clock.now()
+        else:
+            ts = 0.0
+        return MetricsSnapshot(
+            ts=float(ts),
+            live=self.live,
+            served=int(m["served"]),
+            queued=len(self.batcher),
+            in_flight=int(m["in_flight"]),
+            rejected=int(m["rejected"]),
+            degraded=int(m["degraded"]),
+            deadline_missed=int(m["deadline_missed"]),
+            cancelled=int(m["cancelled"]),
+            queue_full=int(m["queue_full"]),
+            rounds=int(m["rounds"]),
+            retries=int(m["retries"]),
+            queue_watermark=int(m["queue_watermark"]),
+            p50_latency_s=float(m["p50_latency_s"]),
+            p99_latency_s=float(m["p99_latency_s"]),
+            fps=float(m["fps"]),
+            wall_s=float(m["wall_s"]),
+            predicted_balance=float(m["predicted_balance"]),
+            measured_balance=float(m["measured_balance"]),
+            workload_residual=float(m["workload_residual"]),
+            residual_rounds=int(m["residual_rounds"]),
+            skip_sparsity=float(m["skip_sparsity"]),
+            skip_batches=int(m["skip_batches"]),
+            lanes_alive=sum(1 for l in lane_stats if l["alive"]),
+            lanes_total=len(lane_stats),
+            lane_seconds_per_work=tuple(
+                self.dispatcher.monitor.per_host_seconds_per_work()),
+            lane_served=tuple(int(l["served"]) for l in lane_stats),
+            restarts=int(sup["restarts"]),
+            restart_budget=self.ecfg.restart_budget,
+            per_lane_restarts=tuple(sup["per_lane_restarts"]),
+            permanently_dead=tuple(sup["permanently_dead"]),
+            pending_restarts=tuple(sup["pending_restarts"]),
+            trace_enabled=self.trace.enabled,
+            trace_events=len(self.trace),
+            trace_dropped=self.trace.dropped,
+        )
+
     def summary(self) -> Dict[str, float]:
         s = self.metrics.summary()
         s["compiles"] = self.cache.compiles + self._lane_compiles
