@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Project-invariant lint gate: run the stdlib-ast static checker
+# (repro.analysis — clock discipline, lock discipline, Pallas BlockSpec
+# consistency, API hygiene) over the package and the tests.  Exits nonzero
+# on any finding; see docs/analysis.md for rules and suppression syntax.
+#
+# Usage: scripts/lint.sh [extra repro.analysis args, e.g. --json]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m repro.analysis "$@" src/repro tests
+echo "== lint OK =="

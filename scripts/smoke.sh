@@ -1,11 +1,15 @@
 #!/usr/bin/env bash
-# Smoke gate: fast tier-1 tests (slow-marked system/LM suites excluded by
-# pytest.ini) + the quick kernel/model-forward bench and the quick serving
-# load bench, which refresh BENCH_kernels.json and BENCH_serving.json so
-# every PR leaves both kernel and serving perf-trajectory data points.
+# Smoke gate: static analysis + fast tier-1 tests (slow-marked system/LM
+# suites excluded by pytest.ini) + the quick kernel/model-forward bench and
+# the quick serving load bench, which refresh BENCH_kernels.json and
+# BENCH_serving.json so every PR leaves both kernel and serving
+# perf-trajectory data points.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== static analysis (repro.analysis) =="
+python -m repro.analysis src/repro tests
 
 echo "== tier-1 (fast) tests =="
 python -m pytest -x -q

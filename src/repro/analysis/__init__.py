@@ -1,0 +1,76 @@
+"""Project-invariant static checker (stdlib-``ast`` only, no jax needed).
+
+The repo's headline guarantees — byte-identical VirtualClock replays,
+exactly-once request resolution across three engine locks, halo BlockSpec
+index math — are invariants, not behaviors: a test samples them, this
+package proves them at every call site.  Like the paper's APRC predicting
+workload *before* execution, the checker rejects a schedule-breaking call
+before anything runs.
+
+Rules (see ``docs/analysis.md`` for the full contract and suppression
+syntax):
+
+- ``clock-discipline``  (:mod:`repro.analysis.clock`)
+- ``lock-discipline``   (:mod:`repro.analysis.locks`)
+- ``pallas-consistency`` (:mod:`repro.analysis.pallas`)
+- ``print-ban`` / ``all-exports`` / ``frozen-spec``
+  (:mod:`repro.analysis.hygiene`)
+
+CLI: ``python -m repro.analysis [--json] [--rule NAME]... paths...``
+exits 1 when any finding survives suppression.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis.base import (Finding, Rule, SourceFile, analyze_file,
+                                 iter_py_files)
+from repro.analysis.clock import ClockDisciplineRule
+from repro.analysis.hygiene import AllExportsRule, FrozenSpecRule, PrintBanRule
+from repro.analysis.locks import LockDisciplineRule
+from repro.analysis.pallas import PallasConsistencyRule
+
+__all__ = [
+    "Finding",
+    "Rule",
+    "SourceFile",
+    "ALL_RULES",
+    "rule_registry",
+    "run_analysis",
+]
+
+ALL_RULES = (
+    ClockDisciplineRule,
+    LockDisciplineRule,
+    PallasConsistencyRule,
+    PrintBanRule,
+    AllExportsRule,
+    FrozenSpecRule,
+)
+
+
+def rule_registry() -> Dict[str, Rule]:
+    """Fresh name -> rule-instance mapping (rules are stateless, but a
+    fresh registry keeps callers from depending on shared instances)."""
+    return {cls.name: cls() for cls in ALL_RULES}
+
+
+def run_analysis(paths: Sequence[Path],
+                 rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run the selected rules (default: all) over ``paths`` and return
+    surviving findings, sorted by location."""
+    registry = rule_registry()
+    if rules:
+        unknown = sorted(set(rules) - set(registry))
+        if unknown:
+            raise ValueError(f"unknown rule(s): {', '.join(unknown)}; "
+                             f"known: {', '.join(sorted(registry))}")
+        selected = [registry[r] for r in rules]
+    else:
+        selected = list(registry.values())
+    findings: List[Finding] = []
+    for path in iter_py_files(paths):
+        findings.extend(analyze_file(SourceFile(path), selected))
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings

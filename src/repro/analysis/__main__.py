@@ -1,0 +1,62 @@
+"""CLI for the project-invariant static checker.
+
+Usage::
+
+    python -m repro.analysis [--json] [--rule NAME]... paths...
+
+Exit status 0 when clean, 1 when findings survive suppression, 2 on bad
+usage.  Findings print one per line (``path:line:col: rule: message``);
+``--json`` emits a JSON array instead for tooling.
+
+This is a linter: its findings on stdout ARE the artifact, so its own
+prints are allowlisted.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from repro.analysis import rule_registry, run_analysis
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    registry = rule_registry()
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Project-invariant static checker (clock discipline, "
+                    "lock discipline, Pallas BlockSpec consistency, API "
+                    "hygiene).")
+    ap.add_argument("paths", nargs="*", type=Path,
+                    help="files or directories to check")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit findings as a JSON array")
+    ap.add_argument("--rule", action="append", dest="rules",
+                    choices=sorted(registry), metavar="NAME",
+                    help="run only this rule (repeatable); default: all")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="list rule names and descriptions, then exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name in sorted(registry):
+            print(f"{name}: {registry[name].description}")  # lint: allow(print-ban)
+        return 0
+    if not args.paths:
+        ap.error("no paths given (or use --list-rules)")
+
+    findings = run_analysis(args.paths, args.rules)
+    if args.as_json:
+        print(json.dumps([f.to_dict() for f in findings], indent=2))  # lint: allow(print-ban)
+    else:
+        for f in findings:
+            print(f.render())  # lint: allow(print-ban)
+        if findings:
+            print(f"{len(findings)} finding(s)", file=sys.stderr)  # lint: allow(print-ban)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

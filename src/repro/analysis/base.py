@@ -1,0 +1,167 @@
+"""Shared machinery for the project-invariant static checker.
+
+Everything here is plain ``ast`` — no imports of the checked code, no
+execution — so the analyzer can run on a broken tree, on fixture snippets,
+and inside CI before any dependency beyond the stdlib is importable.
+
+Two inline annotations (parsed from raw source comments, so they work on
+any line the tokenizer accepts):
+
+``# lint: allow(<rule>[, <rule>...])``
+    Suppress findings of the named rules on the annotated line.  A comment
+    on its own line suppresses the line below it; a trailing comment
+    suppresses its own line (and, as a consequence of the one-line
+    look-back, the line after — which covers two-line ``if``/``raise``
+    idioms).  ``allow(*)`` suppresses every rule.
+
+``# lint: holds(<lock>)``
+    On a ``def`` line: the lock-discipline checker treats the method body
+    as if ``self.<lock>`` were held (for callers that own the object or
+    the lock by contract).  See ``repro.analysis.locks``.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set
+
+__all__ = ["Finding", "SourceFile", "Rule", "iter_py_files", "analyze_file"]
+
+_ALLOW_RE = re.compile(r"#\s*lint:\s*allow\(([^)]*)\)")
+_HOLDS_RE = re.compile(r"#\s*lint:\s*holds\(([^)]*)\)")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule}: {self.message}"
+
+    def to_dict(self) -> Dict[str, object]:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "message": self.message}
+
+
+class SourceFile:
+    """One parsed source file plus its inline lint annotations."""
+
+    def __init__(self, path: Path, text: Optional[str] = None):
+        self.path = Path(path)
+        self.text = self.path.read_text() if text is None else text
+        self.lines = self.text.splitlines()
+        self.parts = self.path.resolve().parts
+        self._tree: Optional[ast.Module] = None
+        self.parse_error: Optional[SyntaxError] = None
+        # line -> set of rule names allowed there (parsed once, lazily)
+        self._allows: Optional[Dict[int, Set[str]]] = None
+
+    @property
+    def tree(self) -> Optional[ast.Module]:
+        if self._tree is None and self.parse_error is None:
+            try:
+                self._tree = ast.parse(self.text, filename=str(self.path))
+            except SyntaxError as e:
+                self.parse_error = e
+        return self._tree
+
+    # -- suppression / annotation parsing ------------------------------------
+    def _allow_map(self) -> Dict[int, Set[str]]:
+        if self._allows is None:
+            allows: Dict[int, Set[str]] = {}
+            for i, line in enumerate(self.lines, start=1):
+                m = _ALLOW_RE.search(line)
+                if m:
+                    rules = {r.strip() for r in m.group(1).split(",")
+                             if r.strip()}
+                    allows.setdefault(i, set()).update(rules)
+            self._allows = allows
+        return self._allows
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        """True when an ``allow`` annotation on this line or the line above
+        names ``rule`` (or ``*``)."""
+        allows = self._allow_map()
+        for ln in (line, line - 1):
+            rules = allows.get(ln)
+            if rules and (rule in rules or "*" in rules):
+                return True
+        return False
+
+    def holds_locks(self, node: ast.AST) -> Set[str]:
+        """Lock names a ``# lint: holds(...)`` annotation grants to a
+        function definition (scanned over the signature lines)."""
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return set()
+        first_body = node.body[0].lineno if node.body else node.lineno
+        out: Set[str] = set()
+        for ln in range(node.lineno, first_body + 1):
+            if 1 <= ln <= len(self.lines):
+                m = _HOLDS_RE.search(self.lines[ln - 1])
+                if m:
+                    out.update(l.strip() for l in m.group(1).split(",")
+                               if l.strip())
+        return out
+
+    def in_package_dir(self, *names: str) -> bool:
+        """True when any of ``names`` appears as a directory component of
+        this file's path (how rules scope themselves to subsystems)."""
+        return any(n in self.parts[:-1] for n in names)
+
+    def finding(self, rule: str, node: ast.AST, message: str) -> Finding:
+        return Finding(rule=rule, path=str(self.path),
+                       line=getattr(node, "lineno", 1),
+                       col=getattr(node, "col_offset", 0), message=message)
+
+
+class Rule:
+    """One named invariant.  Subclasses implement ``check``."""
+
+    name: str = ""
+    description: str = ""
+
+    def check(self, sf: SourceFile) -> Iterator[Finding]:
+        raise NotImplementedError
+
+
+def iter_py_files(paths: Sequence[Path]) -> Iterator[Path]:
+    """Expand files/directories into a deterministic .py file sequence,
+    skipping caches and hidden directories."""
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                parts = f.parts
+                if "__pycache__" in parts or any(
+                        s.startswith(".") and s not in (".", "..")
+                        for s in parts):
+                    continue
+                yield f
+        elif p.suffix == ".py":
+            yield p
+
+
+def analyze_file(sf: SourceFile, rules: Iterable[Rule]) -> List[Finding]:
+    """Run ``rules`` over one file, dropping suppressed findings.  A file
+    that does not parse yields a single ``parse-error`` finding (the gate
+    must fail loudly, not skip silently)."""
+    if sf.tree is None:
+        e = sf.parse_error
+        return [Finding(rule="parse-error", path=str(sf.path),
+                        line=e.lineno or 1, col=e.offset or 0,
+                        message=f"syntax error: {e.msg}")]
+    out: List[Finding] = []
+    for rule in rules:
+        for f in rule.check(sf):
+            if not sf.suppressed(f.rule, f.line):
+                out.append(f)
+    out.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return out

@@ -1,0 +1,112 @@
+"""clock-discipline: wall-clock calls are forbidden in time-sensitive code.
+
+Scope: files under a ``serving/``, ``runtime/``, or ``obs/`` directory.
+Those subsystems promise deterministic virtual-clock replay (see
+``docs/serving.md``): the same trace replayed through ``VirtualClock``
+must produce byte-identical schedules.  One raw ``time.sleep`` or
+``time.time`` in that code path silently re-introduces wall time — chaos
+tests start really sleeping, replays stop being reproducible — which is
+exactly what happened in ``runtime/fault_tolerance.py`` before this rule
+existed.
+
+All timing must route through ``repro.serving.clock.Clock``.  The single
+allowlisted implementation site is the ``WallClock`` class body inside
+``serving/clock.py``; everything else needs an explicit
+``# lint: allow(clock-discipline)`` with a reason.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Set, Tuple
+
+from repro.analysis.base import Finding, Rule, SourceFile
+
+__all__ = ["ClockDisciplineRule"]
+
+SCOPE_DIRS = ("serving", "runtime", "obs")
+
+# time-module attributes that read or consume wall time
+_TIME_ATTRS = {
+    "time", "time_ns", "sleep", "monotonic", "monotonic_ns",
+    "perf_counter", "perf_counter_ns",
+}
+# datetime methods that read wall time
+_DATETIME_ATTRS = {"now", "utcnow", "today"}
+
+
+def _wallclock_ranges(sf: SourceFile) -> List[Tuple[int, int]]:
+    """Line ranges of ``class WallClock`` bodies in ``serving/clock.py`` —
+    the one place allowed to touch the ``time`` module."""
+    if sf.parts[-1] != "clock.py" or "serving" not in sf.parts[:-1]:
+        return []
+    out = []
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.ClassDef) and node.name == "WallClock":
+            out.append((node.lineno, node.end_lineno or node.lineno))
+    return out
+
+
+class ClockDisciplineRule(Rule):
+    name = "clock-discipline"
+    description = ("forbid direct time.time/sleep/monotonic/perf_counter and "
+                   "datetime.now in serving/, runtime/, obs/ — timing must go "
+                   "through serving.clock.Clock")
+
+    def check(self, sf: SourceFile) -> Iterator[Finding]:
+        if not sf.in_package_dir(*SCOPE_DIRS):
+            return
+        exempt = _wallclock_ranges(sf)
+
+        def exempted(node: ast.AST) -> bool:
+            ln = getattr(node, "lineno", 0)
+            return any(lo <= ln <= hi for lo, hi in exempt)
+
+        # names bound to the ``time`` module in this file
+        time_aliases: Set[str] = set()
+        # names imported directly from time (``from time import sleep``)
+        direct: Dict[str, str] = {}
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == "time":
+                        time_aliases.add(a.asname or "time")
+            elif isinstance(node, ast.ImportFrom) and node.module == "time":
+                for a in node.names:
+                    if a.name in _TIME_ATTRS:
+                        direct[a.asname or a.name] = a.name
+                        if not exempted(node):
+                            yield sf.finding(
+                                self.name, node,
+                                f"import of time.{a.name} — route timing "
+                                f"through serving.clock.Clock")
+
+        for node in ast.walk(sf.tree):
+            if exempted(node):
+                continue
+            if isinstance(node, ast.Attribute):
+                base = node.value
+                if (isinstance(base, ast.Name) and base.id in time_aliases
+                        and node.attr in _TIME_ATTRS):
+                    yield sf.finding(
+                        self.name, node,
+                        f"direct wall-clock call time.{node.attr} — route "
+                        f"through serving.clock.Clock (WallClock in "
+                        f"serving/clock.py is the only allowed "
+                        f"implementation site)")
+                elif node.attr in _DATETIME_ATTRS:
+                    try:
+                        src = ast.unparse(base)
+                    except Exception:  # pragma: no cover - defensive
+                        src = ""
+                    if "datetime" in src.split("."):
+                        yield sf.finding(
+                            self.name, node,
+                            f"wall-clock read {src}.{node.attr}() — route "
+                            f"through serving.clock.Clock")
+            elif (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                    and node.func.id in direct):
+                yield sf.finding(
+                    self.name, node,
+                    f"direct wall-clock call {node.func.id}() (time."
+                    f"{direct[node.func.id]}) — route through "
+                    f"serving.clock.Clock")

@@ -1,0 +1,219 @@
+"""api-hygiene: three small invariants that bit-rot silently.
+
+``print-ban``
+    ``print()`` is forbidden inside the ``repro`` package: PR 7 moved all
+    diagnostics to ``repro.obs.log`` loggers (stderr, level-filtered,
+    machine-greppable).  CLI entry points under ``launch/`` that emit a
+    machine-readable artifact on stdout (the roofline table, dry-run JSON
+    lines) keep those specific prints with an explicit
+    ``# lint: allow(print-ban)``.  Code outside the package (tests,
+    scripts) may print freely.
+
+``all-exports``
+    Every string in a module's ``__all__`` must resolve to a name the
+    module actually binds at top level — a stale entry turns
+    ``from m import *`` and re-export chains into ImportErrors at the
+    worst moment.
+
+``frozen-spec``
+    ``@dataclass(frozen=True)`` spec classes are immutable contracts
+    (``repro.api.specs``).  Assigning to their attributes outside
+    ``__post_init__`` — including the ``object.__setattr__`` escape
+    hatch — is flagged; evolve specs with ``dataclasses.replace``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set
+
+from repro.analysis.base import Finding, Rule, SourceFile
+
+__all__ = ["PrintBanRule", "AllExportsRule", "FrozenSpecRule"]
+
+
+class PrintBanRule(Rule):
+    name = "print-ban"
+    description = ("forbid print() inside the repro package — use "
+                   "repro.obs.log loggers (stdout artifacts in launch/ "
+                   "CLIs carry explicit allow annotations)")
+
+    def check(self, sf: SourceFile) -> Iterator[Finding]:
+        if "repro" not in sf.parts[:-1]:
+            return
+        for node in ast.walk(sf.tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id == "print"):
+                yield sf.finding(
+                    self.name, node,
+                    "print() in package code — use repro.obs.log."
+                    "get_logger(...) (allow() only for stdout artifacts "
+                    "scripts consume)")
+
+
+def _top_level_bindings(body: List[ast.stmt]) -> Optional[Set[str]]:
+    """Names a module binds at import time.  Returns None when a
+    ``from x import *`` makes the binding set statically unknowable."""
+    names: Set[str] = set()
+
+    def add_target(t: ast.expr) -> None:
+        if isinstance(t, ast.Name):
+            names.add(t.id)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                add_target(e)
+        elif isinstance(t, ast.Starred):
+            add_target(t.value)
+
+    for stmt in body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            names.add(stmt.name)
+        elif isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                add_target(t)
+        elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+            add_target(stmt.target)
+        elif isinstance(stmt, ast.Import):
+            for a in stmt.names:
+                names.add(a.asname or a.name.split(".")[0])
+        elif isinstance(stmt, ast.ImportFrom):
+            for a in stmt.names:
+                if a.name == "*":
+                    return None
+                names.add(a.asname or a.name)
+        elif isinstance(stmt, (ast.If, ast.Try)):
+            sub_bodies = [stmt.body]
+            if isinstance(stmt, ast.If):
+                sub_bodies.append(stmt.orelse)
+            else:
+                sub_bodies.extend([h.body for h in stmt.handlers])
+                sub_bodies.extend([stmt.orelse, stmt.finalbody])
+            for sub in sub_bodies:
+                got = _top_level_bindings(sub)
+                if got is None:
+                    return None
+                names.update(got)
+        elif isinstance(stmt, (ast.For, ast.While, ast.With)):
+            if isinstance(stmt, ast.For):
+                add_target(stmt.target)
+            if isinstance(stmt, ast.With):
+                for item in stmt.items:
+                    if item.optional_vars is not None:
+                        add_target(item.optional_vars)
+            got = _top_level_bindings(stmt.body)
+            if got is None:
+                return None
+            names.update(got)
+    return names
+
+
+class AllExportsRule(Rule):
+    name = "all-exports"
+    description = "every __all__ entry must resolve to a real module attribute"
+
+    def check(self, sf: SourceFile) -> Iterator[Finding]:
+        tree = sf.tree
+        all_node: Optional[ast.expr] = None
+        all_stmt: Optional[ast.stmt] = None
+        for stmt in tree.body:
+            if isinstance(stmt, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == "__all__"
+                    for t in stmt.targets):
+                all_node, all_stmt = stmt.value, stmt
+        if all_node is None:
+            return
+        if not isinstance(all_node, (ast.List, ast.Tuple)):
+            yield sf.finding(self.name, all_stmt,
+                             "__all__ must be a literal list/tuple of "
+                             "strings for static export checking")
+            return
+        bindings = _top_level_bindings(tree.body)
+        if bindings is None:
+            return  # wildcard import: unknowable, don't guess
+        for elt in all_node.elts:
+            if not (isinstance(elt, ast.Constant)
+                    and isinstance(elt.value, str)):
+                yield sf.finding(self.name, elt,
+                                 "__all__ entries must be string literals")
+                continue
+            if elt.value not in bindings:
+                yield sf.finding(
+                    self.name, elt,
+                    f"__all__ exports '{elt.value}' but the module never "
+                    f"binds that name")
+
+
+class FrozenSpecRule(Rule):
+    name = "frozen-spec"
+    description = ("no attribute assignment on frozen dataclass instances "
+                   "outside __post_init__ (use dataclasses.replace)")
+
+    @staticmethod
+    def _is_frozen(cls: ast.ClassDef) -> bool:
+        for dec in cls.decorator_list:
+            if not isinstance(dec, ast.Call):
+                continue
+            f = dec.func
+            is_dc = (isinstance(f, ast.Name) and f.id == "dataclass") or \
+                    (isinstance(f, ast.Attribute) and f.attr == "dataclass")
+            if not is_dc:
+                continue
+            for kw in dec.keywords:
+                if (kw.arg == "frozen" and isinstance(kw.value, ast.Constant)
+                        and kw.value.value is True):
+                    return True
+        return False
+
+    def check(self, sf: SourceFile) -> Iterator[Finding]:
+        # (a) inside frozen classes: self.x = ... outside __post_init__
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.ClassDef) and self._is_frozen(node):
+                for method in node.body:
+                    if not isinstance(method, (ast.FunctionDef,
+                                               ast.AsyncFunctionDef)):
+                        continue
+                    if method.name == "__post_init__":
+                        continue
+                    for sub in ast.walk(method):
+                        target = None
+                        if isinstance(sub, (ast.Assign,)):
+                            for t in sub.targets:
+                                if (isinstance(t, ast.Attribute)
+                                        and isinstance(t.value, ast.Name)
+                                        and t.value.id == "self"):
+                                    target = t
+                        elif isinstance(sub, ast.AugAssign):
+                            t = sub.target
+                            if (isinstance(t, ast.Attribute)
+                                    and isinstance(t.value, ast.Name)
+                                    and t.value.id == "self"):
+                                target = t
+                        if target is not None:
+                            yield sf.finding(
+                                self.name, target,
+                                f"{node.name} is @dataclass(frozen=True): "
+                                f"assignment to self.{target.attr} in "
+                                f"{method.name} — use dataclasses.replace")
+
+        # (b) anywhere: object.__setattr__ outside a __post_init__ body
+        post_init_ranges = [
+            (m.lineno, m.end_lineno or m.lineno)
+            for node in ast.walk(sf.tree) if isinstance(node, ast.ClassDef)
+            for m in node.body
+            if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and m.name == "__post_init__"
+        ]
+        for node in ast.walk(sf.tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "__setattr__"
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id == "object"):
+                ln = node.lineno
+                if any(lo <= ln <= hi for lo, hi in post_init_ranges):
+                    continue
+                yield sf.finding(
+                    self.name, node,
+                    "object.__setattr__ outside __post_init__ mutates a "
+                    "frozen instance — use dataclasses.replace")

@@ -1,0 +1,158 @@
+"""lock-discipline: declared guarded attributes are only touched under
+their lock.
+
+A class opts in by declaring, in its class body::
+
+    _GUARDED_BY = {"_futures": "_futures_lock", "_next_rid": "_rid_lock"}
+
+The checker then verifies that every ``self.<attr>`` read or write of a
+declared attribute is *lexically* inside ``with self.<lock>:`` for the
+declared lock, in every method except ``__init__``/``__post_init__``
+(construction happens before the object is shared).  Methods that hold
+the lock by contract (private helpers called with the lock already
+taken) are annotated ``# lint: holds(<lock>)`` on the ``def`` line.
+
+This is a lexical checker, not an escape analysis: it can't see aliasing
+(``f = self._futures`` then mutating ``f`` outside the lock) or calls
+that re-enter.  That is the point — the repo's locking style is "take
+the lock, touch the dict, get out", and anything the lexical check can't
+prove is restructured or explicitly annotated rather than waved through.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set
+
+from repro.analysis.base import Finding, Rule, SourceFile
+
+__all__ = ["LockDisciplineRule"]
+
+
+def _guarded_registry(cls: ast.ClassDef) -> Optional[Dict[str, str]]:
+    """Extract a literal ``_GUARDED_BY`` dict from a class body, or None.
+    Accepts plain and annotated (``ClassVar``) assignments."""
+    for stmt in cls.body:
+        value = None
+        if isinstance(stmt, ast.Assign):
+            if any(isinstance(t, ast.Name) and t.id == "_GUARDED_BY"
+                   for t in stmt.targets):
+                value = stmt.value
+        elif isinstance(stmt, ast.AnnAssign):
+            if (isinstance(stmt.target, ast.Name)
+                    and stmt.target.id == "_GUARDED_BY"):
+                value = stmt.value
+        if value is None:
+            continue
+        if not isinstance(value, ast.Dict):
+            return None
+        out: Dict[str, str] = {}
+        for k, v in zip(value.keys, value.values):
+            if (isinstance(k, ast.Constant) and isinstance(k.value, str)
+                    and isinstance(v, ast.Constant)
+                    and isinstance(v.value, str)):
+                out[k.value] = v.value
+        return out
+    return None
+
+
+def _with_locks(node: ast.With) -> List[str]:
+    """Names of ``self.<lock>`` context managers entered by this With."""
+    out = []
+    for item in node.items:
+        e = item.context_expr
+        if (isinstance(e, ast.Attribute) and isinstance(e.value, ast.Name)
+                and e.value.id == "self"):
+            out.append(e.attr)
+    return out
+
+
+class _MethodWalker:
+    """Walk one method body tracking which self-locks are lexically held."""
+
+    def __init__(self, rule: "LockDisciplineRule", sf: SourceFile,
+                 cls: ast.ClassDef, guarded: Dict[str, str]):
+        self.rule = rule
+        self.sf = sf
+        self.cls = cls
+        self.guarded = guarded
+        self.findings: List[Finding] = []
+
+    def walk_function(self, fn: ast.AST, inherited: Set[str]) -> None:
+        held = set(inherited) | self.sf.holds_locks(fn)
+        for stmt in fn.body:
+            self._visit(stmt, held)
+
+    def _visit(self, node: ast.AST, held: Set[str]) -> None:
+        if isinstance(node, ast.With):
+            inner = held | set(_with_locks(node))
+            for item in node.items:
+                self._visit(item.context_expr, held)
+            for stmt in node.body:
+                self._visit(stmt, inner)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested defs run later, possibly on another thread: they do
+            # NOT inherit the enclosing lexical lock context
+            self.walk_function(node, set())
+            return
+        if isinstance(node, ast.Lambda):
+            self._visit(node.body, set())
+            return
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self"
+                and node.attr in self.guarded):
+            lock = self.guarded[node.attr]
+            if lock not in held:
+                verb = ("write to" if isinstance(node.ctx,
+                                                 (ast.Store, ast.Del))
+                        else "read of")
+                self.findings.append(self.sf.finding(
+                    self.rule.name, node,
+                    f"{self.cls.name}: {verb} self.{node.attr} outside "
+                    f"'with self.{lock}:' (declared in _GUARDED_BY; use "
+                    f"# lint: holds({lock}) if the caller owns the lock)"))
+        for child in ast.iter_child_nodes(node):
+            self._visit(child, held)
+
+
+class LockDisciplineRule(Rule):
+    name = "lock-discipline"
+    description = ("verify every self.<attr> access declared in a class's "
+                   "_GUARDED_BY registry happens inside 'with self.<lock>:'")
+
+    # methods where unsynchronized access is allowed: the object is not
+    # shared with other threads yet
+    CONSTRUCTION = {"__init__", "__post_init__"}
+
+    def check(self, sf: SourceFile) -> Iterator[Finding]:
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            guarded = _guarded_registry(node)
+            if guarded is None:
+                # a _GUARDED_BY that exists but is not a literal
+                # {str: str} dict is itself an error — silent non-checking
+                # would be worse than noise
+                for stmt in node.body:
+                    targets = []
+                    if isinstance(stmt, ast.Assign):
+                        targets = stmt.targets
+                    elif isinstance(stmt, ast.AnnAssign):
+                        targets = [stmt.target]
+                    if any(isinstance(t, ast.Name) and t.id == "_GUARDED_BY"
+                           for t in targets):
+                        yield sf.finding(
+                            self.name, stmt,
+                            f"{node.name}._GUARDED_BY must be a literal "
+                            f"dict of 'attr' -> 'lock' strings")
+                continue
+            if not guarded:
+                continue
+            walker = _MethodWalker(self, sf, node, guarded)
+            for stmt in node.body:
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    if stmt.name in self.CONSTRUCTION:
+                        continue
+                    walker.walk_function(stmt, set())
+            yield from walker.findings

@@ -34,6 +34,13 @@ only equal-size contiguous channel groups.
 Block sizing: Cout_group should be a multiple of 128 (MXU lanes) and
 rows*W_out a multiple of 8 (sublanes) on real TPU; the kernel itself is
 shape-generic and is validated in interpret mode on CPU.
+
+The BlockSpec contracts at each ``pl.pallas_call`` site here (index-map
+arity vs grid rank, block rank vs index-map return arity, block dims
+dividing the padded shapes, operand/spec counts) are checked statically by
+``repro.analysis``'s pallas-consistency rule (docs/analysis.md) — keep
+grid/spec edits in a shape the checker can resolve (literal tuples, or
+names assigned once in the same function).
 """
 from __future__ import annotations
 

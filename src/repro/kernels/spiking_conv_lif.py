@@ -50,6 +50,14 @@ BPTT in the time-batched order:
 
 This is the same gradient the ``backend="ref"``/``"batched"`` surrogate
 scans compute, reordered — parity is asserted in tests/test_snn_backends.py.
+
+The BlockSpec contracts at each ``pl.pallas_call`` site (index-map arity
+vs grid rank, block rank vs index-map return arity, block dims dividing
+the padded shapes, operand/spec counts) are checked statically by
+``repro.analysis``'s pallas-consistency rule (docs/analysis.md), which
+resolves the named ``seq_spec``/``mem_spec`` assignments and the
+conditional ``out_specs.append`` below — keep spec plumbing in that
+resolvable shape.
 """
 from __future__ import annotations
 

@@ -28,7 +28,10 @@ from repro.config import SHAPES_BY_NAME, get_arch
 from repro.launch import cells as cells_mod
 from repro.launch.hlo_analysis import analyze_collectives
 from repro.launch.mesh import make_production_mesh
+from repro.obs.log import LOG_LEVELS, configure_logging, get_logger
 from repro.sharding.context import ShardingCtx, use_sharding
+
+log = get_logger("launch")
 
 
 def _cost_dict(compiled) -> Dict[str, float]:
@@ -117,7 +120,10 @@ def main() -> None:
     ap.add_argument("--keep-hlo", action="store_true")
     ap.add_argument("--profile", default="",
                     help="parallelism profile override (see sharding.context.RULE_PROFILES)")
+    ap.add_argument("--log-level", default="info", choices=LOG_LEVELS,
+                    help="stderr log verbosity (repro.obs.log)")
     args = ap.parse_args()
+    configure_logging(args.log_level)
 
     if args.all:
         todo = cells_mod.all_cells()
@@ -129,11 +135,17 @@ def main() -> None:
     out_f = open(args.out, "a") if args.out else None
     for arch, shape in todo:
         for mp in meshes:
+            log.info("dry-running %s x %s (multi_pod=%s)", arch, shape, mp)
             rec = run_cell(arch, shape, multi_pod=mp, keep_hlo=args.keep_hlo,
                            profile=args.profile)
             line = json.dumps(rec)
-            print(json.dumps({k: v for k, v in rec.items()
+            # the JSON record lines on stdout are the machine-readable
+            # contract scripts pipe from (roofline.load_rows reads the same
+            # records from --out) — they stay prints
+            print(json.dumps({k: v for k, v in rec.items()  # lint: allow(print-ban)
                               if k not in ("traceback",)}), flush=True)
+            log.info("cell %s x %s mesh=%s: %s", arch, shape, rec["mesh"],
+                     rec["status"])
             if out_f:
                 out_f.write(line + "\n")
                 out_f.flush()

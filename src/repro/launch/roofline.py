@@ -23,6 +23,9 @@ from typing import Dict, Optional
 
 from repro.config import SHAPES_BY_NAME, ArchConfig, ShapeConfig, get_arch
 from repro.models.counting import count_params, step_flops
+from repro.obs.log import LOG_LEVELS, configure_logging, get_logger
+
+log = get_logger("launch")
 
 PEAK_FLOPS = 197e12          # bf16 per chip (v5e)
 HBM_BW = 819e9               # bytes/s per chip
@@ -175,14 +178,19 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--results", default="results/dryrun.jsonl")
     ap.add_argument("--mesh", default=None)
+    ap.add_argument("--log-level", default="info", choices=LOG_LEVELS,
+                    help="stderr log verbosity (repro.obs.log)")
     args = ap.parse_args()
+    configure_logging(args.log_level)
     rows = load_rows(args.results)
-    print(format_table(rows, args.mesh))
-    print()
+    # the markdown table is this CLI's product — it is pasted into
+    # EXPERIMENTS.md and consumed by scripts, so it stays on stdout
+    print(format_table(rows, args.mesh))  # lint: allow(print-ban)
     worst = sorted(rows, key=lambda r: r.roofline_fraction)[:5]
-    print("Worst roofline fractions (hillclimb candidates):")
+    log.info("worst roofline fractions (hillclimb candidates):")
     for r in worst:
-        print(f"  {r.arch} x {r.shape} ({r.mesh}): frac={r.roofline_fraction:.2f} bound={r.bound}")
+        log.info("  %s x %s (%s): frac=%.2f bound=%s",
+                 r.arch, r.shape, r.mesh, r.roofline_fraction, r.bound)
 
 
 if __name__ == "__main__":

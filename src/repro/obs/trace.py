@@ -119,6 +119,10 @@ class TraceRecorder:
     no-op so an untraced engine pays nothing.
     """
 
+    # lock discipline (checked by repro.analysis rule "lock-discipline"):
+    # lanes/clients emit concurrently while readers snapshot the ring
+    _GUARDED_BY = {"_buf": "_lock", "_seq": "_lock", "dropped": "_lock"}
+
     def __init__(self, capacity: int = 65536, *, enabled: bool = True):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")

@@ -57,6 +57,7 @@ class RetryPolicy:
 def call_with_retry(fn: Callable[..., Any], *args: Any,
                     policy: RetryPolicy = RetryPolicy(),
                     on_failure: Optional[Callable[[int, Exception], None]] = None,
+                    sleep_fn: Optional[Callable[[float], None]] = None,
                     ) -> Any:
     """Run ``fn(*args)``, retrying transient failures up to the budget.
 
@@ -64,6 +65,12 @@ def call_with_retry(fn: Callable[..., Any], *args: Any,
     it to count retries per request).  The final failure propagates so the
     caller can escalate — e.g. mark a serving lane dead and re-queue its
     micro-batch on the survivors.
+
+    ``sleep_fn(seconds)`` is how backoff waits happen.  The serving engine
+    injects a sleep routed through its ``Clock`` so virtual-clock fault
+    tests advance deterministically instead of wall-sleeping through the
+    backoff schedule; the default is a real wall sleep for standalone use
+    (this module must not import serving.clock — serving imports us).
 
     Holds no shared state, so it is safe to call concurrently from many
     lane worker threads (each invocation retries its own work unit; the
@@ -79,7 +86,11 @@ def call_with_retry(fn: Callable[..., Any], *args: Any,
             if on_failure is not None:
                 on_failure(attempt, e)
             if policy.backoff_s > 0 and attempt < policy.max_retries:
-                time.sleep(policy.backoff_delay(attempt))
+                delay = policy.backoff_delay(attempt)
+                if sleep_fn is not None:
+                    sleep_fn(delay)
+                else:
+                    time.sleep(delay)  # lint: allow(clock-discipline) — wall default when no clock is injected
     raise RuntimeError(
         f"retry budget ({policy.max_retries}) exhausted") from last
 
@@ -122,7 +133,9 @@ class ResilientLoop:
         step = start_step
         while step < self.cfg.max_steps:
             batch = next(batches)
-            t0 = time.perf_counter()
+            # training-loop step timing is observability, not schedule input;
+            # a Clock here would drag serving into the training stack
+            t0 = time.perf_counter()  # lint: allow(clock-discipline)
             try:
                 state, metrics = self.step_fn(state, batch)
             except Exception as e:  # noqa: BLE001 — transient device failures
@@ -140,7 +153,7 @@ class ResilientLoop:
                     log.warning("step %d failed (%r); rolled back to %d",
                                 step, e, latest)
                 continue
-            self.stats.step_times.append(time.perf_counter() - t0)
+            self.stats.step_times.append(time.perf_counter() - t0)  # lint: allow(clock-discipline)
             step += 1
             self.stats.steps_done += 1
             if on_metrics is not None:

@@ -39,6 +39,10 @@ class StragglerMonitor:
     uncontended in the single-threaded virtual-clock engine.
     """
 
+    # lock discipline (checked by repro.analysis rule "lock-discipline"):
+    # completion paths record while the placement loop reads concurrently
+    _GUARDED_BY = {"stats": "_lock"}
+
     def __init__(self, num_hosts: int, alpha: float = 0.1,
                  z_thresh: float = 3.0):
         self.alpha = alpha

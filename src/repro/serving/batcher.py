@@ -140,6 +140,10 @@ class DynamicBatcher:
     Queue-depth samples feed the metrics module.
     """
 
+    # lock discipline (checked by repro.analysis rule "lock-discipline"):
+    # client threads push while the scheduler pops/sweeps
+    _GUARDED_BY = {"_queue": "_lock"}
+
     def __init__(self, max_batch: int,
                  buckets: Sequence[int] = DEFAULT_BUCKETS):
         if max_batch > max(buckets):

@@ -28,12 +28,12 @@ hooks that keep state must synchronize.
 from __future__ import annotations
 
 import threading
-import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.runtime.fault_tolerance import RetryPolicy, call_with_retry
 from repro.runtime.straggler import StragglerMonitor
+from repro.serving.clock import WallClock
 
 __all__ = ["LaneFailed", "LaneDispatcher"]
 
@@ -56,13 +56,19 @@ class _Lane:
 
 
 class LaneDispatcher:
+    # lock discipline (checked by repro.analysis rule "lock-discipline"):
+    # lane state is mutated by worker threads and read by the scheduler
+    _GUARDED_BY = {"lanes": "_lock"}
+
     def __init__(self, num_lanes: int, *, retry: RetryPolicy = RetryPolicy(),
                  straggler_z: float = 3.0,
-                 fault_hook: Optional[Callable[[int, int], None]] = None):
+                 fault_hook: Optional[Callable[[int, int], None]] = None,
+                 sleep_fn: Optional[Callable[[float], None]] = None):
         self.lanes = [_Lane() for _ in range(num_lanes)]
         self.retry = retry
         self.monitor = StragglerMonitor(num_lanes, z_thresh=straggler_z)
         self.fault_hook = fault_hook
+        self.sleep_fn = sleep_fn          # retry-backoff sleep (engine clock)
         self.flagged: List[int] = []      # latest straggler verdict
         self._lock = threading.Lock()
 
@@ -123,15 +129,15 @@ class LaneDispatcher:
                 return fn()
             return run
 
-        t0 = time.perf_counter()
+        stopwatch = WallClock()           # measured service time is real time
         try:
             out = call_with_retry(attempt_counter(), policy=self.retry,
-                                  on_failure=on_retry)
+                                  on_failure=on_retry, sleep_fn=self.sleep_fn)
         except RuntimeError as e:
             with self._lock:
                 self.lanes[lane].alive = False
             raise LaneFailed(lane, e) from e
-        return out, time.perf_counter() - t0
+        return out, stopwatch.now()
 
     def commit(self, lane: int, t: float, service_s: float, served: int,
                ) -> float:

@@ -75,7 +75,6 @@ from __future__ import annotations
 
 import queue as queue_mod
 import threading
-import time
 from collections import deque
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -93,7 +92,7 @@ from repro.runtime.faults import FaultInjector, FaultPlan
 from repro.serving import admission
 from repro.serving.batcher import (DEFAULT_BUCKETS, DynamicBatcher, JitCache,
                                    bucket_for, pad_frames)
-from repro.serving.clock import VirtualClock, WallClock
+from repro.serving.clock import Clock, VirtualClock, WallClock
 from repro.serving.dispatch import LaneDispatcher, LaneFailed
 from repro.serving.futures import (Cancelled, DeadlineExceeded, QueueFull,
                                    RequestHandle, ShutdownTimeout,
@@ -172,6 +171,16 @@ class EngineConfig:
 
 
 class ServingEngine:
+    # lock discipline (checked by repro.analysis rule "lock-discipline"):
+    # the three locks and what they guard — see docs/serving.md.  Accesses
+    # that are safe without the lock (e.g. monotonic sticky-error reads)
+    # carry explicit "# lint: allow(lock-discipline)" annotations.
+    _GUARDED_BY = {
+        "_futures": "_futures_lock",
+        "_next_rid": "_rid_lock",
+        "_live_error": "_submit_lock",
+    }
+
     def __init__(self, params: Dict, cfg: SNNConfig, ecfg: EngineConfig):
         if ecfg.admission not in admission.ADMISSION_POLICIES:
             raise ValueError(f"unknown admission policy {ecfg.admission!r}")
@@ -219,7 +228,8 @@ class ServingEngine:
             ecfg.num_lanes,
             retry=RetryPolicy(max_retries=ecfg.max_retries,
                               backoff_s=ecfg.retry_backoff_s),
-            straggler_z=ecfg.straggler_z, fault_hook=hook)
+            straggler_z=ecfg.straggler_z, fault_hook=hook,
+            sleep_fn=self._retry_sleep)
         self.supervisor = LaneSupervisor(
             ecfg.num_lanes, restart_budget=ecfg.restart_budget,
             policy=RetryPolicy(backoff_s=ecfg.restart_backoff_s),
@@ -259,6 +269,18 @@ class ServingEngine:
         self._live_thread: Optional[threading.Thread] = None
         self._live_error: Optional[BaseException] = None
         self._live_summary: Optional[Dict[str, float]] = None
+        # the clock of the currently-running engine loop (virtual or wall);
+        # retry backoff routes through it so virtual fault replays never
+        # wall-sleep (runtime.fault_tolerance.call_with_retry sleep_fn)
+        self._clock: Optional[Clock] = None
+
+    def _retry_sleep(self, seconds: float) -> None:
+        """Retry-backoff sleep for the dispatcher, routed through the
+        engine's clock: deterministic advance under VirtualClock, a real
+        sleep under WallClock (a fresh WallClock when called before any
+        loop starts, e.g. dispatcher used standalone)."""
+        clock = self._clock if self._clock is not None else WallClock()
+        clock.sleep_until(clock.now() + seconds)
 
     # -- submission ---------------------------------------------------------
     def _make_request(self, frame: np.ndarray, arrival: float,
@@ -314,8 +336,6 @@ class ServingEngine:
             raise RuntimeError(
                 "engine is not live — call serve_forever() first "
                 "(run() drains a pre-submitted trace instead)")
-        if self._live_error is not None:
-            raise RuntimeError("live serving died") from self._live_error
         with self._submit_lock:
             # the stop check and the queue push are atomic w.r.t. shutdown()
             # and the scheduler's death path: a request admitted here is
@@ -691,6 +711,7 @@ class ServingEngine:
 
     def _run_virtual(self) -> Dict[str, float]:
         clock = VirtualClock()
+        self._clock = clock
         self.trace.bind_clock(clock)
         for r in sorted(self._submitted, key=lambda r: (r.arrival, r.rid)):
             self.batcher.push(r)
@@ -891,7 +912,7 @@ class ServingEngine:
                 # report the inflated service time to the delay model
                 mult = self._injector.latency_multiplier(lane)
                 if mult > 1.0:
-                    time.sleep((mult - 1.0) * wall)
+                    clock.sleep_until(clock.now() + (mult - 1.0) * wall)
                     wall *= mult
             self.supervisor.beat(lane, clock.now())
             fracs = getattr(out, "skip_fractions", ())
@@ -951,6 +972,7 @@ class ServingEngine:
         else:
             clock = WallClock()
             completions = queue_mod.Queue()
+        self._clock = clock
         self.trace.bind_clock(clock)
         inboxes = [queue_mod.Queue() for _ in range(ecfg.num_lanes)]
         workers = [threading.Thread(
@@ -1232,7 +1254,8 @@ class ServingEngine:
             raise RuntimeError("serve_forever() is already running")
         self._ensure_lane_caches()        # all compilation before the epoch
         self._stop = threading.Event()
-        self._live_error = None
+        # no scheduler thread exists yet, so nothing races this reset
+        self._live_error = None  # lint: allow(lock-discipline)
         self._live_summary = None
         self._completions = queue_mod.Queue()
         self._live_clock = WallClock()
@@ -1259,8 +1282,11 @@ class ServingEngine:
     @property
     def live(self) -> bool:
         """True while serve_forever() is accepting submissions."""
+        # advisory snapshot: the error write is sticky (None -> exc once),
+        # so a lock-free read can only be momentarily stale, never wrong
         return (self._live_thread is not None and self._stop is not None
-                and not self._stop.is_set() and self._live_error is None)
+                and not self._stop.is_set()
+                and self._live_error is None)  # lint: allow(lock-discipline)
 
     def shutdown(self, timeout: Optional[float] = None) -> Dict[str, float]:
         """Stop a live engine cleanly: no new submissions, every queued
@@ -1290,7 +1316,9 @@ class ServingEngine:
             self._fail_outstanding(exc)
             raise exc
         self._live_thread = None
-        if self._live_error is not None:
+        # the scheduler thread has joined: its error write happened-before
+        # this read, no lock needed
+        if self._live_error is not None:  # lint: allow(lock-discipline)
             raise self._live_error
         return self._live_summary
 
@@ -1334,14 +1362,14 @@ class ServingEngine:
         fn = self.cache.get(bucket, self.ecfg.backend, outputs="logits")
         if not compiled:
             jax.block_until_ready(fn(self.params, x))         # compile once
-        t0 = time.perf_counter()
+        stopwatch = WallClock()           # epoch after compile: pure serving
         out = None
         for i in range(steps):
             out = fn(self.params, x)
             if (i + 1) % 8 == 0:
                 jax.block_until_ready(out)
         jax.block_until_ready(out)
-        return time.perf_counter() - t0
+        return stopwatch.now()
 
     # -- reporting ----------------------------------------------------------
     def snapshot(self) -> MetricsSnapshot:

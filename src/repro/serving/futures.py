@@ -82,6 +82,12 @@ class ShutdownTimeout(RuntimeError):
 class RequestHandle:
     """Future-style handle for one live-submitted request."""
 
+    # lock discipline (checked by repro.analysis rule "lock-discipline"):
+    # deliberately empty — the handle synchronizes through ``_event``
+    # (resolve/fail write-then-set, result() waits-then-reads) and the
+    # engine's futures lock serializes who may resolve it; it owns no lock
+    _GUARDED_BY: dict = {}
+
     def __init__(self, request):
         self.request = request
         self._event = threading.Event()

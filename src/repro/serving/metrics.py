@@ -51,6 +51,24 @@ class ServingMetrics:
     engine remain bare attribute writes (GIL-atomic enough for monitoring
     reads; the terminal ``summary()`` runs after the scheduler joined)."""
 
+    # lock discipline (checked by repro.analysis rule "lock-discipline"):
+    # rolling sample lists grow on the scheduler thread while snapshots read
+    # from client threads; scalar counters stay undeclared per the note
+    # above.  Not a dataclass field (no annotation), so init is unaffected.
+    _GUARDED_BY = {
+        "latencies": "_lock",
+        "queue_depths": "_lock",
+        "predicted_balances": "_lock",
+        "measured_balances": "_lock",
+        "wall_balances": "_lock",
+        "workload_residuals": "_lock",
+        "skip_fractions": "_lock",
+        "recovery_s": "_lock",
+        "restart_times": "_lock",
+        "in_flight": "_lock",
+        "queue_watermark": "_lock",
+    }
+
     latencies: List[float] = field(default_factory=list)
     queue_depths: List[int] = field(default_factory=list)
     predicted_balances: List[float] = field(default_factory=list)
@@ -164,6 +182,10 @@ class ServingMetrics:
         return span if span > 0 else 0.0
 
     def summary(self) -> Dict[str, float]:
+        with self._lock:
+            return self._summary_locked()
+
+    def _summary_locked(self) -> Dict[str, float]:  # lint: holds(_lock)
         return {
             "served": self.served,
             "rounds": self.rounds,

@@ -55,6 +55,10 @@ class _LaneState:
 class LaneSupervisor:
     """Restart policy for serving lanes (see module docstring)."""
 
+    # lock discipline (checked by repro.analysis rule "lock-discipline"):
+    # deaths land from scheduler context, beats from worker threads
+    _GUARDED_BY = {"_lanes": "_lock"}
+
     def __init__(self, num_lanes: int, *,
                  restart_budget: int = 0,
                  policy: Optional[RetryPolicy] = None,

@@ -529,3 +529,45 @@ def test_serve_spec_fault_plan_round_trip():
 def test_serve_spec_fault_plan_type_is_validated():
     with pytest.raises((TypeError, ValueError)):
         api.ServeSpec(fault_plan={"seed": 1})
+
+
+# -- retry backoff routed through the engine clock ---------------------------
+
+def test_virtual_retry_backoff_does_not_wall_sleep(tiny):
+    """Regression (repro.analysis clock-discipline find): call_with_retry
+    used to time.sleep through its backoff schedule even under the virtual
+    clock.  With the engine's clock injected as sleep_fn, a 5 s backoff
+    replays instantly — a wall sleep here would blow the elapsed bound."""
+    import time as wall_time
+
+    cfg, params = tiny
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=1, max_batch=2, max_retries=2, retry_backoff_s=5.0,
+        fault_plan=FaultPlan(transients=((0, 0),))))
+    rids = [eng.submit(f, arrival=0.0) for f in _frames(4, cfg)]
+    t0 = wall_time.perf_counter()
+    s = eng.run()
+    elapsed = wall_time.perf_counter() - t0
+    assert s["served"] == 4
+    _assert_conserved(eng, rids)
+    assert s["retries"] >= 1                  # the transient really fired
+    assert elapsed < 4.0                      # backoff was virtual, not wall
+
+
+def test_call_with_retry_injected_sleep_fn():
+    from repro.runtime.fault_tolerance import call_with_retry
+
+    slept = []
+    boom = [True]
+
+    def flaky():
+        if boom[0]:
+            boom[0] = False
+            raise RuntimeError("transient")
+        return 42
+
+    out = call_with_retry(flaky, policy=RetryPolicy(max_retries=1,
+                                                    backoff_s=0.5),
+                          sleep_fn=slept.append)
+    assert out == 42
+    assert slept == [0.5]                     # delay delegated, not slept
