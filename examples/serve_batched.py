@@ -45,7 +45,8 @@ def serve_snn_threaded(args) -> None:
         spec = api.ServeSpec(
             backend=args.backend, num_lanes=args.lanes,
             max_batch=args.batch, buckets=(args.batch,),
-            threaded=threaded, keep_logits=False)
+            threaded=threaded, keep_logits=False,
+            chunk_timesteps=args.chunk_timesteps)
         eng = sess.engine(spec)
         eng.warmup()
         for f in frames:
@@ -73,8 +74,10 @@ def serve_snn_batched(args) -> None:
         (args.batch, *cfg.input_hw, cfg.input_channels)))
     results = {}
     for backend in ("ref", args.backend):
-        spec_sess = api.Session(cfg, api.ServeSpec(backend=backend),
-                                params=sess.params)
+        spec_sess = api.Session(
+            cfg, api.ServeSpec(backend=backend,
+                               chunk_timesteps=args.chunk_timesteps),
+            params=sess.params)
         s = spec_sess.serve(frames, steps=4)
         results[backend] = s["seconds"] / 4
         log.info("%8s: %6.1f ms/batch (%.1f FPS)",
@@ -100,6 +103,10 @@ def main():
                          "(SNN only)")
     ap.add_argument("--lanes", type=int, default=2,
                     help="engine lanes (with --threaded)")
+    ap.add_argument("--chunk-timesteps", type=int, default=None,
+                    help="run T in chunks of this many timesteps "
+                         "(chunk-boundary continuous batching; "
+                         "bit-identical logits to whole-T dispatch)")
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new", type=int, default=32)
     args = ap.parse_args()

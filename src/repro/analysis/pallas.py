@@ -13,7 +13,10 @@ drifts):
 
 The checker resolves names through simple same-function assignments
 (``seq_spec = pl.BlockSpec(...)`` then ``in_specs=[seq_spec, ...]``,
-including ``out_specs.append(...)``) and only *flags* what it can
+including ``out_specs.append(...)``, the ``[base] + extra`` list
+concatenation the chunk-capable fused kernel uses, and an
+``[x] if flag else []`` conditional — resolved to its non-empty branch so
+the maximal operand set is checked) and only *flags* what it can
 *prove* wrong: two integer literals that don't divide, or mismatched
 ranks/arities.  Symbolic dims it can't decide pass silently — except the
 two idioms the kernels actually use, which it proves correct:
@@ -72,10 +75,14 @@ class _FuncEnv:
             depth += 1
         return node
 
-    def as_list(self, node: Optional[ast.expr]) -> Optional[List[ast.expr]]:
-        """Resolve a spec/shape argument to its element expressions,
-        including appends to a named list."""
-        if node is None:
+    def as_list(self, node: Optional[ast.expr],
+                depth: int = 0) -> Optional[List[ast.expr]]:
+        """Resolve a spec/shape argument to its element expressions:
+        list/tuple literals, appends to a named list, ``a + b``
+        concatenation of resolvable lists, and the ``[x] if flag else []``
+        conditional (resolved to its non-empty branch, so the checker sees
+        the maximal operand set)."""
+        if node is None or depth > _MAX_RESOLVE_DEPTH:
             return None
         appended: List[ast.expr] = []
         if isinstance(node, ast.Name):
@@ -83,6 +90,20 @@ class _FuncEnv:
         resolved = self.resolve(node)
         if isinstance(resolved, (ast.List, ast.Tuple)):
             return list(resolved.elts) + appended
+        if (isinstance(resolved, ast.BinOp)
+                and isinstance(resolved.op, ast.Add)):
+            left = self.as_list(resolved.left, depth + 1)
+            right = self.as_list(resolved.right, depth + 1)
+            if left is not None and right is not None:
+                return left + right + appended
+            return None
+        if isinstance(resolved, ast.IfExp):
+            body = self.as_list(resolved.body, depth + 1)
+            orelse = self.as_list(resolved.orelse, depth + 1)
+            if body is not None and orelse is not None \
+                    and (not body or not orelse):
+                return (body or orelse) + appended
+            return None
         return None
 
 

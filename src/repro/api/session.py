@@ -111,13 +111,24 @@ class Session:
             self._engines[batch] = eng
         return eng
 
-    def infer(self, frames: np.ndarray):
+    def infer(self, frames: np.ndarray, *, bucket: Optional[int] = None):
         """One batch through the bucketed jit cache; returns ``SNNOutputs``
         (padded rows sliced off).  Bit-identical to what ``serve`` /
         ``serve_forever`` produce for the same frames — all three share the
-        engine's executables."""
+        engine's executables.
+
+        ``bucket`` pins the padding bucket (the *canonical bucket*) instead
+        of the smallest fit: per-sample convolution makes each row's output
+        independent of its batchmates, so two batches of different sizes
+        run at one shared bucket produce bit-identical per-row logits —
+        the cross-bucket comparison knob the serving parity tests use."""
         frames = np.asarray(frames, dtype=np.float32)
-        return self._single_shot_engine(frames.shape[0]).infer(frames)
+        n = frames.shape[0]
+        if bucket is not None and bucket < n:
+            raise ValueError(f"bucket={bucket} cannot hold a batch of {n}")
+        eng = self._single_shot_engine(n if bucket is None
+                                       else max(n, int(bucket)))
+        return eng.infer(frames, bucket=bucket)
 
     def serve(self, frames: np.ndarray, *, steps: int = 1) -> Dict[str, float]:
         """Single-shot serving: ``steps`` iterations of one fixed batch

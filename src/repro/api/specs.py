@@ -54,6 +54,13 @@ class ExecutionSpec:
     ``backend="pallas"`` (the schedule physically permutes conv weights into
     the fused kernel's lane slices — the XLA backends have no lanes to
     schedule).
+
+    ``chunk_timesteps`` runs T in segments of that many timesteps with the
+    per-layer membrane state carried between segments (``None`` = whole-T,
+    the default).  Chunked execution is bit-identical to whole-T for every
+    partition (the chunk-parity contract, tests/test_chunk_parity.py); the
+    serving engine uses the chunk boundaries for continuous batching —
+    admitting, evicting and SLO-degrading requests mid-flight.
     """
 
     KIND = "execution"
@@ -63,6 +70,7 @@ class ExecutionSpec:
     surrogate_kind: str = "fast_sigmoid"
     surrogate_alpha: float = 10.0
     schedule_mode: Optional[str] = None
+    chunk_timesteps: Optional[int] = None
 
     def __post_init__(self):
         from repro.core.snn_model import SNN_BACKENDS
@@ -82,6 +90,10 @@ class ExecutionSpec:
             raise ValueError(
                 f"timesteps must be >= 1 or None (config default), "
                 f"got {self.timesteps}")
+        if self.chunk_timesteps is not None and self.chunk_timesteps < 1:
+            raise ValueError(
+                f"chunk_timesteps must be >= 1 or None (whole-T), "
+                f"got {self.chunk_timesteps}")
         if self.surrogate_alpha <= 0:
             raise ValueError(
                 f"surrogate_alpha must be > 0, got {self.surrogate_alpha}")
@@ -146,6 +158,12 @@ class TrainSpec(ExecutionSpec):
                 "TrainSpec does not accept a schedule_mode: the CBWS kernel "
                 "schedule permutes deployed weights and is a serving-time "
                 "concept — train without it, then serve with a ServeSpec")
+        if self.chunk_timesteps is not None:
+            raise ValueError(
+                "TrainSpec does not accept chunk_timesteps: chunk-boundary "
+                "rescheduling is a serving-time concept (training always "
+                "runs whole-T; chunked execution is bit-identical anyway) — "
+                "train without it, then serve with a ServeSpec")
         if self.lr <= 0:
             raise ValueError(f"lr must be > 0, got {self.lr}")
         if not 0.0 <= self.momentum < 1.0:
@@ -271,6 +289,7 @@ class ServeSpec(ExecutionSpec):
             retry_backoff_s=self.retry_backoff_s,
             straggler_z=self.straggler_z,
             schedule_mode=self.resolved_schedule(),
+            chunk_timesteps=self.chunk_timesteps,
             keep_logits=self.keep_logits, threaded=self.threaded,
             latency_budget_s=self.latency_budget_s,
             slo_action=self.slo_action,

@@ -18,8 +18,11 @@ from repro.core.cbws import (Partition, cbws_partition, greedy_lpt_partition,
 from repro.core.encoding import direct_encode, poisson_encode
 from repro.core.neuron import LIFState, lif_init, lif_over_time, lif_step
 from repro.core.scheduler import LayerSchedule, build_schedule, permute_conv_params
-from repro.core.snn_model import (SNN_BACKENDS, SNNOutputs, init_snn,
-                                  layer_shapes, snn_apply)
+from repro.core.snn_model import (SNN_BACKENDS, ChunkCarry, ChunkOutputs,
+                                  SNNOutputs, chunk_lengths, finalize_logits,
+                                  init_chunk_carry, init_snn, layer_shapes,
+                                  snn_apply, snn_apply_chunk,
+                                  snn_apply_chunked)
 from repro.core.snn_train import accuracy, make_loss_fn, make_train_step
 from repro.core.surrogate import SURROGATE_KINDS, heaviside, spike_fn
 
@@ -31,6 +34,8 @@ __all__ = [
     "LIFState", "lif_init", "lif_over_time", "lif_step",
     "LayerSchedule", "build_schedule", "permute_conv_params",
     "SNN_BACKENDS", "SNNOutputs", "init_snn", "layer_shapes", "snn_apply",
+    "ChunkCarry", "ChunkOutputs", "chunk_lengths", "finalize_logits",
+    "init_chunk_carry", "snn_apply_chunk", "snn_apply_chunked",
     "accuracy", "make_loss_fn", "make_train_step",
     "SURROGATE_KINDS", "heaviside", "spike_fn",
 ]

@@ -31,7 +31,8 @@ from repro.kernels.spiking_conv_lif import (ConvLIFOpts, _largest_divisor,
                                             spiking_conv_lif_train)
 
 __all__ = ["spiking_conv", "lif_fused", "spiking_conv_lif",
-           "skip_table_fraction", "default_interpret"]
+           "spiking_conv_lif_chunked", "skip_table_fraction",
+           "default_interpret"]
 
 
 def default_interpret() -> bool:
@@ -167,6 +168,13 @@ def spiking_conv_lif(
                 " — the CBWS schedule permutes weights upstream "
                 "(core.scheduler.permute_conv_params); pass pre-permuted "
                 "weights or go through snn_apply with schedule=")
+        chunk_t = getattr(spec, "chunk_timesteps", None)
+        if chunk_t is not None:
+            raise ValueError(
+                f"spec.chunk_timesteps={chunk_t} cannot be applied by "
+                f"ops.spiking_conv_lif — this op runs the whole train it is "
+                f"given; chunk upstream via ops.spiking_conv_lif_chunked or "
+                f"core.snn_apply_chunked (the serving engine does this)")
         surrogate_alpha = getattr(spec, "surrogate_alpha", surrogate_alpha)
         surrogate_kind = getattr(spec, "surrogate_kind", surrogate_kind)
     if interpret is None:
@@ -179,6 +187,39 @@ def spiking_conv_lif(
         surrogate_alpha=float(surrogate_alpha),
         surrogate_kind=surrogate_kind, bwd=bwd)
     return spiking_conv_lif_train(opts, spikes, v0, w, bias)
+
+
+def spiking_conv_lif_chunked(
+    spikes: jax.Array, v0: jax.Array, w: jax.Array, bias: jax.Array,
+    *, chunk_timesteps: int, v_th: float = 1.0, aprc: bool = True,
+    block_rows: int = 8, num_groups: int = 4,
+    interpret: Optional[bool] = None, surrogate_alpha: float = 10.0,
+    surrogate_kind: str = "fast_sigmoid", bwd: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked driver for the fused conv+LIF kernel: run the T-loop in
+    segments of ``chunk_timesteps``, threading the membrane between
+    segments (``v_final`` of one call is ``v0`` of the next).
+
+    Bit-identical to the single whole-T ``spiking_conv_lif`` call for
+    every partition of T: the kernel's in-block ``fori_loop`` is strictly
+    sequential per element, so a chunk boundary only materializes the
+    carry it would have held in registers.  Differentiable — each segment
+    goes through ``spiking_conv_lif_train``'s custom_vjp and BPTT chains
+    across segments through the carried membrane.
+    """
+    from repro.core.snn_model import chunk_lengths
+    s_parts = []
+    v = v0
+    t0 = 0
+    for c in chunk_lengths(spikes.shape[0], chunk_timesteps):
+        s, v = spiking_conv_lif(
+            spikes[t0:t0 + c], v, w, bias, v_th=v_th, aprc=aprc,
+            block_rows=block_rows, num_groups=num_groups,
+            interpret=interpret, surrogate_alpha=surrogate_alpha,
+            surrogate_kind=surrogate_kind, bwd=bwd)
+        s_parts.append(s)
+        t0 += c
+    return jnp.concatenate(s_parts, axis=0), v
 
 
 # re-export oracles for test convenience

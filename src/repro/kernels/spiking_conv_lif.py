@@ -56,7 +56,8 @@ vs grid rank, block rank vs index-map return arity, block dims dividing
 the padded shapes, operand/spec counts) are checked statically by
 ``repro.analysis``'s pallas-consistency rule (docs/analysis.md), which
 resolves the named ``seq_spec``/``mem_spec`` assignments and the
-conditional ``out_specs.append`` below — keep spec plumbing in that
+``[base] + extra`` list concatenation below (``extra`` is an
+``[x] if save_u else []`` conditional) — keep spec plumbing in that
 resolvable shape.
 """
 from __future__ import annotations
@@ -163,15 +164,18 @@ def _fused_call(spikes, v0, w, bias, *, v_th, aprc, block_rows, num_groups,
                             lambda b, i, g: (0, b, i, 0, g))
     mem_spec = pl.BlockSpec((1, block_rows, e_w, cout_blk),
                             lambda b, i, g: (b, i, 0, g))
-    out_specs = [seq_spec, mem_spec]
+    # the optional pre-reset membrane output (backward residual) rides as a
+    # concatenated extra: both lists stay statically resolvable for the
+    # pallas-consistency analysis rule
+    extra_specs = [seq_spec] if save_u else []
+    extra_shape = [
+        jax.ShapeDtypeStruct((T, B, e_h_pad, e_w, Cout), jnp.float32),
+    ] if save_u else []
+    out_specs = [seq_spec, mem_spec] + extra_specs
     out_shape = [
         jax.ShapeDtypeStruct((T, B, e_h_pad, e_w, Cout), spikes.dtype),
         jax.ShapeDtypeStruct((B, e_h_pad, e_w, Cout), v0.dtype),
-    ]
-    if save_u:
-        out_specs.append(seq_spec)
-        out_shape.append(
-            jax.ShapeDtypeStruct((T, B, e_h_pad, e_w, Cout), jnp.float32))
+    ] + extra_shape
 
     kernel = _make_kernel(R, T, block_rows, e_w, float(v_th), save_u=save_u)
     outs = pl.pallas_call(

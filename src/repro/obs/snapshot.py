@@ -62,6 +62,12 @@ class MetricsSnapshot:
     trace_enabled: bool
     trace_events: int
     trace_dropped: int
+    # timestep-chunked continuous batching (EngineConfig.chunk_timesteps);
+    # defaults keep older snapshot producers constructible
+    chunk_timesteps: Optional[int] = None
+    chunks_dispatched: int = 0
+    mid_evicted: int = 0
+    mid_degraded: int = 0
 
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)

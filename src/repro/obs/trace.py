@@ -33,7 +33,8 @@ __all__ = ["TraceEvent", "TraceRecorder", "TERMINAL_KINDS",
            "KIND_DEGRADE", "KIND_DISPATCH", "KIND_BATCH_DONE", "KIND_RETRY",
            "KIND_COMPLETE", "KIND_REJECT", "KIND_DEADLINE", "KIND_CANCEL",
            "KIND_FAILED", "KIND_SWEEP", "KIND_LANE_DEATH", "KIND_HANG",
-           "KIND_LANE_RESTART", "KIND_ROUND", "KIND_DRAIN", "KIND_SHUTDOWN"]
+           "KIND_LANE_RESTART", "KIND_ROUND", "KIND_DRAIN", "KIND_SHUTDOWN",
+           "KIND_CHUNK_START", "KIND_CHUNK_DONE", "KIND_MID_EVICT"]
 
 # -- lifecycle event kinds ---------------------------------------------------
 KIND_SUBMIT = "submit"            # request entered the queue
@@ -56,6 +57,13 @@ KIND_LANE_RESTART = "lane_restart"  # supervised lane recovery
 KIND_ROUND = "round"              # admission round accounting closed
 KIND_DRAIN = "drain"              # scheduler loop drained and exited
 KIND_SHUTDOWN = "shutdown"        # shutdown requested (live engine)
+# chunked continuous batching (EngineConfig.chunk_timesteps): a request's
+# T runs as several chunk dispatches with rescheduling at the boundaries
+KIND_CHUNK_START = "chunk_start"  # a request began a timestep chunk
+KIND_CHUNK_DONE = "chunk_done"    # a request finished a chunk (t_served)
+KIND_MID_EVICT = "mid_evict"      # partially-served request evicted at a
+#                                 # chunk boundary (cancel/deadline); the
+#                                 # matching TERMINAL event still fires
 
 #: The kinds that resolve a request; each rid gets exactly one of these.
 TERMINAL_KINDS = frozenset(

@@ -74,15 +74,25 @@ class JitCache:
     executable behind SLO admission's *degrade* action (fewer timesteps =
     proportionally less predicted work).  ``None`` means the config's T.
 
+    ``chunk_timesteps`` (engine chunk scheduling) does two things: whole-T
+    ``"full"``/``"logits"`` entries route through the chunked driver (bit
+    -identical by the chunk-parity contract, so ``infer`` serves exactly
+    what chunk-scheduled requests get), and ``outputs="chunk"`` entries
+    become available — one jitted ``snn_apply_chunk`` per
+    ``(bucket, backend, "chunk", t_chunk)`` mapping
+    ``(params, frames, carry) -> (ChunkOutputs, carry')``, the executable
+    the engine dispatches per chunk.
+
     Executing an already-compiled entry is thread-safe (XLA executables
     are), which is how the threaded engine's lanes share nothing but params;
     each lane owns its *own* JitCache so tracing/compilation never races.
     """
 
-    def __init__(self, params, cfg, schedule=None):
+    def __init__(self, params, cfg, schedule=None, chunk_timesteps=None):
         self.params = params
         self.cfg = cfg
         self.schedule = schedule
+        self.chunk_timesteps = chunk_timesteps
         self._fns: Dict[Tuple[int, str, str, int], object] = {}
         self.compiles = 0
 
@@ -100,11 +110,36 @@ class JitCache:
         key = self._key(bucket, backend, outputs, timesteps)
         fn = self._fns.get(key)
         if fn is None:
-            from repro.core import snn_apply
+            from repro.core import finalize_logits, snn_apply, \
+                snn_apply_chunk, snn_apply_chunked
             cfg, sched = self.cfg, self.schedule
-            if key[3] != cfg.timesteps:
+            if key[3] != cfg.timesteps and outputs not in ("chunk",
+                                                           "finalize"):
                 cfg = dataclasses.replace(cfg, timesteps=key[3])
-            if outputs == "logits":
+            if outputs == "chunk":
+                t_chunk = key[3]
+                fn = jax.jit(lambda p, x, c: snn_apply_chunk(
+                    p, x, c, cfg, t_chunk=t_chunk, backend=backend,
+                    schedule=sched))
+            elif outputs == "finalize":
+                # readout carry -> logits for a t_total-timestep request.
+                # Jitted so the crop + division lower to the *same* HLO the
+                # whole-T forward fuses in (a host numpy division can round
+                # one ulp away from XLA's constant-divisor lowering, which
+                # would break the chunked-vs-whole-T bit-parity contract)
+                t_total = key[3]
+                fn = jax.jit(lambda v: finalize_logits(v, cfg, t_total))
+            elif self.chunk_timesteps is not None:
+                ct = self.chunk_timesteps
+                if outputs == "logits":
+                    fn = jax.jit(lambda p, x: snn_apply_chunked(
+                        p, x, cfg, chunk_timesteps=ct, backend=backend,
+                        schedule=sched).logits)
+                else:
+                    fn = jax.jit(lambda p, x: snn_apply_chunked(
+                        p, x, cfg, chunk_timesteps=ct, backend=backend,
+                        schedule=sched))
+            elif outputs == "logits":
                 fn = jax.jit(lambda p, x: snn_apply(
                     p, x, cfg, backend=backend, schedule=sched).logits)
             else:
@@ -120,6 +155,21 @@ class JitCache:
         return self.get(frames.shape[0], backend,
                         timesteps=timesteps)(self.params, frames)
 
+    def run_chunk(self, frames: np.ndarray, carry, backend: str,
+                  t_chunk: int):
+        """Execute one timestep chunk of a padded bucket batch; returns
+        ``(ChunkOutputs, new carry)`` — the carry pytree's leading axis is
+        the bucket, one row per request (pad rows carry zeros)."""
+        return self.get(frames.shape[0], backend, outputs="chunk",
+                        timesteps=t_chunk)(self.params, frames, carry)
+
+    def finalize(self, readout_v, backend: str, t_total: int):
+        """Carried readout state -> logits for one ``t_total``-timestep
+        request (row or batch), through the jitted finalize executable
+        (bit-parity with the whole-T forward — see ``get``)."""
+        return self.get(0, backend, outputs="finalize",
+                        timesteps=t_total)(readout_v)
+
     def fork(self) -> "JitCache":
         """A lane-private cache sharing every executable compiled so far
         (concurrent *execution* of compiled XLA executables is thread-safe);
@@ -127,7 +177,8 @@ class JitCache:
         threads can never race a trace.  This is how the threaded engine
         gives each lane its own cache without num_lanes x duplicate
         compiles of identical programs."""
-        c = JitCache(self.params, self.cfg, schedule=self.schedule)
+        c = JitCache(self.params, self.cfg, schedule=self.schedule,
+                     chunk_timesteps=self.chunk_timesteps)
         c._fns = dict(self._fns)
         return c
 

@@ -121,6 +121,14 @@ class EngineConfig:
     straggler_z: float = 3.0
     schedule_mode: Optional[str] = None  # CBWS kernel schedule (pallas)
     keep_logits: bool = True            # per-request logits on the Request
+    # timestep-chunked continuous batching: run each request's T in chunks
+    # of this many timesteps and reschedule at every chunk boundary — new
+    # arrivals join a running lane's next chunk, finished/cancelled/expired
+    # requests are evicted mid-flight, and SLO degrade truncates remaining
+    # chunks instead of acting only at admission.  Chunked execution is
+    # bit-identical to whole-T (the chunk-parity contract,
+    # tests/test_chunk_parity.py).  None = historical whole-T dispatch.
+    chunk_timesteps: Optional[int] = None
     # real concurrency: lanes as worker threads on the wall clock
     threaded: bool = False
     # admission-time SLO control (None disables)
@@ -160,8 +168,11 @@ class EngineConfig:
     fault_plan: Optional[FaultPlan] = None
     # maps (lane, measured wall s) -> virtual service s; tests inject
     # deterministic lane speeds here, default is the wall measurement
-    # (virtual clock only — the threaded engine serves on measured time)
-    service_time_fn: Optional[Callable[[int, float], float]] = None
+    # (virtual clock only — the threaded engine serves on measured time).
+    # A 3-arg callable additionally receives the dispatched timestep count
+    # (the chunk length under chunk_timesteps, else the request T) so
+    # deterministic service models can price partial-T dispatches
+    service_time_fn: Optional[Callable[..., float]] = None
     # lifecycle tracing (repro.obs): record typed events into a bounded
     # ring buffer on the engine clock.  Off by default — call sites emit
     # unconditionally but a disabled recorder returns after one attribute
@@ -191,6 +202,10 @@ class ServingEngine:
             raise ValueError(
                 f"degrade_timesteps must be >= 1, got {ecfg.degrade_timesteps}"
                 " (a zero-timestep network cannot run)")
+        if ecfg.chunk_timesteps is not None and ecfg.chunk_timesteps < 1:
+            raise ValueError(
+                f"chunk_timesteps must be >= 1 (or None for whole-T "
+                f"dispatch), got {ecfg.chunk_timesteps}")
         if ecfg.max_queue is not None and ecfg.max_queue < 1:
             raise ValueError(
                 f"max_queue must be >= 1 (or None for unbounded), "
@@ -211,11 +226,25 @@ class ServingEngine:
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
+        # service_time_fn arity, resolved once: 3-arg models also see the
+        # dispatched timestep count (chunk length under chunk_timesteps)
+        self._svc_fn_takes_t = False
+        if ecfg.service_time_fn is not None:
+            import inspect
+            try:
+                sig = inspect.signature(ecfg.service_time_fn)
+                self._svc_fn_takes_t = len([
+                    p for p in sig.parameters.values()
+                    if p.kind in (p.POSITIONAL_ONLY,
+                                  p.POSITIONAL_OR_KEYWORD)]) >= 3
+            except (TypeError, ValueError):
+                pass
         self._schedule = None
         if ecfg.schedule_mode is not None:
             from repro.core import build_schedule
             self._schedule = build_schedule(params, cfg, ecfg.schedule_mode)
-        self.cache = JitCache(params, cfg, schedule=self._schedule)
+        self.cache = JitCache(params, cfg, schedule=self._schedule,
+                              chunk_timesteps=ecfg.chunk_timesteps)
         self.batcher = DynamicBatcher(ecfg.max_batch, ecfg.buckets)
         # seeded chaos: the plan's crash/transient hook chains *before* any
         # user fault_hook; slow-lane multipliers are queried at service time
@@ -248,11 +277,24 @@ class ServingEngine:
         # accumulated actual spike workload per conv layer, (T, Cout),
         # pad-row contributions masked out
         self._tc_accum: Optional[List[np.ndarray]] = None
-        # per-timesteps zero-frame spike profile (the per-pad-row counts)
-        self._pad_profiles: Dict[int, List[np.ndarray]] = {}
+        # per-timesteps zero-frame spike profile (the per-pad-row counts);
+        # chunked entries are keyed ("chunk", chunk_len) — pad rows restart
+        # every chunk from zero carry, so one profile per length is exact
+        self._pad_profiles: Dict[object, List[np.ndarray]] = {}
         self._degrade_t = (ecfg.degrade_timesteps
                            if ecfg.degrade_timesteps is not None
                            else max(1, cfg.timesteps // 2))
+        if ecfg.chunk_timesteps is not None:
+            # chunk-align the degrade target (round up, capped at T) so
+            # every degraded request's chunk sequence stays inside the
+            # warmable length set {chunk, T % chunk} — an unaligned target
+            # would compile a fresh remainder executable per target
+            ct = ecfg.chunk_timesteps
+            self._degrade_t = min(cfg.timesteps,
+                                  -(-self._degrade_t // ct) * ct)
+        # all-zero ChunkCarry row template (chunked mode), built lazily:
+        # fresh requests and pad rows start every chunk from this state
+        self._zero_carry = None
         self._lane_caches: Optional[List[JitCache]] = None
         self._lane_compiles = 0           # threaded per-lane cache compiles
         # measured (predicted work, service s) per micro-batch — the delay
@@ -477,6 +519,9 @@ class ServingEngine:
         swept = self.batcher.sweep(now)
         self.metrics.note_depth(len(self.batcher) + len(swept))
         if swept:
+            for r in swept:
+                self._note_mid_evict(
+                    r, "cancelled" if r.cancelled else "expired", now)
             self._fail_expired([r for r in swept if not r.cancelled],
                                now=now)
             self.trace.emit(trc.KIND_SWEEP, t=now, dropped=len(swept))
@@ -494,21 +539,156 @@ class ServingEngine:
 
     # -- execution ----------------------------------------------------------
     def _eff_work(self, r: Request) -> float:
-        """Predicted work scaled by the (possibly degraded) timestep count —
-        Eq. 5's workload factorizes over T."""
-        t = r.timesteps if r.timesteps is not None else self.cfg.timesteps
+        """Predicted work of the request's *next dispatch* — Eq. 5's
+        workload factorizes over T.  Whole-T mode: the (possibly degraded)
+        full timestep count.  Chunked mode: the next chunk's length, so
+        micro-batch work, lane backlog, and the delay model's (work, svc)
+        samples all price what a dispatch actually executes.  Call sites
+        evaluate this *before* advancing ``t_served``."""
+        t_goal = r.timesteps if r.timesteps is not None else self.cfg.timesteps
+        t = t_goal - r.t_served
+        if self.ecfg.chunk_timesteps is not None:
+            t = min(t, self.ecfg.chunk_timesteps)
         return r.workload * (t / self.cfg.timesteps)
+
+    def _t_goal(self, r: Request) -> int:
+        """The request's target timestep count (degrade-truncated)."""
+        return r.timesteps if r.timesteps is not None else self.cfg.timesteps
+
+    def _next_chunk(self, r: Request) -> int:
+        """Length of the request's next chunk (chunked mode)."""
+        return min(self.ecfg.chunk_timesteps, self._t_goal(r) - r.t_served)
 
     def _run_batch(self, frames: Sequence[np.ndarray],
                    timesteps: Optional[int] = None,
-                   cache: Optional[JitCache] = None):
-        """Pad to a bucket, run the jitted forward, host-sync the outputs."""
+                   cache: Optional[JitCache] = None,
+                   bucket: Optional[int] = None):
+        """Pad to a bucket, run the jitted forward, host-sync the outputs.
+        ``bucket`` forces a specific pad bucket (canonical-bucket inference);
+        the default picks the smallest bucket that fits."""
         cache = cache if cache is not None else self.cache
-        bucket = bucket_for(len(frames), self.ecfg.buckets)
+        if bucket is None:
+            bucket = bucket_for(len(frames), self.ecfg.buckets)
+        elif bucket < len(frames):
+            raise ValueError(
+                f"bucket={bucket} cannot hold a batch of {len(frames)}")
         x = pad_frames(frames, bucket)
         out = cache.run(x, self.ecfg.backend, timesteps=timesteps)
         jax.block_until_ready(out.logits)
         return out
+
+    # -- chunked execution (EngineConfig.chunk_timesteps) --------------------
+    def _zero_carry_row(self):
+        """One all-zero ChunkCarry row (host numpy) — the state a fresh
+        request, a pad row, and every warmup batch starts a chunk from."""
+        if self._zero_carry is None:
+            from repro.core import init_chunk_carry
+            c1 = init_chunk_carry(self.cfg, 1)
+            self._zero_carry = jax.tree_util.tree_map(
+                lambda a: np.asarray(a)[0], c1)
+        return self._zero_carry
+
+    def _assemble_carry(self, grp: Sequence[Request], bucket: int):
+        """Stack per-request carry rows (zero rows for fresh requests and
+        padding) into one batch ChunkCarry with leading axis ``bucket``."""
+        zero = self._zero_carry_row()
+        rows = [r.carry if r.carry is not None else zero for r in grp]
+        rows += [zero] * (bucket - len(grp))
+        return jax.tree_util.tree_map(lambda *xs: np.stack(xs), *rows)
+
+    def _carry_rows(self, carry, n: int):
+        """Split a host-synced batch carry back into ``n`` per-request rows
+        (copies, so a row does not pin the whole batch array alive)."""
+        host = jax.tree_util.tree_map(np.asarray, carry)
+        return [jax.tree_util.tree_map(lambda a: a[j].copy(), host)
+                for j in range(n)]
+
+    def _exec_chunk(self, grp: Sequence[Request], bucket: int, c: int,
+                    cache: Optional[JitCache] = None):
+        """Run one timestep chunk of a micro-batch: pad frames, stack the
+        carried membrane state, execute the jitted ``snn_apply_chunk``, and
+        host-sync.  Returns ``(ChunkOutputs, host batch carry)``."""
+        cache = cache if cache is not None else self.cache
+        x = pad_frames([r.frame for r in grp], bucket)
+        carry = self._assemble_carry(grp, bucket)
+        out, new_carry = cache.run_chunk(x, carry, self.ecfg.backend, c)
+        jax.block_until_ready((out, new_carry))
+        return out, jax.tree_util.tree_map(np.asarray, new_carry)
+
+    def _finalize_chunked(self, r: Request) -> np.ndarray:
+        """A chunk-served request's logits from its carried readout state —
+        bit-identical to the whole-T (or degraded-T) forward by the
+        chunk-parity contract.  Routed through the cache's jitted finalize
+        executable so the division lowers to the same HLO the whole-T
+        forward uses (host numpy can round one ulp differently)."""
+        return np.asarray(self.cache.finalize(
+            r.carry.readout_v, self.ecfg.backend, self._t_goal(r)))
+
+    def _warm_chunk(self, bucket: int, c: int,
+                    cache: Optional[JitCache] = None) -> None:
+        """Compile + warm the (bucket, chunk length) executable on zero
+        frames and zero carry, outside any timed region."""
+        cache = cache if cache is not None else self.cache
+        h, w = self.cfg.input_hw
+        x = np.zeros((bucket, h, w, self.cfg.input_channels), np.float32)
+        carry = self._assemble_carry([], bucket)
+        _, nc = cache.run_chunk(x, carry, self.ecfg.backend, c)
+        jax.block_until_ready(nc.readout_v)
+
+    def _chunk_variants(self) -> List[int]:
+        """The chunk lengths this engine can dispatch: the chunk itself and
+        the full-T remainder.  Degrade targets are chunk-aligned in
+        ``__init__``, so truncated requests introduce no new lengths."""
+        ct = self.ecfg.chunk_timesteps
+        t_full = self.cfg.timesteps
+        lens = {min(ct, t_full)}
+        if t_full % ct:
+            lens.add(t_full % ct)
+        return sorted(lens)
+
+    def _chunk_pad_profile(self, c: int) -> List[np.ndarray]:
+        """Per-layer (c, Cout) spike counts of ONE all-zero pad row over one
+        chunk of length ``c``.  Exact for every chunk of that length: pad
+        rows restart from zero carry each chunk, so their profile is
+        independent of the chunk's global timestep offset."""
+        key = ("chunk", int(c))
+        prof = self._pad_profiles.get(key)
+        if prof is None:
+            h, w = self.cfg.input_hw
+            zero = np.zeros((1, h, w, self.cfg.input_channels), np.float32)
+            out, nc = self.cache.run_chunk(
+                zero, self._assemble_carry([], 1), self.ecfg.backend, c)
+            jax.block_until_ready(nc.readout_v)
+            prof = [np.asarray(tc, dtype=np.float64)
+                    for tc in out.timestep_counts]
+            self._pad_profiles[key] = prof
+        return prof
+
+    def _accumulate_chunk(self, timestep_counts, n_pad: int, c: int,
+                          offset: int) -> None:
+        """Fold one chunk micro-batch's (c, Cout) spike counts into the
+        running (T, Cout) accumulator at global rows [offset, offset + c),
+        subtracting the pad rows' zero-frame chunk profile.  ``offset`` is
+        the group's minimum ``t_served`` at dispatch — when a group mixes
+        requests at different progress the temporal attribution is
+        approximate (counts are batch-summed), but totals stay exact."""
+        tcs = [np.asarray(tc, dtype=np.float64) for tc in timestep_counts]
+        if n_pad > 0:
+            prof = self._chunk_pad_profile(c)
+            tcs = [np.maximum(tc - n_pad * p, 0.0)
+                   for tc, p in zip(tcs, prof)]
+        t_full = self.cfg.timesteps
+        offset = max(0, min(int(offset), t_full - c))
+        placed = []
+        for tc in tcs:
+            full = np.zeros((t_full,) + tc.shape[1:], dtype=np.float64)
+            full[offset:offset + c] = tc
+            placed.append(full)
+        if self._tc_accum is None:
+            self._tc_accum = placed
+        else:
+            self._tc_accum = [a + b
+                              for a, b in zip(self._tc_accum, placed)]
 
     def _pad_profile(self, timesteps: Optional[int] = None) -> List[np.ndarray]:
         """Per-layer (T, Cout) spike counts of ONE all-zero pad row.  Exact:
@@ -594,6 +774,63 @@ class ServingEngine:
             return None
         return (quantum if quantum is not None else 0.0, spw)
 
+    def _note_mid_evict(self, r: Request, reason: str, now: float) -> None:
+        """A partially chunk-served request left the system at a chunk
+        boundary (cancel/deadline): its carried state is dropped.  The
+        matching terminal event (cancel/deadline) still fires exactly once —
+        ``mid_evict`` is an annotation, not a terminal kind."""
+        if r.t_served <= 0:
+            return
+        self.metrics.mid_evicted += 1
+        self.trace.emit(trc.KIND_MID_EVICT, t=now, rid=r.rid, reason=reason,
+                        t_served=r.t_served)
+
+    def _mid_flight_degrade(self, in_progress: List[Request], now: float,
+                            backlog_work: float) -> List[Request]:
+        """SLO degrade applied *mid-flight* (chunked mode): an in-progress
+        request predicted to blow its budget has its remaining chunks
+        truncated — target ``max(t_served, degrade_t)``, chunk-aligned by
+        construction since ``_degrade_t`` is — instead of being rejected
+        (it already holds served state).  A request whose truncated target
+        is already met completes here from its carried readout, without
+        another dispatch.  Returns the requests still needing chunks."""
+        ecfg = self.ecfg
+        if ecfg.slo_action != "degrade":
+            return in_progress
+        model = self._delay_model()
+        if model is None:
+            return in_progress
+        quantum, spw = model
+        survivors: List[Request] = []
+        for r in in_progress:
+            budgets = [b for b in (ecfg.latency_budget_s, r.deadline_s)
+                       if b is not None]
+            t_goal = self._t_goal(r)
+            target = max(r.t_served, self._degrade_t)
+            if budgets and target < t_goal:
+                rem_work = r.workload * ((t_goal - r.t_served)
+                                         / self.cfg.timesteps)
+                predicted = ((now - r.arrival) + quantum
+                             + spw * (rem_work + backlog_work))
+                if predicted > min(budgets):
+                    r.timesteps = target
+                    t_goal = target
+                    self.metrics.degraded += 1
+                    self.metrics.mid_degraded += 1
+                    self.trace.emit(trc.KIND_DEGRADE, t=now, rid=r.rid,
+                                    timesteps=target, mid_flight=True)
+            if r.t_served >= t_goal:
+                # truncated to exactly what has been served: finish now
+                r.finish = now
+                logits_row = self._finalize_chunked(r)
+                if ecfg.keep_logits:
+                    r.logits = logits_row
+                self.metrics.record_completion(r.arrival, r.finish)
+                self._finish_request(r, logits_row)
+            else:
+                survivors.append(r)
+        return survivors
+
     def _admit_window(self, window: List[Request], num_idle: int, now: float,
                       backlog_work: float = 0.0,
                       ) -> Tuple[List[Tuple[List[Request], Optional[int]]], float]:
@@ -611,28 +848,39 @@ class ServingEngine:
         """
         t_full = self.cfg.timesteps
         ecfg = self.ecfg
+        chunked = ecfg.chunk_timesteps is not None
         # cancelled/expired requests can reach a window when the clock jumps
         # past their fate between sweep and take_window — drop them here so
-        # a lane never burns service time on a dead request
+        # a lane never burns service time on a dead request.  Partially
+        # chunk-served requests leave mid-flight: their carried state is
+        # discarded at the boundary (KIND_MID_EVICT) and the matching
+        # terminal event still fires exactly once.
         live_window: List[Request] = []
         for r in window:
             if r.cancelled:
+                self._note_mid_evict(r, "cancelled", now)
                 continue
             if r.expired(now):
+                self._note_mid_evict(r, "expired", now)
                 self._fail_expired([r], now=now)
                 continue
             live_window.append(r)
         window = live_window
         # a per-request deadline prices like a personal budget, so the SLO
-        # filter runs even on engines with no global latency_budget_s
+        # filter runs even on engines with no global latency_budget_s.  In
+        # chunked mode only *fresh* requests pass through the filter — an
+        # in-progress request already holds served state and is never
+        # rejected; instead degrade truncates its remaining chunks below.
+        fresh = [r for r in window if r.t_served == 0]
+        in_progress = [r for r in window if r.t_served > 0]
         if ecfg.latency_budget_s is not None \
-                or any(r.deadline_s is not None for r in window):
+                or any(r.deadline_s is not None for r in fresh):
             model = self._delay_model()
             if model is not None:
                 quantum, spw = model
-                full_t_rids = {r.rid for r in window if r.timesteps is None}
-                window, rejected, degraded = admission.slo_filter(
-                    window, now=now, budget_s=ecfg.latency_budget_s,
+                full_t_rids = {r.rid for r in fresh if r.timesteps is None}
+                fresh, rejected, degraded = admission.slo_filter(
+                    fresh, now=now, budget_s=ecfg.latency_budget_s,
                     seconds_per_work=spw, batch_quantum_s=quantum,
                     num_lanes=len(self.dispatcher.alive()),
                     full_timesteps=t_full, action=ecfg.slo_action,
@@ -642,18 +890,27 @@ class ServingEngine:
                 self.metrics.degraded += degraded
                 self.rejected.extend(rejected)
                 self._fail_rejected(rejected, now=now)
-                for r in window:
+                for r in fresh:
                     if r.timesteps is not None and r.rid in full_t_rids:
                         self.trace.emit(trc.KIND_DEGRADE, t=now, rid=r.rid,
                                         timesteps=r.timesteps)
+        if in_progress:
+            in_progress = self._mid_flight_degrade(in_progress, now,
+                                                   backlog_work)
+        window = sorted(fresh + in_progress,
+                        key=lambda r: (r.arrival, r.rid))
         if not window:
             return [], 1.0
 
+        # homogeneous execution classes: whole-T mode bins by the (possibly
+        # degraded) timestep count; chunked mode bins by the *next chunk
+        # length*, so requests at any progress share a batch as long as
+        # their next chunks compile to the same executable
         classes: Dict[int, List[Request]] = {}
         for r in window:
-            classes.setdefault(
-                r.timesteps if r.timesteps is not None else t_full,
-                []).append(r)
+            key = (self._next_chunk(r) if chunked
+                   else (r.timesteps if r.timesteps is not None else t_full))
+            classes.setdefault(key, []).append(r)
         # FIFO-earliest class first so a 1-lane round serves the queue head
         ordered = sorted(classes.items(),
                          key=lambda kv: min((x.arrival, x.rid)
@@ -681,7 +938,10 @@ class ServingEngine:
             groups, _, _ = admission.admit(
                 reqs, n_c, ecfg.admission, max_group=ecfg.max_batch,
                 buckets=ecfg.buckets if ecfg.batch_aware else None)
-            dispatchable += [(g, None if t_c == t_full else t_c)
+            # chunked mode: the class key IS the chunk length the lane will
+            # execute; whole-T mode keeps the historical None-for-full-T tag
+            dispatchable += [(g, t_c if chunked
+                              else (None if t_c == t_full else t_c))
                              for g in groups if g]
         if leftovers:
             self.batcher.push_front(
@@ -770,17 +1030,33 @@ class ServingEngine:
             norm_times: Dict[int, float] = {}
             lane_wall: List[float] = []
             executed: List[List[Request]] = []
+            group_pred: List[float] = []
+            chunk = self.ecfg.chunk_timesteps
             for lane, (grp, tsteps) in zip(order, dispatchable):
                 bucket = bucket_for(len(grp), self.ecfg.buckets)
-                if not self.cache.has(bucket, self.ecfg.backend,
-                                      timesteps=tsteps):
-                    # compile outside the timed region (one-off per bucket)
-                    self._run_batch([grp[0].frame] * min(len(grp), bucket),
-                                    timesteps=tsteps)
+                # dispatch work, priced before t_served advances (chunked
+                # mode: exactly the chunk this lane is about to execute)
+                work = sum(self._eff_work(r) for r in grp)
+                if chunk is not None:
+                    # tsteps is the chunk length here (see _admit_window)
+                    if not self.cache.has(bucket, self.ecfg.backend,
+                                          outputs="chunk", timesteps=tsteps):
+                        # compile outside the timed region (one-off)
+                        self._warm_chunk(bucket, tsteps)
 
-                def exec_grp(grp=grp, tsteps=tsteps):
-                    return self._run_batch([r.frame for r in grp],
-                                           timesteps=tsteps)
+                    def exec_grp(grp=grp, bucket=bucket, c=tsteps):
+                        return self._exec_chunk(grp, bucket, c)
+                else:
+                    if not self.cache.has(bucket, self.ecfg.backend,
+                                          timesteps=tsteps):
+                        # compile outside the timed region (one-off per bucket)
+                        self._run_batch(
+                            [grp[0].frame] * min(len(grp), bucket),
+                            timesteps=tsteps)
+
+                    def exec_grp(grp=grp, tsteps=tsteps):
+                        return self._run_batch([r.frame for r in grp],
+                                               timesteps=tsteps)
 
                 def on_retry(attempt, exc, grp=grp, lane=lane, t=t):
                     self.metrics.retries += 1
@@ -792,54 +1068,103 @@ class ServingEngine:
                                 n=len(grp),
                                 rids=tuple(r.rid for r in grp),
                                 timesteps=tsteps)
+                if chunk is not None:
+                    for r in grp:
+                        self.trace.emit(trc.KIND_CHUNK_START, t=t, lane=lane,
+                                        rid=r.rid, t0=r.t_served, c=tsteps)
                 self.metrics.note_dispatched(len(grp))
                 try:
                     out, wall = self.dispatcher.execute(lane, exec_grp,
                                                         on_retry=on_retry)
                 except LaneFailed as e:
-                    # dead lane: requests keep FIFO priority on survivors
+                    # dead lane: requests keep FIFO priority on survivors —
+                    # in chunked mode carry/t_served were last written at a
+                    # completed boundary, so the retry resumes from there
                     last_failure = e
                     self.metrics.note_resolved(len(grp))
                     self.trace.emit(trc.KIND_LANE_DEATH, t=t, lane=lane,
                                     error=type(e.cause).__name__)
                     self.batcher.push_front(grp)
                     continue
-                svc = (self.ecfg.service_time_fn(lane, wall)
-                       if self.ecfg.service_time_fn else wall)
+                if self.ecfg.service_time_fn is None:
+                    svc = wall
+                elif self._svc_fn_takes_t:
+                    svc = self.ecfg.service_time_fn(
+                        lane, wall,
+                        tsteps if tsteps is not None else self.cfg.timesteps)
+                else:
+                    svc = self.ecfg.service_time_fn(lane, wall)
                 if self._injector is not None:
                     # planned slow lane: scale the committed virtual service
                     # time (the threaded engine sleeps the difference)
                     svc *= self._injector.latency_multiplier(lane)
                 finish = self.dispatcher.commit(lane, t, svc, len(grp))
-                busy_work[lane] = (sum(self._eff_work(r) for r in grp),
-                                   finish)
-                self._accumulate(out.timestep_counts, bucket - len(grp),
-                                 tsteps)
-                self._note_skip(out)
-                self.trace.emit(trc.KIND_BATCH_DONE, t=finish, lane=lane,
-                                n=len(grp), svc=svc)
-                logits = np.asarray(out.logits)
-                for j, r in enumerate(grp):
-                    r.start, r.finish, r.lane, r.window = t, finish, lane, window_idx
-                    if self.ecfg.keep_logits:
-                        r.logits = logits[j]
-                    self.metrics.record_completion(r.arrival, r.finish)
-                    self._finish_request(r, logits[j])
+                busy_work[lane] = (work, finish)
+                if chunk is not None:
+                    cout, new_carry = out
+                    self.metrics.chunks_dispatched += len(grp)
+                    self._accumulate_chunk(
+                        cout.timestep_counts, bucket - len(grp), tsteps,
+                        offset=min(r.t_served for r in grp))
+                    self._note_skip(cout)
+                    self.trace.emit(trc.KIND_BATCH_DONE, t=finish, lane=lane,
+                                    n=len(grp), svc=svc)
+                    rows = self._carry_rows(new_carry, len(grp))
+                    requeue: List[Request] = []
+                    for j, r in enumerate(grp):
+                        r.carry = rows[j]
+                        r.t_served += tsteps
+                        r.lane, r.window = lane, window_idx
+                        if r.start < 0:
+                            r.start = t       # first chunk's dispatch time
+                        done = r.t_served >= self._t_goal(r)
+                        self.trace.emit(trc.KIND_CHUNK_DONE, t=finish,
+                                        lane=lane, rid=r.rid,
+                                        t_served=r.t_served, done=done)
+                        if done:
+                            r.finish = finish
+                            logits_row = self._finalize_chunked(r)
+                            if self.ecfg.keep_logits:
+                                r.logits = logits_row
+                            self.metrics.record_completion(r.arrival,
+                                                           r.finish)
+                            self._finish_request(r, logits_row)
+                        else:
+                            requeue.append(r)
+                    if requeue:
+                        # unfinished requests re-enter at the FIFO head with
+                        # their updated carry: new arrivals admitted behind
+                        # them join the *next* chunk's batch
+                        self.batcher.push_front(requeue)
+                else:
+                    self._accumulate(out.timestep_counts, bucket - len(grp),
+                                     tsteps)
+                    self._note_skip(out)
+                    self.trace.emit(trc.KIND_BATCH_DONE, t=finish, lane=lane,
+                                    n=len(grp), svc=svc)
+                    logits = np.asarray(out.logits)
+                    for j, r in enumerate(grp):
+                        r.start, r.finish, r.lane, r.window = (t, finish,
+                                                               lane,
+                                                               window_idx)
+                        if self.ecfg.keep_logits:
+                            r.logits = logits[j]
+                        self.metrics.record_completion(r.arrival, r.finish)
+                        self._finish_request(r, logits[j])
                 self.metrics.note_resolved(len(grp))
-                work = sum(self._eff_work(r) for r in grp)
                 if work > 0:
                     norm_times[lane] = svc / work
                     self._svc_samples.append((work, svc))
                 lane_wall.append(svc)
                 executed.append(grp)
+                group_pred.append(work)
             multi = len(executed) >= 2      # 1-lane rounds: balance is vacuous
             self.metrics.record_round(
                 queue_depth=depth,
                 predicted=predicted if multi else None,
                 measured=admission.measured_balance(executed) if multi else None,
                 lane_wall=lane_wall,
-                group_pred=[sum(self._eff_work(r) for r in g)
-                            for g in executed] if multi else (),
+                group_pred=group_pred if multi else (),
                 group_meas=[sum(r.events for r in g)
                             for g in executed] if multi else ())
             self.trace.emit(trc.KIND_ROUND, t=clock.now(),
@@ -887,12 +1212,21 @@ class ServingEngine:
                     r.retries += 1
 
             bucket = bucket_for(len(grp), self.ecfg.buckets)
+            chunked = self.ecfg.chunk_timesteps is not None
 
-            def exec_grp(grp=grp, bucket=bucket, tsteps=tsteps):
-                x = pad_frames([r.frame for r in grp], bucket)
-                out = cache.run(x, self.ecfg.backend, timesteps=tsteps)
-                jax.block_until_ready(out.logits)
-                return out
+            if chunked:
+                # tsteps is the chunk length; the worker computes the chunk
+                # but mutates no request state — carry/t_served advance on
+                # the scheduler thread when the completion is handled, so a
+                # death/hang mid-chunk resumes from the last boundary
+                def exec_grp(grp=grp, bucket=bucket, c=tsteps):
+                    return self._exec_chunk(grp, bucket, c, cache=cache)
+            else:
+                def exec_grp(grp=grp, bucket=bucket, tsteps=tsteps):
+                    x = pad_frames([r.frame for r in grp], bucket)
+                    out = cache.run(x, self.ecfg.backend, timesteps=tsteps)
+                    jax.block_until_ready(out.logits)
+                    return out
 
             try:
                 out, wall = self.dispatcher.execute(lane, exec_grp,
@@ -915,15 +1249,27 @@ class ServingEngine:
                     clock.sleep_until(clock.now() + (mult - 1.0) * wall)
                     wall *= mult
             self.supervisor.beat(lane, clock.now())
-            fracs = getattr(out, "skip_fractions", ())
-            skip = (float(np.mean([float(f) for f in fracs]))
-                    if fracs else None)
-            completions.put((
-                "done", lane, grp, tsteps, widx, t_disp, clock.now(),
-                np.asarray(out.logits),
-                [np.asarray(tc, dtype=np.float64)
-                 for tc in out.timestep_counts],
-                bucket, wall, counts["retries"], skip))
+            if chunked:
+                cout, carry = out
+                fracs = getattr(cout, "skip_fractions", ())
+                skip = (float(np.mean([float(f) for f in fracs]))
+                        if fracs else None)
+                completions.put((
+                    "done", lane, grp, tsteps, widx, t_disp, clock.now(),
+                    None,
+                    [np.asarray(tc, dtype=np.float64)
+                     for tc in cout.timestep_counts],
+                    bucket, wall, counts["retries"], skip, carry))
+            else:
+                fracs = getattr(out, "skip_fractions", ())
+                skip = (float(np.mean([float(f) for f in fracs]))
+                        if fracs else None)
+                completions.put((
+                    "done", lane, grp, tsteps, widx, t_disp, clock.now(),
+                    np.asarray(out.logits),
+                    [np.asarray(tc, dtype=np.float64)
+                     for tc in out.timestep_counts],
+                    bucket, wall, counts["retries"], skip, None))
 
     def _ensure_lane_caches(self) -> List[JitCache]:
         """Warm every (bucket, T-variant) executable once on the shared
@@ -946,13 +1292,31 @@ class ServingEngine:
         t_variants: List[Optional[int]] = [None]
         if ecfg.latency_budget_s is not None and ecfg.slo_action == "degrade":
             t_variants.append(self._degrade_t)
-        for b in warm_sizes:
-            for tv in t_variants:
+        if ecfg.chunk_timesteps is not None:
+            # chunked dispatch: warm every (bucket, chunk length) chunk
+            # executable and each length's pad profile; whole-T entries are
+            # not dispatched, so there is nothing else to warm
+            for b in warm_sizes:
+                for c in self._chunk_variants():
+                    self._warm_chunk(b, c)
+            for c in self._chunk_variants():
+                self._chunk_pad_profile(c)
+            # finalize executables for the common completion targets (a
+            # mid-flight truncation to an uncommon t_served still compiles
+            # its finalize lazily — a trivial element-wise program)
+            row = self._zero_carry_row().readout_v
+            for tv in [self.cfg.timesteps] + (
+                    [self._degrade_t] if len(t_variants) > 1 else []):
                 jax.block_until_ready(
-                    self.cache.run(pad_frames([zero], b), ecfg.backend,
-                                   timesteps=tv).logits)
-        for tv in t_variants:
-            self._pad_profile(tv)         # pad-mask profiles, also pre-clock
+                    self.cache.finalize(row, ecfg.backend, tv))
+        else:
+            for b in warm_sizes:
+                for tv in t_variants:
+                    jax.block_until_ready(
+                        self.cache.run(pad_frames([zero], b), ecfg.backend,
+                                       timesteps=tv).logits)
+            for tv in t_variants:
+                self._pad_profile(tv)     # pad-mask profiles, also pre-clock
         self._lane_caches = [self.cache.fork()
                              for _ in range(ecfg.num_lanes)]
         return self._lane_caches
@@ -1007,8 +1371,7 @@ class ServingEngine:
                 measured=(admission.measured_balance(rs["executed"])
                           if multi else None),
                 lane_wall=rs["lane_wall"],
-                group_pred=[sum(self._eff_work(r) for r in g)
-                            for g in rs["executed"]] if multi else (),
+                group_pred=rs["group_pred"] if multi else (),
                 group_meas=[sum(r.events for r in g)
                             for g in rs["executed"]] if multi else ())
             self.trace.emit(trc.KIND_ROUND, t=clock.now(),
@@ -1067,33 +1430,78 @@ class ServingEngine:
                 self.supervisor.on_death(lane, clock.now())
             else:
                 (_, _, grp, tsteps, widx, t_disp, t_done, logits, tcs,
-                 bucket, wall, retries, skip) = item
+                 bucket, wall, retries, skip, carry) = item
                 self.metrics.retries += retries
                 self.metrics.note_resolved(len(grp))
                 self.dispatcher.commit(lane, t_disp, wall, len(grp))
-                self._accumulate(tcs, bucket - len(grp), tsteps)
+                # dispatch work, priced before t_served advances below
+                work = sum(self._eff_work(r) for r in grp)
                 if skip is not None:
                     self.metrics.note_skip_fraction(skip)
                 self.trace.emit(trc.KIND_BATCH_DONE, t=t_done, lane=lane,
                                 n=len(grp), svc=wall)
-                for j, r in enumerate(grp):
-                    r.start, r.finish, r.lane, r.window = (t_disp, t_done,
-                                                           lane, widx)
-                    if r.cancelled:
-                        # lost the dispatch race by a hair: the handle
-                        # already failed with Cancelled — don't double-count
-                        # it as served
-                        continue
-                    if ecfg.keep_logits:
-                        r.logits = logits[j]
-                    self.metrics.record_completion(r.arrival, r.finish)
-                    self._finish_request(r, logits[j])
-                work = sum(self._eff_work(r) for r in grp)
+                if carry is not None:     # chunked completion (tsteps = c)
+                    self.metrics.chunks_dispatched += len(grp)
+                    self._accumulate_chunk(
+                        tcs, bucket - len(grp), tsteps,
+                        offset=min(r.t_served for r in grp))
+                    rows = self._carry_rows(carry, len(grp))
+                    requeue: List[Request] = []
+                    for j, r in enumerate(grp):
+                        if r.cancelled:
+                            # cancel won the pre-dispatch race by a hair:
+                            # the handle already failed with Cancelled —
+                            # drop this request's chunk rows
+                            self._note_mid_evict(r, "cancelled", t_done)
+                            continue
+                        r.carry = rows[j]
+                        r.t_served += tsteps
+                        r.lane, r.window = lane, widx
+                        if r.start < 0:
+                            r.start = t_disp
+                        done = r.t_served >= self._t_goal(r)
+                        self.trace.emit(trc.KIND_CHUNK_DONE, t=t_done,
+                                        lane=lane, rid=r.rid,
+                                        t_served=r.t_served, done=done)
+                        if done:
+                            r.finish = t_done
+                            logits_row = self._finalize_chunked(r)
+                            if ecfg.keep_logits:
+                                r.logits = logits_row
+                            self.metrics.record_completion(r.arrival,
+                                                           r.finish)
+                            self._finish_request(r, logits_row)
+                        else:
+                            requeue.append(r)
+                    if requeue:
+                        # unfinished requests re-enter at the FIFO head with
+                        # their updated carry and become cancellable again
+                        # while they wait for their next chunk
+                        with self._futures_lock:
+                            for r in requeue:
+                                r.in_flight = False
+                        self.batcher.push_front(requeue)
+                else:
+                    self._accumulate(tcs, bucket - len(grp), tsteps)
+                    for j, r in enumerate(grp):
+                        r.start, r.finish, r.lane, r.window = (t_disp,
+                                                               t_done,
+                                                               lane, widx)
+                        if r.cancelled:
+                            # lost the dispatch race by a hair: the handle
+                            # already failed with Cancelled — don't
+                            # double-count it as served
+                            continue
+                        if ecfg.keep_logits:
+                            r.logits = logits[j]
+                        self.metrics.record_completion(r.arrival, r.finish)
+                        self._finish_request(r, logits[j])
                 if work > 0:
                     self.dispatcher.record_round({lane: wall / work})
                     self._svc_samples.append((work, wall))
                 rounds[widx]["executed"].append(grp)
                 rounds[widx]["lane_wall"].append(wall)
+                rounds[widx]["group_pred"].append(work)
             rounds[widx]["pending"] -= 1
             if rounds[widx]["pending"] == 0:
                 finish_round(widx)
@@ -1171,7 +1579,7 @@ class ServingEngine:
                         rounds[window_idx] = {
                             "depth": depth, "predicted": predicted,
                             "pending": len(dispatchable), "executed": [],
-                            "lane_wall": []}
+                            "lane_wall": [], "group_pred": []}
                         for lane, (grp, tsteps) in zip(order, dispatchable):
                             busy.add(lane)
                             inflight_work[lane] = sum(self._eff_work(r)
@@ -1188,6 +1596,12 @@ class ServingEngine:
                                 n=len(grp),
                                 rids=tuple(r.rid for r in grp),
                                 timesteps=tsteps)
+                            if ecfg.chunk_timesteps is not None:
+                                for r in grp:
+                                    self.trace.emit(
+                                        trc.KIND_CHUNK_START, t=t_disp,
+                                        lane=lane, rid=r.rid,
+                                        t0=r.t_served, c=tsteps)
                             self.metrics.note_dispatched(len(grp))
                             inboxes[lane].put(
                                 (grp, tsteps, window_idx, t_disp))
@@ -1338,12 +1752,27 @@ class ServingEngine:
             if not self.cache.has(b, self.ecfg.backend):
                 self._run_batch([zero] * b)
 
-    def infer(self, frames: np.ndarray):
+    def infer(self, frames: np.ndarray, bucket: Optional[int] = None):
         """One batch through the bucketed jit cache; padded rows sliced off.
-        This is the single code path behind the CLI serve helpers."""
+        This is the single code path behind the CLI serve helpers.
+
+        ``bucket`` pins the pad bucket instead of the smallest fit — the
+        *canonical-bucket* option: per-sample convolution makes each row's
+        output independent of its batchmates, so running two differently
+        sized batches at one shared bucket yields bit-identical per-row
+        logits (cross-bucket comparisons, tests/test_serving_slo.py)."""
         frames = np.asarray(frames, dtype=np.float32)
         n = frames.shape[0]
-        out = self._run_batch(list(frames))
+        if bucket is not None:
+            bucket = int(bucket)
+            if bucket not in self.ecfg.buckets:
+                raise ValueError(
+                    f"bucket={bucket} is not one of the engine's padding "
+                    f"buckets {tuple(self.ecfg.buckets)}")
+            if bucket < n:
+                raise ValueError(
+                    f"bucket={bucket} cannot hold a batch of {n}")
+        out = self._run_batch(list(frames), bucket=bucket)
         return out._replace(logits=out.logits[:n])
 
     def infer_pipelined(self, frames: np.ndarray, steps: int) -> float:
@@ -1428,6 +1857,10 @@ class ServingEngine:
             trace_enabled=self.trace.enabled,
             trace_events=len(self.trace),
             trace_dropped=self.trace.dropped,
+            chunk_timesteps=self.ecfg.chunk_timesteps,
+            chunks_dispatched=int(m["chunks_dispatched"]),
+            mid_evicted=int(m["mid_evicted"]),
+            mid_degraded=int(m["mid_degraded"]),
         )
 
     def summary(self) -> Dict[str, float]:

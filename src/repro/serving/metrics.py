@@ -98,6 +98,13 @@ class ServingMetrics:
     cancelled: int = 0                # client-cancelled before dispatch
     queue_full: int = 0               # submissions refused (bounded queue)
     queue_watermark: int = 0          # max queue depth ever observed
+    # timestep-chunked continuous batching (EngineConfig.chunk_timesteps)
+    chunks_dispatched: int = 0        # request-chunks executed (one request
+    #                                 # served in k chunks counts k)
+    mid_evicted: int = 0              # partially-served requests evicted at
+    #                                 # a chunk boundary (cancel/deadline)
+    mid_degraded: int = 0             # in-progress requests whose remaining
+    #                                 # chunks were SLO-truncated mid-flight
     _lock: threading.RLock = field(default_factory=threading.RLock,
                                    repr=False, compare=False)
 
@@ -209,6 +216,10 @@ class ServingMetrics:
             "cancelled": float(self.cancelled),
             "queue_full": float(self.queue_full),
             "queue_watermark": float(self.queue_watermark),
+            # chunked continuous batching
+            "chunks_dispatched": float(self.chunks_dispatched),
+            "mid_evicted": float(self.mid_evicted),
+            "mid_degraded": float(self.mid_degraded),
             # mean over multi-lane rounds only; balance_rounds says how many
             # samples back it (0 -> the 1.0 default is vacuous, not measured)
             "balance_rounds": float(len(self.measured_balances)),
@@ -246,6 +257,9 @@ class ServingMetrics:
                 "rounds": self.rounds,
                 "retries": self.retries,
                 "queue_watermark": self.queue_watermark,
+                "chunks_dispatched": self.chunks_dispatched,
+                "mid_evicted": self.mid_evicted,
+                "mid_degraded": self.mid_degraded,
                 "p50_latency_s": percentile(lat, 50),
                 "p99_latency_s": percentile(lat, 99),
                 "fps": self.fps(),

@@ -50,6 +50,15 @@ class Request:
     retries: int = 0                  # lane-failure retries
     logits: Optional[np.ndarray] = field(default=None, repr=False)
 
+    # chunked continuous batching (EngineConfig.chunk_timesteps): timesteps
+    # served so far and the per-layer membrane/readout state carried between
+    # chunks (this request's row of a core.snn_model.ChunkCarry pytree;
+    # numpy host arrays).  A chunk boundary is the only place carry/t_served
+    # change, so a lane death mid-chunk resumes from the last completed
+    # boundary — or from scratch when no chunk has finished.
+    t_served: int = 0
+    carry: Optional[object] = field(default=None, repr=False)
+
     @property
     def latency(self) -> float:
         return self.finish - self.arrival

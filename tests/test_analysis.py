@@ -317,6 +317,54 @@ def run(x, save, n_blocks, block_rows, W):
     assert _rules_hit(fs) == {"pallas-consistency"}
 
 
+def test_pallas_rule_resolves_list_concat_and_ifexp(tmp_path):
+    # the chunked spiking_conv_lif idiom: the extra save_u output is built
+    # as ``[spec] if save else []`` and concatenated onto the base list —
+    # the checker must resolve through BOTH the conditional expression and
+    # the ``+`` to reach the bad chunk spec (1-arg index map, rank-2 grid)
+    src = PALLAS_HEADER + """\
+def run(x, save, n_blocks, block_rows, W):
+    H = n_blocks * block_rows
+    seq_spec = pl.BlockSpec((block_rows, W), lambda i, j: (i, 0))
+    bad_chunk_spec = pl.BlockSpec((block_rows, W), lambda i: (i, 0))
+    extra_specs = [bad_chunk_spec] if save else []
+    extra_shape = [jax.ShapeDtypeStruct((H, W), x.dtype)] if save else []
+    return pl.pallas_call(
+        kernel,
+        grid=(n_blocks, 2),
+        in_specs=[seq_spec],
+        out_specs=[seq_spec] + extra_specs,
+        out_shape=[jax.ShapeDtypeStruct((H, W), x.dtype)] + extra_shape,
+    )(x)
+"""
+    fs = _check(tmp_path, "kernels/k.py", src)
+    assert _rules_hit(fs) == {"pallas-consistency"}
+    # the good spec passes; only the concatenated conditional one is flagged
+    assert len(fs) == 1
+    assert "out_specs[1]" in fs[0].message
+    assert "takes 1 args but grid has rank 2" in fs[0].message
+
+
+def test_pallas_rule_concat_and_ifexp_clean_passes(tmp_path):
+    # same shape of code with a consistent chunk spec: no findings — the
+    # resolution itself must not produce false positives
+    src = PALLAS_HEADER + """\
+def run(x, save, n_blocks, block_rows, W):
+    H = n_blocks * block_rows
+    seq_spec = pl.BlockSpec((block_rows, W), lambda i, j: (i, 0))
+    extra_specs = [seq_spec] if save else []
+    extra_shape = [jax.ShapeDtypeStruct((H, W), x.dtype)] if save else []
+    return pl.pallas_call(
+        kernel,
+        grid=(n_blocks, 2),
+        in_specs=[seq_spec],
+        out_specs=[seq_spec] + extra_specs,
+        out_shape=[jax.ShapeDtypeStruct((H, W), x.dtype)] + extra_shape,
+    )(x)
+"""
+    assert _check(tmp_path, "kernels/k.py", src) == []
+
+
 # -- api-hygiene -------------------------------------------------------------
 
 def test_print_ban_inside_repro_package(tmp_path):

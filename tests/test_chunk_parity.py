@@ -1,0 +1,393 @@
+"""Chunk-parity test harness: timestep-chunked execution is bit-identical
+to whole-T.
+
+The contract under test (docs/serving.md "Chunked scheduling"): running the
+fused conv+LIF T-loop in segments — any partition of T, membrane/readout
+state carried between segments — produces bit-identical spikes, counts,
+logits, and gradients to the single whole-T call, on every backend.  The
+serving engine builds continuous batching on top of exactly this property
+(requests join/leave a running lane at chunk boundaries), so the harness
+also drives the engine end to end: chunk-scheduled serving must emit the
+same per-request logits bits as whole-T dispatch.
+
+Hypothesis cases go through tests/_hypothesis_compat (stdlib fallback when
+hypothesis isn't installed).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro import api
+from repro.config import get_snn
+from repro.core import (chunk_lengths, init_chunk_carry, init_snn,
+                        snn_apply, snn_apply_chunk, snn_apply_chunked)
+from repro.kernels import ops
+from repro.serving import EngineConfig, ServingEngine
+
+
+def _tiny_cfg(timesteps=5):
+    return dataclasses.replace(
+        get_snn("snn-mnist"), input_hw=(8, 8), conv_channels=(8, 8),
+        timesteps=timesteps, num_spe_clusters=4)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = _tiny_cfg()
+    params = init_snn(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _frames(n, cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.random((n, *cfg.input_hw, cfg.input_channels)) \
+        .astype(np.float32)
+
+
+def _np_tree(tree):
+    return jax.tree_util.tree_map(np.asarray, tree)
+
+
+def _whole(params, x, cfg, backend):
+    return jax.jit(lambda p, f: snn_apply(p, f, cfg, backend=backend))(
+        params, x)
+
+
+# -- core driver: every partition of T ---------------------------------------
+
+def test_chunk_lengths_partitions_T():
+    assert chunk_lengths(5, 2) == [2, 2, 1]
+    assert chunk_lengths(6, 3) == [3, 3]
+    assert chunk_lengths(4, 9) == [4]          # oversized chunk = whole T
+    with pytest.raises(ValueError):
+        chunk_lengths(5, 0)
+
+
+@pytest.mark.parametrize("backend", ["ref", "batched", "pallas"])
+@pytest.mark.parametrize("ct", [1, 2, 3, 5, 7])
+def test_chunked_forward_bit_identical(tiny, backend, ct):
+    """snn_apply_chunked == snn_apply for every uniform chunking, every
+    backend: logits, per-timestep counts, spike totals — all bit-equal."""
+    cfg, params = tiny
+    x = _frames(3, cfg, seed=1)
+    ref = _whole(params, x, cfg, backend)
+    out = jax.jit(lambda p, f: snn_apply_chunked(
+        p, f, cfg, chunk_timesteps=ct, backend=backend))(params, x)
+    assert np.array_equal(np.asarray(ref.logits), np.asarray(out.logits))
+    for a, b in zip(ref.timestep_counts, out.timestep_counts):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(ref.spike_totals, out.spike_totals):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def _check_partition(tiny, partition, backend):
+    """Chaining snn_apply_chunk over ``partition`` of T through the carried
+    state must reproduce the whole-T carry and counts bit-exactly."""
+    cfg, params = tiny
+    assert sum(partition) == cfg.timesteps
+    x = _frames(2, cfg, seed=2)
+    whole_fn = jax.jit(lambda p, f, c: snn_apply_chunk(
+        p, f, c, cfg, t_chunk=cfg.timesteps, backend=backend))
+    ref_out, ref_carry = whole_fn(
+        params, x, _np_tree(init_chunk_carry(cfg, 2)))
+    ref_counts = [np.asarray(t) for t in ref_out.timestep_counts]
+
+    carry = _np_tree(init_chunk_carry(cfg, 2))
+    got_counts = [[] for _ in ref_counts]
+    for c in partition:
+        fn = jax.jit(lambda p, f, cc, c=c: snn_apply_chunk(
+            p, f, cc, cfg, t_chunk=c, backend=backend))
+        out, carry = fn(params, x, carry)
+        carry = _np_tree(carry)
+        for acc, t in zip(got_counts, out.timestep_counts):
+            acc.append(np.asarray(t))
+
+    for a, b in zip(jax.tree_util.tree_leaves(_np_tree(ref_carry)),
+                    jax.tree_util.tree_leaves(carry)):
+        assert np.array_equal(a, b), f"carry diverged for {partition}"
+    for ref_t, parts in zip(ref_counts, got_counts):
+        assert np.array_equal(ref_t, np.concatenate(parts, axis=0)), \
+            f"timestep counts diverged for {partition}"
+
+
+# mixed (non-uniform) partitions exercised deterministically even without
+# hypothesis — the property test below widens the same check to arbitrary
+# partitions when hypothesis is installed
+@pytest.mark.parametrize("partition", [(1, 3, 1), (2, 1, 2), (4, 1),
+                                       (1, 1, 1, 1, 1), (5,)])
+@pytest.mark.parametrize("backend", ["ref", "batched"])
+def test_mixed_partition_carry_chain(tiny, partition, backend):
+    _check_partition(tiny, list(partition), backend)
+
+
+@given(st.lists(st.integers(min_value=1, max_value=5),
+                min_size=1, max_size=5).filter(lambda p: sum(p) == 5),
+       st.sampled_from(["ref", "batched", "pallas"]))
+@settings(max_examples=12, deadline=None)
+def test_arbitrary_partition_carry_chain(tiny, partition, backend):
+    """ANY partition of T: property-based widening of
+    test_mixed_partition_carry_chain."""
+    _check_partition(tiny, partition, backend)
+
+
+def _check_grad_parity(tiny, ct):
+    """spiking_conv_lif gradients: BPTT through the chunked driver
+    (membrane carried across segments) == whole-T BPTT, bit for bit."""
+    cfg, params = tiny
+    T, B = cfg.timesteps, 2
+    rng = np.random.default_rng(3)
+    w = params["conv"][0]["w"]
+    bias = params["conv"][0]["b"]
+    spikes = (rng.random((T, B, *cfg.input_hw, cfg.input_channels)) < 0.3) \
+        .astype(np.float32)
+    e = cfg.input_hw[0] + (w.shape[0] - 1 if cfg.aprc else 0)
+    v0 = np.zeros((B, e, e, w.shape[-1]), np.float32)
+
+    def loss_whole(w_, b_):
+        s, v = ops.spiking_conv_lif(spikes, v0, w_, b_, aprc=cfg.aprc)
+        return (s.sum() + v.sum())
+
+    def loss_chunked(w_, b_):
+        s, v = ops.spiking_conv_lif_chunked(
+            spikes, v0, w_, b_, chunk_timesteps=ct, aprc=cfg.aprc)
+        return (s.sum() + v.sum())
+
+    gw0, gb0 = jax.jit(jax.grad(loss_whole, argnums=(0, 1)))(w, bias)
+    gw1, gb1 = jax.jit(jax.grad(loss_chunked, argnums=(0, 1)))(w, bias)
+    assert np.array_equal(np.asarray(gw0), np.asarray(gw1)), f"ct={ct}"
+    assert np.array_equal(np.asarray(gb0), np.asarray(gb1)), f"ct={ct}"
+
+
+@pytest.mark.parametrize("ct", [1, 2, 3, 5])
+def test_chunked_kernel_train_gradients_bit_identical(tiny, ct):
+    _check_grad_parity(tiny, ct)
+
+
+@given(st.integers(min_value=1, max_value=6))
+@settings(max_examples=6, deadline=None)
+def test_chunked_kernel_train_gradients_property(tiny, ct):
+    _check_grad_parity(tiny, ct)
+
+
+def test_cross_batch_row_bits_stable(tiny):
+    """Row bits are independent of the padding bucket AND the chunking —
+    the property that lets the engine regroup a request's chunks into
+    whatever micro-batch is running when its turn comes."""
+    cfg, params = tiny
+    x = _frames(4, cfg, seed=4)
+    ref = np.asarray(_whole(params, x, cfg, "batched").logits)
+    for n in (1, 2, 3):
+        ln = np.asarray(_whole(params, x[:n], cfg, "batched").logits)
+        assert np.array_equal(ln, ref[:n]), f"batch {n} rows drifted"
+    for ct in (1, 2):
+        l1 = np.asarray(jax.jit(lambda p, f, ct=ct: snn_apply_chunked(
+            p, f, cfg, chunk_timesteps=ct, backend="batched").logits)(
+            params, x[:1]))
+        assert np.array_equal(l1, ref[:1]), f"chunked b1 ct={ct} drifted"
+
+
+# -- serving engine: chunk-boundary rescheduling -----------------------------
+
+def _run_engine(params, cfg, frames, ct, **ecfg_kw):
+    kw = dict(num_lanes=2, max_batch=4, backend="batched",
+              keep_logits=True, chunk_timesteps=ct)
+    kw.update(ecfg_kw)
+    eng = ServingEngine(params, cfg, EngineConfig(**kw))
+    for i, f in enumerate(frames):
+        eng.submit(f, arrival=0.001 * i)
+    summary = eng.run()
+    return eng, summary
+
+
+@pytest.mark.parametrize("ct", [1, 2, 3, 5])
+def test_engine_chunked_serving_bit_identical(tiny, ct):
+    """Chunk-scheduled serving == whole-T dispatch per request: logits
+    bits, accumulated spike totals, and full conservation."""
+    cfg, params = tiny
+    frames = list(_frames(9, cfg, seed=5))
+    e0, s0 = _run_engine(params, cfg, frames, None)
+    e1, s1 = _run_engine(params, cfg, frames, ct, trace=True)
+    assert s1["served"] == s0["served"] == len(frames)
+    l0 = {r.rid: np.asarray(r.logits) for r in e0.completed}
+    l1 = {r.rid: np.asarray(r.logits) for r in e1.completed}
+    assert set(l0) == set(l1)
+    for rid in l0:
+        assert np.array_equal(l0[rid], l1[rid]), f"rid {rid} ct={ct}"
+    # accumulated per-layer spike totals survive chunk-offset accumulation
+    # (temporal attribution is approximate when a group mixes progress, but
+    # per-layer totals stay exact up to float64 summation)
+    for a, b in zip(e0.accumulated_timestep_counts(),
+                    e1.accumulated_timestep_counts()):
+        assert np.allclose(a.sum(), b.sum(), rtol=0, atol=1e-6)
+    # the chunk lifecycle is traced: every request ends with a done chunk
+    # at t_served == T
+    starts = e1.trace.events("chunk_start")
+    dones = e1.trace.events("chunk_done")
+    per_req = -(-cfg.timesteps // ct)
+    assert len(starts) == len(dones) == per_req * len(frames)
+    assert all(e.get("t_served") == cfg.timesteps
+               for e in dones if e.get("done"))
+
+
+def test_engine_mid_flight_deadline_eviction(tiny):
+    """A request whose deadline passes while it is partially served is
+    evicted at the next chunk boundary: deadline_missed terminal, a
+    mid_evict trace event, and the freed capacity is real (conservation
+    still holds)."""
+    cfg, params = tiny
+    frames = list(_frames(6, cfg, seed=6))
+    svc = 0.004
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=1, max_batch=2, backend="batched", keep_logits=True,
+        chunk_timesteps=2, trace=True,
+        # optimistic prior: admission believes every deadline is meetable,
+        # so the tail requests are admitted — ground truth (the clock) then
+        # expires them at a chunk boundary, partially served
+        slo_seconds_per_work=1e-6,
+        service_time_fn=lambda lane, wall, t: svc * t / cfg.timesteps))
+    rids = []
+    for i, f in enumerate(frames):
+        # deadlines sized so the queue tail expires after its first chunk
+        rids.append(eng.submit(f, arrival=0.0, deadline_s=0.009))
+    s = eng.run()
+    snap = eng.snapshot()
+    assert s["served"] + s["deadline_missed"] == len(frames)
+    assert s["deadline_missed"] > 0
+    assert snap.mid_evicted > 0          # at least one was partially served
+    evicts = eng.trace.events("mid_evict")
+    assert evicts and all(e.get("reason") == "expired" for e in evicts)
+    assert all(0 < e.get("t_served") < cfg.timesteps for e in evicts)
+    out = ([r.rid for r in eng.completed] + [r.rid for r in eng.rejected]
+           + [r.rid for r in eng.expired])
+    assert sorted(out) == sorted(rids)   # exactly-once terminal fate
+
+
+def test_engine_mid_flight_degrade_truncates_remaining_chunks(tiny):
+    """SLO degrade applies MID-FLIGHT under chunked scheduling: a request
+    already past its first chunk gets its target T truncated (not just new
+    admissions), finishing early from the carried state."""
+    cfg, params = tiny
+    frames = list(_frames(8, cfg, seed=7))
+    svc = 0.004
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=1, max_batch=2, backend="batched", keep_logits=True,
+        chunk_timesteps=1, trace=True,
+        latency_budget_s=0.010, slo_action="degrade",
+        # near-zero prior: the predictor reduces to elapsed time, so
+        # admission lets every request through full-T and the budget only
+        # becomes visibly blown once a request is already mid-flight
+        slo_seconds_per_work=1e-6,
+        service_time_fn=lambda lane, wall, t: svc * t / cfg.timesteps))
+    for f in frames:
+        eng.submit(f, arrival=0.0)
+    s = eng.run()
+    snap = eng.snapshot()
+    assert s["served"] == len(frames)
+    assert snap.mid_degraded > 0
+    mid = [e for e in eng.trace.events("degrade") if e.get("mid_flight")]
+    assert mid
+    # a mid-flight degraded request still resolves exactly once, finishing
+    # from its carried state strictly before whole T
+    last_served = {e.rid: e.get("t_served")
+                   for e in eng.trace.events("chunk_done")}
+    for e in mid:
+        assert 0 < last_served[e.rid] < cfg.timesteps
+
+
+def test_engine_new_arrivals_join_running_lanes_next_chunk(tiny):
+    """Continuous batching at chunk boundaries: a request arriving while a
+    lane is mid-sequence is dispatched into that lane's next chunk batch
+    (shared dispatch), not serialized behind the whole residual T."""
+    cfg, params = tiny
+    frames = list(_frames(3, cfg, seed=8))
+    svc = 0.004
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=1, max_batch=4, backend="batched", keep_logits=True,
+        chunk_timesteps=1, trace=True,
+        service_time_fn=lambda lane, wall, t: svc * t / cfg.timesteps))
+    r0 = eng.submit(frames[0], arrival=0.0)
+    # arrives strictly inside request 0's sequence (after ~2 of 5 chunks)
+    r1 = eng.submit(frames[1], arrival=1.7 * svc / cfg.timesteps)
+    eng.run()
+    # some dispatch must contain both rids — the late request rode along
+    shared = [e for e in eng.trace.events("dispatch")
+              if set(e.get("rids", ())) >= {r0, r1}]
+    assert shared, "late arrival never joined the running lane's chunk"
+    l = {r.rid: np.asarray(r.logits) for r in eng.completed}
+    # and bits still match the single-shot whole-T path
+    want = np.asarray(_whole(params, frames[1][None], cfg,
+                             "batched").logits[0])
+    assert np.array_equal(l[r1], want)
+
+
+def test_threaded_engine_chunked_parity_and_cancel(tiny):
+    """Worker-thread lanes + chunk scheduling: live submissions complete
+    with whole-T bits; a cancelled request is dropped at a boundary and
+    resolves exactly once."""
+    cfg, params = tiny
+    frames = _frames(6, cfg, seed=9)
+    ref = {i: np.asarray(_whole(params, frames[i][None], cfg,
+                                "batched").logits[0])
+           for i in range(len(frames))}
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=2, max_batch=2, backend="batched", keep_logits=True,
+        threaded=True, chunk_timesteps=2))
+    eng.serve_forever()
+    handles = [eng.submit_live(f) for f in frames]
+    # best-effort cancel: may lose the race with completion — both fates
+    # are legal, but the fate must be exactly one of them
+    was_cancelled = handles[4].cancel()
+    got = {}
+    for i, h in enumerate(handles):
+        if i == 4 and was_cancelled:
+            continue
+        got[i] = np.asarray(h.result(timeout=60.0))
+    s = eng.shutdown(timeout=60.0)
+    assert s["served"] + s["cancelled"] == len(frames)
+    assert s["cancelled"] == (1 if was_cancelled else 0)
+    for i, l in got.items():
+        assert np.array_equal(l, ref[i]), f"live rid {i} drifted"
+
+
+# -- Session.infer canonical bucket (cross-bucket comparison knob) -----------
+
+def test_session_infer_canonical_bucket_cross_batch_bits(tiny):
+    """bucket= pins the padding bucket so two different batch sizes run the
+    same executable: their shared rows must be bit-equal — the canonical
+    -bucket contract (ROADMAP follow-up)."""
+    cfg, params = tiny
+    sess = api.Session(cfg, params=params)
+    x = _frames(4, cfg, seed=10)
+    full = np.asarray(sess.infer(x, bucket=4).logits)
+    for n in (1, 2, 3, 4):
+        part = np.asarray(sess.infer(x[:n], bucket=4).logits)
+        assert part.shape[0] == n
+        assert np.array_equal(part, full[:n]), f"bucket-pinned n={n} drifted"
+
+
+def test_session_infer_bucket_validation(tiny):
+    cfg, params = tiny
+    sess = api.Session(cfg, params=params)
+    x = _frames(3, cfg, seed=11)
+    with pytest.raises(ValueError, match="cannot hold"):
+        sess.infer(x, bucket=2)
+    eng = sess._single_shot_engine(4)
+    with pytest.raises(ValueError):
+        eng.infer(x, bucket=3)           # not one of the engine's buckets
+
+
+def test_session_infer_chunked_spec_matches_whole(tiny):
+    """A Session built with chunk_timesteps serves infer() through the
+    chunked driver — bits identical to the unchunked session."""
+    cfg, params = tiny
+    x = _frames(3, cfg, seed=12)
+    plain = np.asarray(api.Session(cfg, params=params).infer(x).logits)
+    chunked = np.asarray(api.Session(
+        cfg, api.ServeSpec(chunk_timesteps=2), params=params)
+        .infer(x).logits)
+    assert np.array_equal(plain, chunked)

@@ -387,12 +387,13 @@ def test_threaded_hang_escalated_to_restart(tiny):
 
 # -- conservation over seed-sampled plans (the property the module owes) -----
 
-def _run_sampled_plan(tiny, seed):
+def _run_sampled_plan(tiny, seed, chunk_timesteps=None):
     cfg, params = tiny
     plan = FaultPlan.sample(seed, num_lanes=2)
     eng = ServingEngine(params, cfg, EngineConfig(
         num_lanes=2, max_batch=2, threaded=True, max_retries=1,
-        restart_budget=1, restart_backoff_s=0.001, fault_plan=plan))
+        restart_budget=1, restart_backoff_s=0.001, fault_plan=plan,
+        chunk_timesteps=chunk_timesteps))
     frames = _frames(4, cfg, seed=1)
     arrivals = sorted([0.002 * i for i in range(10)]
                       + plan.storm_arrivals())
@@ -418,6 +419,75 @@ def test_sampled_plan_conservation(tiny, seed):
 @settings(max_examples=5, deadline=None)
 def test_sampled_plan_conservation_property(tiny, seed):
     _run_sampled_plan(tiny, seed)
+
+
+# -- chunked dispatch under chaos --------------------------------------------
+# chunk-boundary scheduling multiplies the dispatch count (every chunk is a
+# separate execution a fault can hit) and adds carried state the restart
+# path must not lose: a lane death between chunks resumes from the last
+# completed boundary, and the exactly-once terminal guarantee must survive
+# requeue + restart of partially served requests.
+
+@pytest.mark.parametrize("seed", _CHAOS_SEEDS)
+@pytest.mark.parametrize("ct", [1, 2])
+def test_sampled_plan_conservation_chunked(tiny, seed, ct):
+    _run_sampled_plan(tiny, seed, chunk_timesteps=ct)
+
+
+@given(st.integers(min_value=0, max_value=10_000),
+       st.sampled_from([1, 2]))
+@settings(max_examples=5, deadline=None)
+def test_sampled_plan_conservation_chunked_property(tiny, seed, ct):
+    _run_sampled_plan(tiny, seed, chunk_timesteps=ct)
+
+
+class _NthGate(_Gate):
+    """Blocks the Nth dispatched execution (0-based) instead of the first —
+    lets a test hang a lane *between* chunk boundaries, after carried state
+    has already been written."""
+
+    def __init__(self, n):
+        super().__init__()
+        self._n = n
+        self._calls = 0
+
+    def __call__(self, lane, attempt):
+        with self._lock:
+            arm = self._armed and self._calls == self._n
+            self._calls += 1
+            if arm:
+                self._armed = False
+        if arm:
+            self.entered.set()
+            self.release.wait(timeout=30.0)
+
+
+def test_threaded_hang_mid_chunk_resumes_carried_state(tiny):
+    """A lane that hangs on a request's SECOND chunk is escalated to a
+    restart; the requeued request resumes from its carried membrane state
+    (not from scratch) — proven by bit-exact logits against the whole-T
+    single-shot path — and every request still resolves exactly once."""
+    cfg, params = tiny
+    gate = _NthGate(1)                        # hang r0's second chunk
+    eng = ServingEngine(params, cfg, EngineConfig(
+        num_lanes=1, max_batch=1, threaded=True, keep_logits=True,
+        chunk_timesteps=2, restart_budget=1, restart_backoff_s=0.001,
+        hang_timeout_s=0.25, fault_hook=gate))
+    frames = _frames(3, cfg, seed=2)
+    rids = [eng.submit(f, arrival=0.0) for f in frames]
+    try:
+        s = eng.run()
+    finally:
+        gate.release.set()                    # unblock the zombie worker
+    assert s["served"] == 3
+    assert s["restarts"] == 1.0
+    _assert_conserved(eng, rids)
+    sess = api.Session(cfg, params=params)
+    got = {r.rid: np.asarray(r.logits) for r in eng.completed}
+    for rid, f in zip(rids, frames):
+        want = np.asarray(sess.infer(f[None]).logits[0])
+        assert np.array_equal(got[rid], want), \
+            f"rid {rid} diverged after mid-chunk restart"
 
 
 # -- live mode: backpressure, cancellation, deadlines, shutdown timeout ------
