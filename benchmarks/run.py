@@ -39,9 +39,14 @@ def _roofline_rows():
 def main() -> None:
     quick = "--quick" in sys.argv
     full = "--full" in sys.argv
-    from benchmarks import bench_kernels
+    from benchmarks import bench_dist, bench_kernels
     if quick:
-        sections = [("kernels", lambda: bench_kernels.run())]
+        sections = [
+            ("kernels", lambda: bench_kernels.run()),
+            # sharded train rows run in a subprocess with 4 fake host
+            # devices (the device-count flag must precede jax init)
+            ("dist", lambda: bench_dist.rows_subprocess("train", True)),
+        ]
     else:
         from benchmarks import (fig6_aprc, fig7_balance, table1_throughput,
                                 table2_resources)
@@ -51,6 +56,7 @@ def main() -> None:
             ("table1", lambda: table1_throughput.run(quick=not full)),
             ("table2", lambda: table2_resources.run()),
             ("kernels", lambda: bench_kernels.run()),
+            ("dist", lambda: bench_dist.rows_subprocess("train", not full)),
             ("roofline", _roofline_rows),
         ]
     collected = []

@@ -628,6 +628,10 @@ def run(quick: bool = True, section: str = "all"):
     rows += chunked_rows(params, cfg, quick)
     rows += obs_rows(params, cfg, quick)
     rows += threaded_rows_subprocess(quick)
+    # sharded serving (repro.dist): lanes pinned to mesh devices, run in a
+    # bench_dist subprocess that sees 4 fake host devices
+    from benchmarks import bench_dist
+    rows += bench_dist.rows_subprocess("serve", quick)
     return rows
 
 

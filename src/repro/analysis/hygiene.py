@@ -13,7 +13,11 @@
     Every string in a module's ``__all__`` must resolve to a name the
     module actually binds at top level — a stale entry turns
     ``from m import *`` and re-export chains into ImportErrors at the
-    worst moment.
+    worst moment.  Modules with a PEP 562 module ``__getattr__`` (the
+    lazy-export idiom, e.g. ``repro.dist``) also get credit for the
+    string keys of their top-level literal dicts — the routing table
+    the ``__getattr__`` dispatches on — so lazy names stay checked and
+    a typo'd table entry is still a finding.
 
 ``frozen-spec``
     ``@dataclass(frozen=True)`` spec classes are immutable contracts
@@ -108,6 +112,23 @@ def _top_level_bindings(body: List[ast.stmt]) -> Optional[Set[str]]:
     return names
 
 
+def _literal_dict_keys(body: List[ast.stmt]) -> Set[str]:
+    """String-literal keys of top-level dict assignments (the routing
+    tables a PEP 562 module ``__getattr__`` dispatches on)."""
+    keys: Set[str] = set()
+    for stmt in body:
+        value = None
+        if isinstance(stmt, ast.Assign):
+            value = stmt.value
+        elif isinstance(stmt, ast.AnnAssign):
+            value = stmt.value
+        if isinstance(value, ast.Dict):
+            for k in value.keys:
+                if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                    keys.add(k.value)
+    return keys
+
+
 class AllExportsRule(Rule):
     name = "all-exports"
     description = "every __all__ entry must resolve to a real module attribute"
@@ -131,6 +152,11 @@ class AllExportsRule(Rule):
         bindings = _top_level_bindings(tree.body)
         if bindings is None:
             return  # wildcard import: unknowable, don't guess
+        if "__getattr__" in bindings:
+            # PEP 562 lazy exports: the module __getattr__ resolves names
+            # off a top-level routing dict — credit its literal string
+            # keys so the lazy names are still statically checked
+            bindings = bindings | _literal_dict_keys(tree.body)
         for elt in all_node.elts:
             if not (isinstance(elt, ast.Constant)
                     and isinstance(elt.value, str)):

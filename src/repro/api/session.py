@@ -64,6 +64,32 @@ class Session:
         self._train_step = None
         self._mom = None
         self._eval_fn = None
+        self._device_mesh = None                 # repro.dist.DeviceMesh
+        self._mesh_runner = None                 # repro.dist.MeshRunner
+
+    # -- mesh plumbing -------------------------------------------------------
+    def _device_mesh_for(self, mesh_axes):
+        """Resolve a mesh description to a live ``DeviceMesh`` (cached for
+        the session's own spec; an override ServeSpec with a different mesh
+        gets a fresh resolution)."""
+        if self._device_mesh is not None and self._device_mesh.axes == mesh_axes:
+            return self._device_mesh
+        from repro.dist import DeviceMesh
+        dm = DeviceMesh(mesh_axes)
+        if self._device_mesh is None:
+            self._device_mesh = dm
+        return dm
+
+    def _runner(self):
+        """The session's ``MeshRunner`` (None when the spec has no mesh):
+        the sharded executor infer/train_step/evaluate route through."""
+        if self.spec.mesh is None:
+            return None
+        if self._mesh_runner is None:
+            from repro.dist import MeshRunner
+            self._mesh_runner = MeshRunner(
+                self._device_mesh_for(self.spec.mesh), self.cfg, self.spec)
+        return self._mesh_runner
 
     # -- spec plumbing -------------------------------------------------------
     def _as_serve_spec(self, spec: Optional[ServeSpec] = None) -> ServeSpec:
@@ -104,9 +130,13 @@ class Session:
                        else DEFAULT_BUCKETS)
             if batch > max(buckets):
                 buckets = tuple(buckets) + (int(batch),)
-            ecfg = spec.to_engine_config(
+            overrides = dict(
                 num_lanes=1, threaded=False, buckets=tuple(buckets),
                 max_batch=bucket_for(batch, buckets))
+            if spec.mesh is not None:
+                overrides["lane_devices"] = \
+                    self._device_mesh_for(spec.mesh).lane_devices(1)
+            ecfg = spec.to_engine_config(**overrides)
             eng = ServingEngine(self.params, self.cfg, ecfg)
             self._engines[batch] = eng
         return eng
@@ -121,11 +151,18 @@ class Session:
         of the smallest fit: per-sample convolution makes each row's output
         independent of its batchmates, so two batches of different sizes
         run at one shared bucket produce bit-identical per-row logits —
-        the cross-bucket comparison knob the serving parity tests use."""
+        the cross-bucket comparison knob the serving parity tests use.
+
+        With a mesh in the spec, the batch axis is sharded over the data
+        axis by the session's ``MeshRunner`` — per-row logits stay
+        bit-identical to single-device execution (docs/dist.md)."""
         frames = np.asarray(frames, dtype=np.float32)
         n = frames.shape[0]
         if bucket is not None and bucket < n:
             raise ValueError(f"bucket={bucket} cannot hold a batch of {n}")
+        runner = self._runner()
+        if runner is not None:
+            return runner.infer(self.params, frames, pad_to=bucket)
         eng = self._single_shot_engine(n if bucket is None
                                        else max(n, int(bucket)))
         return eng.infer(frames, bucket=bucket)
@@ -158,6 +195,9 @@ class Session:
         callables, not configuration."""
         from repro.serving.engine import ServingEngine
         sspec = self._as_serve_spec(spec)
+        if sspec.mesh is not None and "lane_devices" not in hooks:
+            hooks["lane_devices"] = self._device_mesh_for(
+                sspec.mesh).lane_devices(sspec.num_lanes)
         return ServingEngine(self.params, self.cfg,
                              sspec.to_engine_config(**hooks))
 
@@ -173,21 +213,37 @@ class Session:
         if not sspec.threaded:
             sspec = dataclasses.replace(sspec, threaded=True)
         from repro.serving.engine import ServingEngine
-        eng = ServingEngine(self.params, self.cfg, sspec.to_engine_config())
+        overrides = {}
+        if sspec.mesh is not None:
+            overrides["lane_devices"] = self._device_mesh_for(
+                sspec.mesh).lane_devices(sspec.num_lanes)
+        eng = ServingEngine(self.params, self.cfg,
+                            sspec.to_engine_config(**overrides))
         return LiveServer(eng.serve_forever())
 
     # -- training ------------------------------------------------------------
     def train_step(self, x, y) -> float:
         """One surrogate-gradient SGD+momentum step on the session's params
         (spec-selected backend); returns the loss.  The step function jits
-        once and is reused; params/momentum live on the session."""
-        if self._train_step is None:
-            from repro.core.snn_train import make_train_step
-            self._train_step = jax.jit(
-                make_train_step(self.cfg, spec=self._as_train_spec()))
+        once and is reused; params/momentum live on the session.
+
+        With a mesh, the batch shards over the data axis and the step runs
+        through the session's ``MeshRunner`` — per-example gradient rows
+        combined canonically on the host, so the updated params are
+        bit-identical to single-device training on the same inputs."""
+        if self._mom is None:
             self._mom = jax.tree.map(jnp.zeros_like, self.params)
-        self.params, self._mom, loss = self._train_step(
-            self.params, self._mom, jnp.asarray(x), jnp.asarray(y))
+        runner = self._runner()
+        if runner is not None:
+            self.params, self._mom, loss = runner.train_step(
+                self.params, self._mom, x, y)
+        else:
+            if self._train_step is None:
+                from repro.core.snn_train import make_train_step
+                self._train_step = jax.jit(
+                    make_train_step(self.cfg, spec=self._as_train_spec()))
+            self.params, self._mom, loss = self._train_step(
+                self.params, self._mom, jnp.asarray(x), jnp.asarray(y))
         # compiled executables are params-independent (params are a traced
         # argument): swap the new params into the cached engines in place
         # instead of dropping them, so train/infer interleaves never
@@ -200,6 +256,11 @@ class Session:
         """Classification accuracy through the spec-selected backend (the
         kernel schedule, a serving-time weight permutation, is stripped —
         evaluation runs canonical weights like training does)."""
+        runner = self._runner()
+        if runner is not None:
+            logits = runner.infer(self.params,
+                                  np.asarray(x, dtype=np.float32)).logits
+            return float((np.argmax(logits, -1) == np.asarray(y)).mean())
         if self._eval_fn is None:
             from repro.core.snn_model import snn_apply
             spec = ExecutionSpec(**{**self.spec.execution_fields(),

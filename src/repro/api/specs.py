@@ -61,6 +61,14 @@ class ExecutionSpec:
     partition (the chunk-parity contract, tests/test_chunk_parity.py); the
     serving engine uses the chunk boundaries for continuous batching —
     admitting, evicting and SLO-degrading requests mid-flight.
+
+    ``mesh`` describes a device mesh as ordered (axis_name, size) pairs —
+    ``{"data": 4}`` and ``(("data", 4),)`` both canonicalize to the tuple
+    form so the frozen spec stays hashable.  ``None`` (the default) is
+    single-device execution, today's behavior.  Validation here is pure
+    (names/sizes only); devices are resolved when ``Session`` builds the
+    ``repro.dist.DeviceMesh`` — the batch axis shards over the ``data``
+    axis and serving lanes pin to mesh devices (docs/dist.md).
     """
 
     KIND = "execution"
@@ -71,6 +79,7 @@ class ExecutionSpec:
     surrogate_alpha: float = 10.0
     schedule_mode: Optional[str] = None
     chunk_timesteps: Optional[int] = None
+    mesh: Optional[Tuple[Tuple[str, int], ...]] = None
 
     def __post_init__(self):
         from repro.core.snn_model import SNN_BACKENDS
@@ -97,11 +106,26 @@ class ExecutionSpec:
         if self.surrogate_alpha <= 0:
             raise ValueError(
                 f"surrogate_alpha must be > 0, got {self.surrogate_alpha}")
+        # canonicalize the mesh description (dicts / lists-of-pairs from
+        # JSON -> tuple of (name, size)); pure validation, no device access
+        from repro.dist.mesh import normalize_mesh
+        object.__setattr__(self, "mesh", normalize_mesh(self.mesh))
+        if self.mesh is not None and self.resolved_schedule() is not None:
+            raise ValueError(
+                "mesh and schedule_mode are mutually exclusive for now: "
+                "mesh execution serves canonical weights (the CBWS kernel "
+                "schedule permutes weights per-device-lane, which sharded "
+                "params do not support yet) — drop one of the two")
 
     # -- derived -------------------------------------------------------------
     def resolved_schedule(self) -> Optional[str]:
         """The effective schedule mode: "none" normalizes to None."""
         return None if self.schedule_mode in (None, "none") else self.schedule_mode
+
+    def resolved_mesh(self) -> Optional[Dict[str, int]]:
+        """The mesh description as an ordered {axis: size} dict (None =
+        single-device)."""
+        return None if self.mesh is None else dict(self.mesh)
 
     def execution_fields(self) -> Dict[str, Any]:
         """The ExecutionSpec subset of this spec (sub-specs inherit it)."""
@@ -114,7 +138,10 @@ class ExecutionSpec:
         d = {"kind": type(self).KIND}
         for f in dataclasses.fields(self):
             v = getattr(self, f.name)
-            d[f.name] = list(v) if isinstance(v, tuple) else v
+            if isinstance(v, tuple):
+                # one level of nesting suffices: mesh is ((name, size), ...)
+                v = [list(e) if isinstance(e, tuple) else e for e in v]
+            d[f.name] = v
         return d
 
     @classmethod

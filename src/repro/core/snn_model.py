@@ -203,6 +203,14 @@ def snn_apply(params: Dict, frames: jax.Array, cfg: SNNConfig,
     object passed alongside (or go through ``Session``/the engine, which
     build it).
     """
+    if frames.shape[-1] != cfg.input_channels:
+        # the batched path's single-channel implicit-GEMM conv would
+        # silently slice extra channels away; the ref path would raise a
+        # conv shape error deep inside the scan — fail loudly here instead
+        raise ValueError(
+            f"frames carry {frames.shape[-1]} channels but the config "
+            f"expects input_channels={cfg.input_channels} "
+            f"(frames shape {tuple(frames.shape)})")
     if spec is not None:
         t_spec = getattr(spec, "timesteps", None)
         if t_spec is not None and t_spec != cfg.timesteps:

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from repro.config import SNNConfig
 from repro.core.snn_model import snn_apply
 
-__all__ = ["make_loss_fn", "make_train_step", "accuracy"]
+__all__ = ["make_loss_fn", "make_grad_rows_fn", "make_train_step", "accuracy"]
 
 _UNSET = object()                     # legacy-kwarg sentinel (shim detection)
 
@@ -105,6 +105,58 @@ def make_loss_fn(cfg: SNNConfig, *, backend=_UNSET, surrogate_alpha=_UNSET,
                  "core.snn_train.make_loss_fn", cfg)
     return _build_loss_fn(cfg, r["backend"], r["surrogate_alpha"],
                           r["surrogate_kind"])
+
+
+def make_grad_rows_fn(cfg: SNNConfig, *, backend=_UNSET,
+                      surrogate_alpha=_UNSET, surrogate_kind=_UNSET,
+                      spec: Optional[object] = None,
+                      sequential: bool = False) -> Callable:
+    """Per-example loss/gradient rows: ``(params, x, y) -> (loss_rows,
+    grad_rows)`` with a leading batch axis on every output leaf.
+
+    Each row is ``value_and_grad`` of that example's own cross-entropy,
+    so rows are mutually independent — sharding the batch axis over any
+    device count reproduces them (``repro.dist.MeshRunner`` builds its
+    sharded train step on this: rows computed on-device under the mesh,
+    then one canonical host-side fixed-order mean, making the full-batch
+    gradient device-count-invariant; ``mean(rows) == grad(mean loss)``
+    mathematically — the *reduction order* is what a pmean cannot pin
+    down).  The row mean over a full batch matches ``make_loss_fn``'s
+    batch loss gradient up to reduction order only.
+
+    ``sequential=False`` (default) vmaps over the batch — fastest, but the
+    compiled per-row arithmetic can depend on the (local) batch size at the
+    last-ulp level, so rows are only bit-stable when every device count
+    compiles the same batch extent (the SPMD ``in_shardings`` path, where
+    one global module is partitioned).  ``sequential=True`` runs a
+    ``lax.map`` of a batch-1 body instead: the compiled body is *identical*
+    for every device count, making rows bit-exact across shardings by
+    construction (MeshRunner's shard_map fallback for the ``ref`` backend
+    uses this).
+    """
+    r = _resolve(spec, dict(backend=backend, surrogate_alpha=surrogate_alpha,
+                            surrogate_kind=surrogate_kind),
+                 dict(backend="ref", surrogate_alpha=10.0,
+                      surrogate_kind="fast_sigmoid"),
+                 "core.snn_train.make_grad_rows_fn", cfg)
+
+    def per_example_loss(params: Dict, x1: jax.Array, y1: jax.Array
+                         ) -> jax.Array:
+        out = snn_apply(params, x1[None], cfg, backend=r["backend"],
+                        surrogate_alpha=r["surrogate_alpha"],
+                        surrogate_kind=r["surrogate_kind"])
+        logp = jax.nn.log_softmax(out.logits.astype(jnp.float32))
+        return -logp[0, y1]
+
+    if sequential:
+        def rows_fn(params: Dict, x: jax.Array, y: jax.Array):
+            return jax.lax.map(
+                lambda xy: jax.value_and_grad(per_example_loss)(
+                    params, xy[0], xy[1]), (x, y))
+
+        return rows_fn
+    return jax.vmap(jax.value_and_grad(per_example_loss),
+                    in_axes=(None, 0, 0))
 
 
 def make_train_step(cfg: SNNConfig, *, backend=_UNSET, lr=_UNSET,

@@ -1,0 +1,57 @@
+"""``repro.dist`` — multi-device execution beneath the ``repro.api`` facade.
+
+The layer that turns ``ExecutionSpec.mesh`` (a validated axis description,
+e.g. ``{"data": 4}``) into live multi-device execution:
+
+  * ``mesh`` — spec parsing/validation (pure) and ``DeviceMesh`` (resolves
+    local jax devices, builds the ``jax.sharding.Mesh``, hands out lane ->
+    device pinnings).  On CPU-only hosts, devices come from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (see
+    ``host_device_env`` and docs/dist.md).
+  * ``runner`` — ``MeshRunner``: batch-sharded ``Session.infer`` /
+    ``train_step`` with a bit-parity contract across device counts.
+  * ``placement`` — CBWS device placement (Skydiver's SPE assignment at
+    mesh-device granularity) for the serving engine's pinned lanes.
+
+``MeshRunner`` and the placement helpers import jax/numpy machinery, so
+they load lazily (PEP 562) — spec validation (``normalize_mesh``) stays
+importable without touching device state.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.dist.mesh import (DeviceMesh, HOST_DEVICE_FLAG, host_device_env,
+                             make_production_mesh, make_test_mesh, mesh_str,
+                             normalize_mesh, parse_mesh)
+
+__all__ = [
+    "DeviceMesh",
+    "HOST_DEVICE_FLAG",
+    "MeshRunner",
+    "assign_groups_to_devices",
+    "assignment_balance",
+    "device_placement",
+    "fifo_placement",
+    "host_device_env",
+    "make_production_mesh",
+    "make_test_mesh",
+    "mesh_str",
+    "normalize_mesh",
+    "parse_mesh",
+]
+
+_LAZY = {
+    "MeshRunner": "repro.dist.runner",
+    "assign_groups_to_devices": "repro.dist.placement",
+    "assignment_balance": "repro.dist.placement",
+    "device_placement": "repro.dist.placement",
+    "fifo_placement": "repro.dist.placement",
+}
+
+
+def __getattr__(name):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.dist' has no attribute {name!r}")
+    return getattr(importlib.import_module(mod), name)

@@ -1,0 +1,220 @@
+"""Device-mesh resolution for ``repro.dist`` — axis spec in, live mesh out.
+
+The facade's ``ExecutionSpec.mesh`` is a validated *description* of a mesh
+(axis names + sizes, canonically a tuple of ``(name, size)`` pairs so the
+frozen spec stays hashable and JSON-round-trippable).  This module is the
+one place that description touches real jax device state:
+
+  * ``parse_mesh`` / ``normalize_mesh`` — pure string/dict forms to the
+    canonical tuple, with loud validation (no device access, so specs can
+    be built and serialized on machines that will never run them);
+  * ``DeviceMesh`` — resolves the local devices and builds the
+    ``jax.sharding.Mesh`` the runner and engine shard over.  On a CPU-only
+    host, N "devices" exist only when
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` was set *before
+    the first jax import* — the error message names the trick, and
+    ``host_device_env`` builds the env dict subprocess tests/benches use.
+
+Skydiver maps hot channels onto SPEs; this layer maps the (T,B)-folded
+batch axis (and the serving engine's lanes) onto mesh devices — the same
+balance story one level up the hardware hierarchy (docs/dist.md).
+
+``make_production_mesh`` / ``make_test_mesh`` moved here from the orphaned
+``launch/mesh.py`` stub; everything stays function-shaped so importing this
+module never initializes a jax backend.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["HOST_DEVICE_FLAG", "host_device_env", "parse_mesh",
+           "normalize_mesh", "mesh_str", "DeviceMesh",
+           "make_production_mesh", "make_test_mesh"]
+
+#: XLA flag that fakes N host CPU devices (must be set before jax imports).
+HOST_DEVICE_FLAG = "--xla_force_host_platform_device_count"
+
+MeshAxes = Tuple[Tuple[str, int], ...]
+
+
+def host_device_env(num_devices: int, extra_flags: str = "",
+                    base: Optional[Mapping[str, str]] = None,
+                    ) -> Dict[str, str]:
+    """Environment for a subprocess that should see ``num_devices`` host
+    CPU devices: the current env (or ``base``) with ``XLA_FLAGS`` extended.
+    The flag only acts before the first jax backend init, which is why the
+    dist tests and sharded bench sections re-exec instead of setting it in
+    process."""
+    env = dict(os.environ if base is None else base)
+    flags = f"{HOST_DEVICE_FLAG}={int(num_devices)}"
+    if extra_flags:
+        flags += " " + extra_flags
+    prev = env.get("XLA_FLAGS", "")
+    env["XLA_FLAGS"] = (prev + " " + flags).strip()
+    return env
+
+
+def parse_mesh(text: str) -> MeshAxes:
+    """Parse a CLI mesh spec like ``"data=4"`` or ``"data=2,model=2"`` into
+    the canonical ``ExecutionSpec.mesh`` tuple.  A bare integer is sugar
+    for the data axis: ``"4"`` == ``"data=4"``."""
+    text = text.strip()
+    if not text:
+        raise ValueError("empty mesh spec (expected e.g. 'data=4')")
+    if text.isdigit():
+        return (("data", int(text)),)
+    axes = []
+    for part in text.split(","):
+        name, eq, size = part.partition("=")
+        if not eq:
+            raise ValueError(
+                f"bad mesh axis {part!r} in {text!r}: expected name=size "
+                f"(e.g. 'data=4' or 'data=2,model=2')")
+        try:
+            axes.append((name.strip(), int(size)))
+        except ValueError:
+            raise ValueError(
+                f"bad mesh axis size {size!r} in {text!r}: expected an "
+                f"integer (e.g. 'data=4')") from None
+    return normalize_mesh(axes)
+
+
+def normalize_mesh(mesh) -> Optional[MeshAxes]:
+    """Canonicalize any accepted mesh form — ``None``, a ``{name: size}``
+    mapping, or a sequence of ``(name, size)`` pairs (lists after a JSON
+    round-trip) — into a validated tuple of ``(name, size)``.
+
+    Validation is pure (no device access): axis names must be unique
+    non-empty strings, sizes integers >= 1.  Axis *order* is meaningful
+    (it is the Mesh's device-grid order) and preserved; dict forms keep
+    insertion order.
+    """
+    if mesh is None:
+        return None
+    if isinstance(mesh, Mapping):
+        items = list(mesh.items())
+    else:
+        items = list(mesh)
+    axes = []
+    for pair in items:
+        try:
+            name, size = pair
+        except (TypeError, ValueError):
+            raise ValueError(
+                f"bad mesh entry {pair!r}: expected a (name, size) pair "
+                f"(mesh forms: dict {{'data': 4}} or tuple of pairs)"
+            ) from None
+        if not isinstance(name, str) or not name:
+            raise ValueError(
+                f"mesh axis name must be a non-empty string, got {name!r}")
+        if isinstance(size, bool) or not isinstance(size, int):
+            raise ValueError(
+                f"mesh axis {name!r} size must be an integer, got {size!r}")
+        if size < 1:
+            raise ValueError(
+                f"mesh axis {name!r} size must be >= 1, got {size}")
+        axes.append((name, int(size)))
+    names = [n for n, _ in axes]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate mesh axis names in {names}")
+    if not axes:
+        raise ValueError(
+            "empty mesh (use None for the single-device default)")
+    return tuple(axes)
+
+
+def mesh_str(axes: MeshAxes) -> str:
+    """Inverse of ``parse_mesh``: ``(("data", 4),)`` -> ``"data=4"``."""
+    return ",".join(f"{n}={s}" for n, s in axes)
+
+
+class DeviceMesh:
+    """A validated mesh spec resolved against the local jax devices.
+
+    Stateless after construction (the mesh and device tuple are fixed), so
+    it is safe to share across threads — the serving engine hands its lane
+    workers devices from here without extra locking.
+
+        dm = DeviceMesh((("data", 4),))
+        dm.mesh            # jax.sharding.Mesh over the first 4 devices
+        dm.data_size       # 4
+        dm.lane_devices(6) # round-robin lane -> device pinning
+    """
+
+    def __init__(self, axes, devices: Optional[Sequence] = None):
+        import jax
+        self.axes: MeshAxes = normalize_mesh(axes)
+        if self.axes is None:
+            raise ValueError("DeviceMesh needs a mesh spec, got None")
+        shape = tuple(s for _, s in self.axes)
+        names = tuple(n for n, _ in self.axes)
+        n = int(np.prod(shape))
+        devs = list(jax.devices() if devices is None else devices)
+        if len(devs) < n:
+            raise ValueError(
+                f"mesh {mesh_str(self.axes)} needs {n} devices but only "
+                f"{len(devs)} are visible; on a CPU host set "
+                f"XLA_FLAGS={HOST_DEVICE_FLAG}={n} in the environment "
+                f"BEFORE the first jax import (subprocess re-exec — see "
+                f"repro.dist.host_device_env / docs/dist.md)")
+        from jax.sharding import Mesh
+        # first-N devices reshaped directly: deterministic placement that
+        # works for any axis count (jax.make_mesh would also reorder for
+        # interconnect topology, which host CPU devices don't have)
+        self.devices: Tuple = tuple(devs[:n])
+        self.mesh = Mesh(np.asarray(self.devices).reshape(shape), names)
+
+    @property
+    def num_devices(self) -> int:
+        return len(self.devices)
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.axes)
+
+    def axis_size(self, name: str) -> int:
+        for n, s in self.axes:
+            if n == name:
+                return s
+        raise KeyError(f"mesh has no axis {name!r} (axes: {self.axis_names})")
+
+    @property
+    def data_size(self) -> int:
+        """Size of the ``data`` axis — the (T,B)-folded batch dimension's
+        shard count (1 when the mesh has no data axis)."""
+        return self.axis_size("data") if "data" in self.axis_names else 1
+
+    def lane_devices(self, num_lanes: int) -> Tuple:
+        """Round-robin lane -> device pinning for the serving engine: lane
+        i executes on device ``i % num_devices``.  With num_lanes ==
+        num_devices this is a bijection (one XLA execution stream per
+        device); with more lanes, devices are oversubscribed evenly and
+        the engine's CBWS device placement balances *work*, not just lane
+        count, across them."""
+        if num_lanes < 1:
+            raise ValueError(f"num_lanes must be >= 1, got {num_lanes}")
+        return tuple(self.devices[i % self.num_devices]
+                     for i in range(num_lanes))
+
+    def __repr__(self) -> str:
+        return f"DeviceMesh({mesh_str(self.axes)}, devices={self.num_devices})"
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (one v5e pod).
+    Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the `pod` axis is
+    the DCN-connected data-parallel dimension.  (Moved from the retired
+    ``launch/mesh.py`` stub.)"""
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for unit tests (requires >= prod(shape) local devices)."""
+    import jax
+    return jax.make_mesh(shape, axes)

@@ -27,7 +27,7 @@ import jax
 from repro.config import SHAPES_BY_NAME, get_arch
 from repro.launch import cells as cells_mod
 from repro.launch.hlo_analysis import analyze_collectives
-from repro.launch.mesh import make_production_mesh
+from repro.dist.mesh import make_production_mesh
 from repro.obs.log import LOG_LEVELS, configure_logging, get_logger
 from repro.sharding.context import ShardingCtx, use_sharding
 

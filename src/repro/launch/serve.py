@@ -82,6 +82,9 @@ def serve_snn(args) -> None:
         overrides["default_deadline_s"] = args.deadline_ms / 1e3
     if args.trace_out:
         overrides["trace"] = True
+    if args.mesh:
+        from repro.dist.mesh import parse_mesh
+        overrides["mesh"] = parse_mesh(args.mesh)
     if overrides:
         spec = _dc.replace(spec, **overrides)
     sess = api.Session(args.snn, spec)
@@ -188,6 +191,12 @@ def main():
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="admission latency budget in ms; over-budget "
                          "requests are rejected/degraded (with --engine)")
+    ap.add_argument("--mesh", default="",
+                    help="repro.dist mesh string, e.g. 'data=2' or bare "
+                         "'2': shards infer/serve over the device mesh and "
+                         "pins engine lanes round-robin to mesh devices "
+                         "(CPU hosts need XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--slo-action", default="reject",
                     choices=("reject", "degrade"),
                     help="what to do with over-budget requests")

@@ -55,6 +55,11 @@ def train_snn(args) -> None:
         spec = api.TrainSpec(
             backend=args.backend, surrogate_kind=args.surrogate, lr=args.lr,
             timesteps=args.timesteps or None)
+    if args.mesh:
+        import dataclasses as _dc
+
+        from repro.dist.mesh import parse_mesh
+        spec = _dc.replace(spec, mesh=parse_mesh(args.mesh))
     sess = api.Session(args.snn, spec)
     t0 = time.perf_counter()
     for i in range(args.steps):
@@ -95,7 +100,10 @@ def main():
                     help="use the full (not reduced) architecture")
     ap.add_argument("--profile", default="tp_fsdp")
     ap.add_argument("--mesh", default="",
-                    help="e.g. 2x2 => (data=2, model=2); empty = single device")
+                    help="LM: 2x2 => (data=2, model=2).  SNN: a "
+                         "repro.dist mesh string, e.g. 'data=4' or bare "
+                         "'4' (data-sharded train step on the device "
+                         "mesh).  Empty = single device")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
     ap.add_argument("--checkpoint-every", type=int, default=50)
     ap.add_argument("--log-level", default="info", choices=LOG_LEVELS,

@@ -68,6 +68,11 @@ class MetricsSnapshot:
     chunks_dispatched: int = 0
     mid_evicted: int = 0
     mid_degraded: int = 0
+    # multi-device serving (repro.dist): lane i's pinned jax device as a
+    # string label, () when lanes share the default device.  Joined with
+    # lane_seconds_per_work/lane_served this gives per-*device* rates —
+    # what the straggler monitor effectively observes under pinning
+    lane_devices: Tuple[str, ...] = ()
 
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
@@ -80,3 +85,16 @@ class MetricsSnapshot:
     def outstanding(self) -> int:
         """Requests accepted but not yet resolved (queued + in flight)."""
         return self.queued + self.in_flight
+
+    def device_seconds_per_work(self) -> Dict[str, Optional[float]]:
+        """Per-device mean of the lanes' measured seconds-per-work (the
+        straggler monitor's EWMAs grouped by ``lane_devices``) — the
+        per-device rate view CBWS device placement balances against.
+        Empty when lanes are not device-pinned."""
+        rates: Dict[str, List[float]] = {}
+        for dev, spw in zip(self.lane_devices, self.lane_seconds_per_work):
+            rates.setdefault(dev, [])
+            if spw is not None:
+                rates[dev].append(float(spw))
+        return {dev: (sum(v) / len(v) if v else None)
+                for dev, v in rates.items()}

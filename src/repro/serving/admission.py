@@ -256,6 +256,7 @@ def slo_filter(window: Sequence[Request], *, now: float,
                degrade_timesteps: Optional[int] = None,
                backlog_work: float = 0.0,
                batch_quantum_s: float = 0.0,
+               chunk_timesteps: Optional[int] = None,
                ) -> Tuple[List[Request], List[Request], int]:
     """Admission-time SLO control over one FIFO window.
 
@@ -271,6 +272,16 @@ def slo_filter(window: Sequence[Request], *, now: float,
     ~n quanta instead of one and the admitter rejected work that would have
     met its budget (ServingEngine._delay_model fits both terms from
     measured micro-batches).
+
+    ``chunk_timesteps`` prices chunked dispatch explicitly: a request whose
+    T runs in ``ceil(T / chunk)`` chunk dispatches pays that many quanta,
+    not one — the delay-model samples the quantum is fitted from *are*
+    per-dispatch under chunking, so a single-quantum price would understate
+    a many-chunk request's fixed costs exactly ``ceil(T/chunk) - 1`` quanta
+    (the PR 9 follow-up this closes).  ``None`` keeps whole-T pricing: one
+    dispatch, one quantum.  The engine prices *mid-flight* degrade decisions
+    with the same per-remaining-chunk quanta
+    (``ServingEngine._mid_flight_degrade``).
 
     Each request's *limit* is the tighter of the engine-wide ``budget_s``
     (None = unbounded) and its own ``deadline_s`` — a per-request deadline
@@ -313,6 +324,14 @@ def slo_filter(window: Sequence[Request], *, now: float,
     cum_work = float(backlog_work)
     lanes = max(1, int(num_lanes))
     engine_budget = float("inf") if budget_s is None else float(budget_s)
+
+    def quanta(t_r: int) -> int:
+        # dispatches a t_r-timestep request needs: ceil(t_r / chunk) under
+        # chunked scheduling, one under whole-T
+        if chunk_timesteps is None:
+            return 1
+        return -(-int(t_r) // int(chunk_timesteps))
+
     for r in window:
         t_r = r.timesteps if r.timesteps is not None else full_timesteps
         eff = r.workload * (t_r / full_timesteps)
@@ -324,7 +343,7 @@ def slo_filter(window: Sequence[Request], *, now: float,
             cum_work += eff
             continue
         waited = max(0.0, now - r.arrival)
-        delay = (batch_quantum_s
+        delay = (quanta(t_r) * batch_quantum_s
                  + (cum_work + eff) * seconds_per_work / lanes)
         if waited + delay <= limit:
             admitted.append(r)

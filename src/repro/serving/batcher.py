@@ -86,15 +86,35 @@ class JitCache:
     Executing an already-compiled entry is thread-safe (XLA executables
     are), which is how the threaded engine's lanes share nothing but params;
     each lane owns its *own* JitCache so tracing/compilation never races.
+
+    ``device`` pins the cache to one jax device: params are committed there
+    with ``jax.device_put`` and jit then executes every entry on that device
+    (committed-argument placement).  This is how ``repro.dist`` maps each
+    serving lane onto its own mesh device (``EngineConfig.lane_devices``) —
+    the per-device executables a pinned fork compiles are device-specific,
+    so pinned forks share *no* executables with the unpinned parent.
     """
 
-    def __init__(self, params, cfg, schedule=None, chunk_timesteps=None):
-        self.params = params
+    def __init__(self, params, cfg, schedule=None, chunk_timesteps=None,
+                 device=None):
         self.cfg = cfg
         self.schedule = schedule
         self.chunk_timesteps = chunk_timesteps
+        self.device = device
+        self.params = params        # setter commits to the pinned device
         self._fns: Dict[Tuple[int, str, str, int], object] = {}
         self.compiles = 0
+
+    @property
+    def params(self):
+        return self._params
+
+    @params.setter
+    def params(self, params) -> None:
+        # preserve the device pin across engine.update_params swaps
+        if self.device is not None:
+            params = jax.device_put(params, self.device)
+        self._params = params
 
     def _key(self, bucket: int, backend: str, outputs: str,
              timesteps: Optional[int]) -> Tuple[int, str, str, int]:
@@ -170,16 +190,25 @@ class JitCache:
         return self.get(0, backend, outputs="finalize",
                         timesteps=t_total)(readout_v)
 
-    def fork(self) -> "JitCache":
+    def fork(self, device=None) -> "JitCache":
         """A lane-private cache sharing every executable compiled so far
         (concurrent *execution* of compiled XLA executables is thread-safe);
         a compilation after the fork stays private to the copy, so worker
         threads can never race a trace.  This is how the threaded engine
         gives each lane its own cache without num_lanes x duplicate
-        compiles of identical programs."""
+        compiles of identical programs.
+
+        ``device`` pins the fork to a mesh device (defaults to the parent's
+        pin).  A fork pinned to a *different* device than the parent starts
+        with an empty entry map: the parent's executables would silently run
+        on the parent's device (jit follows the committed params), defeating
+        the pin — the engine warms pinned forks explicitly instead
+        (``ServingEngine._warm_cache``)."""
+        device = device if device is not None else self.device
         c = JitCache(self.params, self.cfg, schedule=self.schedule,
-                     chunk_timesteps=self.chunk_timesteps)
-        c._fns = dict(self._fns)
+                     chunk_timesteps=self.chunk_timesteps, device=device)
+        if device is self.device:
+            c._fns = dict(self._fns)
         return c
 
 

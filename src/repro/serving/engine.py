@@ -131,6 +131,13 @@ class EngineConfig:
     chunk_timesteps: Optional[int] = None
     # real concurrency: lanes as worker threads on the wall clock
     threaded: bool = False
+    # multi-device serving (repro.dist): one jax device per lane — each
+    # lane's JitCache commits its params there, so its executables run on
+    # that device, and dispatch ranking becomes CBWS *device* placement
+    # (heaviest group -> idle lane on the least-loaded device).  Built by
+    # Session from ExecutionSpec.mesh via DeviceMesh.lane_devices();
+    # None = all lanes share the default device (historical behavior)
+    lane_devices: Optional[Tuple[object, ...]] = None
     # admission-time SLO control (None disables)
     latency_budget_s: Optional[float] = None
     slo_action: str = "reject"          # "reject" | "degrade"
@@ -223,6 +230,12 @@ class ServingEngine:
         if ecfg.trace_capacity < 1:
             raise ValueError(
                 f"trace_capacity must be >= 1, got {ecfg.trace_capacity}")
+        if ecfg.lane_devices is not None \
+                and len(ecfg.lane_devices) != ecfg.num_lanes:
+            raise ValueError(
+                f"lane_devices has {len(ecfg.lane_devices)} entries for "
+                f"{ecfg.num_lanes} lanes (one device per lane; use "
+                f"repro.dist.DeviceMesh.lane_devices(num_lanes))")
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
@@ -245,6 +258,10 @@ class ServingEngine:
             self._schedule = build_schedule(params, cfg, ecfg.schedule_mode)
         self.cache = JitCache(params, cfg, schedule=self._schedule,
                               chunk_timesteps=ecfg.chunk_timesteps)
+        # obs-facing lane -> device labels (snapshot / dispatch trace events)
+        self._lane_device_strs: Tuple[str, ...] = (
+            () if ecfg.lane_devices is None
+            else tuple(str(d) for d in ecfg.lane_devices))
         self.batcher = DynamicBatcher(ecfg.max_batch, ecfg.buckets)
         # seeded chaos: the plan's crash/transient hook chains *before* any
         # user fault_hook; slow-lane multipliers are queried at service time
@@ -808,9 +825,14 @@ class ServingEngine:
             t_goal = self._t_goal(r)
             target = max(r.t_served, self._degrade_t)
             if budgets and target < t_goal:
-                rem_work = r.workload * ((t_goal - r.t_served)
-                                         / self.cfg.timesteps)
-                predicted = ((now - r.arrival) + quantum
+                rem_t = t_goal - r.t_served
+                rem_work = r.workload * (rem_t / self.cfg.timesteps)
+                # remaining service is rem_t/chunk dispatches, each paying
+                # the per-batch quantum (the same per-chunk pricing the
+                # admission filter uses — see admission.slo_filter)
+                ct = ecfg.chunk_timesteps
+                quanta = -(-rem_t // ct) if ct is not None else 1
+                predicted = ((now - r.arrival) + quanta * quantum
                              + spw * (rem_work + backlog_work))
                 if predicted > min(budgets):
                     r.timesteps = target
@@ -885,7 +907,8 @@ class ServingEngine:
                     num_lanes=len(self.dispatcher.alive()),
                     full_timesteps=t_full, action=ecfg.slo_action,
                     degrade_timesteps=self._degrade_t,
-                    backlog_work=backlog_work)
+                    backlog_work=backlog_work,
+                    chunk_timesteps=ecfg.chunk_timesteps)
                 self.metrics.rejected += len(rejected)
                 self.metrics.degraded += degraded
                 self.rejected.extend(rejected)
@@ -1271,19 +1294,12 @@ class ServingEngine:
                      for tc in out.timestep_counts],
                     bucket, wall, counts["retries"], skip, None))
 
-    def _ensure_lane_caches(self) -> List[JitCache]:
-        """Warm every (bucket, T-variant) executable once on the shared
-        cache, then fork a private cache per lane (idempotent).  Forks share
-        the already-compiled executables — executing compiled XLA programs
-        concurrently is thread-safe, and compiling the identical program
-        num_lanes times would only multiply startup cost — while any
-        post-fork compilation stays lane-private, so worker threads can
-        never race a trace.  All compilation happens here, before the
-        WallClock epoch, so warmup never pollutes latency metrics;
-        benchmarks call this via ``warmup()`` to keep compile time out of
-        their own walls too."""
-        if self._lane_caches is not None:
-            return self._lane_caches
+    def _warm_cache(self, cache: JitCache) -> None:
+        """Compile + warm every executable a lane can dispatch — each
+        (bucket, T-variant) forward, or in chunked mode each (bucket, chunk
+        length) chunk executable plus the finalize targets — on ``cache``.
+        Runs on the scheduler thread only: warming a device-pinned fork
+        inside a worker would race jax tracing across lanes."""
         ecfg = self.ecfg
         cap = bucket_for(ecfg.max_batch, ecfg.buckets)
         warm_sizes = [b for b in ecfg.buckets if b <= cap]
@@ -1294,13 +1310,11 @@ class ServingEngine:
             t_variants.append(self._degrade_t)
         if ecfg.chunk_timesteps is not None:
             # chunked dispatch: warm every (bucket, chunk length) chunk
-            # executable and each length's pad profile; whole-T entries are
-            # not dispatched, so there is nothing else to warm
+            # executable; whole-T entries are not dispatched, so there is
+            # nothing else to warm
             for b in warm_sizes:
                 for c in self._chunk_variants():
-                    self._warm_chunk(b, c)
-            for c in self._chunk_variants():
-                self._chunk_pad_profile(c)
+                    self._warm_chunk(b, c, cache=cache)
             # finalize executables for the common completion targets (a
             # mid-flight truncation to an uncommon t_served still compiles
             # its finalize lazily — a trivial element-wise program)
@@ -1308,17 +1322,56 @@ class ServingEngine:
             for tv in [self.cfg.timesteps] + (
                     [self._degrade_t] if len(t_variants) > 1 else []):
                 jax.block_until_ready(
-                    self.cache.finalize(row, ecfg.backend, tv))
+                    cache.finalize(row, ecfg.backend, tv))
         else:
             for b in warm_sizes:
                 for tv in t_variants:
                     jax.block_until_ready(
-                        self.cache.run(pad_frames([zero], b), ecfg.backend,
-                                       timesteps=tv).logits)
+                        cache.run(pad_frames([zero], b), ecfg.backend,
+                                  timesteps=tv).logits)
+
+    def _ensure_lane_caches(self) -> List[JitCache]:
+        """Warm every (bucket, T-variant) executable once on the shared
+        cache, then fork a private cache per lane (idempotent).  Forks share
+        the already-compiled executables — executing compiled XLA programs
+        concurrently is thread-safe, and compiling the identical program
+        num_lanes times would only multiply startup cost — while any
+        post-fork compilation stays lane-private, so worker threads can
+        never race a trace.  All compilation happens here, before the
+        WallClock epoch, so warmup never pollutes latency metrics;
+        benchmarks call this via ``warmup()`` to keep compile time out of
+        their own walls too.
+
+        With ``lane_devices`` (repro.dist), each lane's fork is pinned to
+        its mesh device.  A pinned fork shares no executables with the
+        unpinned parent (its programs are device-specific), so every pinned
+        lane is warmed here too — sequentially, still before the clock
+        epoch; device count multiplies startup compile cost, not serve-time
+        latency."""
+        if self._lane_caches is not None:
+            return self._lane_caches
+        ecfg = self.ecfg
+        self._warm_cache(self.cache)
+        if ecfg.chunk_timesteps is not None:
+            for c in self._chunk_variants():
+                self._chunk_pad_profile(c)    # pad-mask profiles, pre-clock
+        else:
+            t_variants: List[Optional[int]] = [None]
+            if ecfg.latency_budget_s is not None \
+                    and ecfg.slo_action == "degrade":
+                t_variants.append(self._degrade_t)
             for tv in t_variants:
-                self._pad_profile(tv)     # pad-mask profiles, also pre-clock
-        self._lane_caches = [self.cache.fork()
-                             for _ in range(ecfg.num_lanes)]
+                self._pad_profile(tv)
+        caches: List[JitCache] = []
+        for i in range(ecfg.num_lanes):
+            dev = (ecfg.lane_devices[i]
+                   if ecfg.lane_devices is not None else None)
+            c = self.cache.fork(device=dev)
+            if dev is not None and dev is not self.cache.device:
+                self._warm_cache(c)
+                self._lane_compiles += c.compiles
+            caches.append(c)
+        self._lane_caches = caches
         return self._lane_caches
 
     def _run_threaded(self, live: bool = False) -> Dict[str, float]:
@@ -1382,9 +1435,18 @@ class ServingEngine:
             new worker thread.  The dead worker already exited (it posts its
             failure and returns), so its inbox is simply abandoned; the
             fork shares every executable the warm shared cache compiled, so
-            a restarted lane serves its first micro-batch without a trace."""
+            a restarted lane serves its first micro-batch without a trace.
+            A device-pinned lane (lane_devices) restarts on *its own* mesh
+            device: the fork starts empty there and is re-warmed on this
+            (scheduler) thread before taking traffic."""
             restart_gen[0] += 1
-            caches[lane] = self.cache.fork()
+            dev = (ecfg.lane_devices[lane]
+                   if ecfg.lane_devices is not None else None)
+            fork = self.cache.fork(device=dev)
+            if dev is not None and dev is not self.cache.device:
+                self._warm_cache(fork)
+                self._lane_compiles += fork.compiles
+            caches[lane] = fork
             inboxes[lane] = queue_mod.Queue()
             wkr = threading.Thread(
                 target=self._lane_worker,
@@ -1576,6 +1638,22 @@ class ServingEngine:
                         backlog_work=sum(inflight_work.values()))
                     if dispatchable:
                         order = self.dispatcher.rank(idle)
+                        if ecfg.lane_devices is not None:
+                            # CBWS device placement: heaviest group (they
+                            # arrive sorted) -> idle lane on the least
+                            # work-loaded device, ties by the fastest-first
+                            # ranking — the paper's SPE assignment at mesh
+                            # -device granularity (repro.dist.placement)
+                            from repro.dist.placement import \
+                                assign_groups_to_devices
+                            dev_load: Dict[object, float] = {}
+                            for l, wk in inflight_work.items():
+                                d = ecfg.lane_devices[l]
+                                dev_load[d] = dev_load.get(d, 0.0) + wk
+                            order = assign_groups_to_devices(
+                                [sum(self._eff_work(r) for r in g)
+                                 for g, _ in dispatchable],
+                                order, ecfg.lane_devices, dev_load)
                         rounds[window_idx] = {
                             "depth": depth, "predicted": predicted,
                             "pending": len(dispatchable), "executed": [],
@@ -1595,7 +1673,9 @@ class ServingEngine:
                                 trc.KIND_DISPATCH, t=t_disp, lane=lane,
                                 n=len(grp),
                                 rids=tuple(r.rid for r in grp),
-                                timesteps=tsteps)
+                                timesteps=tsteps,
+                                device=(self._lane_device_strs[lane]
+                                        if self._lane_device_strs else None))
                             if ecfg.chunk_timesteps is not None:
                                 for r in grp:
                                     self.trace.emit(
@@ -1861,6 +1941,7 @@ class ServingEngine:
             chunks_dispatched=int(m["chunks_dispatched"]),
             mid_evicted=int(m["mid_evicted"]),
             mid_degraded=int(m["mid_degraded"]),
+            lane_devices=self._lane_device_strs,
         )
 
     def summary(self) -> Dict[str, float]:

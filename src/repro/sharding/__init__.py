@@ -1,0 +1,52 @@
+"""Logical-axis sharding rules and partitioning helpers.
+
+``context`` maps logical axis names (``batch``, ``channels``, ...) onto
+mesh axes; ``partitioning`` lowers those rules onto param/optimizer/batch
+pytrees; ``cbws_sharding`` carries the CBWS load-balanced placement
+helpers.  The live consumer is ``repro.dist.MeshRunner`` (see
+docs/dist.md), which drives the ``batch`` -> ``data`` rule for sharded
+inference and training.
+
+``partitioning`` imports ``repro.models.lm`` (whose layers import
+``sharding.context`` back), so everything outside ``context`` loads
+lazily (PEP 562) to keep the package import acyclic.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.sharding.context import (ShardingCtx, current_ctx, make_rules,
+                                    shard_logical, use_sharding)
+
+__all__ = [
+    "ShardingCtx",
+    "batch_shardings",
+    "current_ctx",
+    "expert_placement",
+    "make_rules",
+    "param_shardings",
+    "placement_balance",
+    "replicated",
+    "shard_logical",
+    "snn_channel_permutation",
+    "train_state_shardings",
+    "use_sharding",
+]
+
+_LAZY = {
+    "batch_shardings": "repro.sharding.partitioning",
+    "expert_placement": "repro.sharding.cbws_sharding",
+    "param_shardings": "repro.sharding.partitioning",
+    "placement_balance": "repro.sharding.cbws_sharding",
+    "replicated": "repro.sharding.partitioning",
+    "snn_channel_permutation": "repro.sharding.cbws_sharding",
+    "train_state_shardings": "repro.sharding.partitioning",
+}
+
+
+def __getattr__(name):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(
+            f"module 'repro.sharding' has no attribute {name!r}")
+    return getattr(importlib.import_module(mod), name)

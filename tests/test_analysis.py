@@ -413,6 +413,30 @@ except ImportError:
     assert _check(tmp_path, "mod.py", src) == []
 
 
+def test_all_exports_credits_pep562_lazy_table(tmp_path):
+    # PEP 562: names routed through a module __getattr__'s literal dict
+    # count as bound; a name in neither the bindings nor the table is
+    # still a finding
+    src = """\
+import importlib
+
+__all__ = ["eager", "Lazy"]
+
+_LAZY = {"Lazy": "pkg.sub"}
+
+def eager():
+    return 1
+
+def __getattr__(name):
+    return getattr(importlib.import_module(_LAZY[name]), name)
+"""
+    assert _check(tmp_path, "mod.py", src) == []
+    fs = _check(tmp_path, "mod.py",
+                src.replace('"eager", "Lazy"', '"eager", "Lazy", "ghost"'))
+    assert _rules_hit(fs) == {"all-exports"}
+    assert "ghost" in fs[0].message
+
+
 def test_frozen_spec_rejects_mutation(tmp_path):
     src = """\
 from dataclasses import dataclass

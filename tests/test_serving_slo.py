@@ -177,6 +177,63 @@ def test_slo_filter_batch_quantum_admits_more_under_tight_budget():
     assert len(rej_folded) + len(folded) == 10
 
 
+def test_slo_filter_chunk_quanta_prices_per_dispatch():
+    """Chunked scheduling dispatches a T-timestep request ceil(T/chunk)
+    times, so it pays that many batch quanta — a single-quantum price
+    understates its fixed costs.  Deterministic: whole-T pricing admits the
+    window, per-chunk pricing (4 quanta at T=8, chunk=2) rejects it."""
+    def reqs():
+        return [Request(rid=i, frame=np.zeros((2, 2, 1)), arrival=0.0,
+                        workload=1.0, events=1.0) for i in range(6)]
+
+    kw = dict(now=0.0, budget_s=0.2, seconds_per_work=0.01,
+              batch_quantum_s=0.1, num_lanes=1, full_timesteps=8,
+              action="reject")
+    # whole-T: delay_i = 0.1 + 0.01 * i <= 0.2 for all six
+    whole, rej_whole, _ = slo_filter(reqs(), **kw)
+    assert [r.rid for r in whole] == list(range(6)) and not rej_whole
+    # chunk=2 -> ceil(8/2) = 4 quanta: delay_i = 0.4 + 0.01 * i > 0.2
+    chunked, rej_chunked, _ = slo_filter(reqs(), chunk_timesteps=2, **kw)
+    assert not chunked
+    assert [r.rid for r in rej_chunked] == list(range(6))
+
+
+def test_slo_filter_chunk_at_or_above_t_is_whole_t_pricing():
+    """chunk >= T is one dispatch, one quantum — identical decisions to
+    chunk_timesteps=None."""
+    def reqs():
+        return [Request(rid=i, frame=np.zeros((2, 2, 1)), arrival=0.0,
+                        workload=1.0, events=1.0) for i in range(8)]
+
+    kw = dict(now=0.0, budget_s=0.14, seconds_per_work=0.01,
+              batch_quantum_s=0.1, num_lanes=1, full_timesteps=8,
+              action="reject")
+    base, rej_base, _ = slo_filter(reqs(), **kw)
+    for ct in (8, 16):
+        got, rej_got, _ = slo_filter(reqs(), chunk_timesteps=ct, **kw)
+        assert [r.rid for r in got] == [r.rid for r in base]
+        assert [r.rid for r in rej_got] == [r.rid for r in rej_base]
+
+
+def test_slo_filter_chunk_quanta_drive_degrade():
+    """Under degrade action the per-chunk price pushes requests over budget
+    that whole-T pricing kept at full quality — they are served degraded
+    (fewer chunks), never dropped."""
+    def reqs():
+        return [Request(rid=i, frame=np.zeros((2, 2, 1)), arrival=0.0,
+                        workload=1.0, events=1.0) for i in range(6)]
+
+    kw = dict(now=0.0, budget_s=0.2, seconds_per_work=0.01,
+              batch_quantum_s=0.1, num_lanes=1, full_timesteps=8,
+              action="degrade", degrade_timesteps=2)
+    whole, _, deg_whole = slo_filter(reqs(), **kw)
+    assert deg_whole == 0 and all(r.timesteps is None for r in whole)
+    chunked, rej, deg_chunked = slo_filter(reqs(), chunk_timesteps=2, **kw)
+    assert not rej and len(chunked) == 6
+    assert deg_chunked == 6
+    assert all(r.timesteps == 2 for r in chunked)
+
+
 def test_engine_batch_quantum_prior_admits_more(tiny):
     """EngineConfig.slo_batch_quantum_s flows into the admitter: with the
     same total first-batch cost, splitting it into quantum + marginal rate

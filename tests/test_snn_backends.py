@@ -132,6 +132,19 @@ def test_unknown_backend_raises():
         snn_apply(params, x, cfg, backend="tpu")
 
 
+def test_channel_mismatch_raises_eagerly():
+    # 2-channel frames against a 1-channel config: the batched path's
+    # implicit-GEMM conv would silently slice the extra channel away and
+    # the ref scan would raise deep inside jax — snn_apply must reject
+    # the frames up front, for every backend
+    cfg = _tiny_mnist_cfg()
+    params = init_snn(jax.random.PRNGKey(0), cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(2), (2, 8, 8, 2))
+    for backend in ("ref", "batched"):
+        with pytest.raises(ValueError, match="input_channels"):
+            snn_apply(params, x, cfg, backend=backend)
+
+
 def test_spiking_conv_step_accepts_batched():
     """Per-timestep the time-batched backend IS the ref math — the step
     entry point must accept the name snn_apply advertises."""
